@@ -1,0 +1,163 @@
+"""Shared experiment setup for the paper-figure benchmarks.
+
+Two tasks, exactly as in paper Sec. V:
+ * Case I — 10-class classification with the 3-FC-layer ReLU classifier
+   (synthetic MNIST-like data; DESIGN.md §7), eta_t = 1/t^0.75, batch 50.
+ * Case II — ridge regression (smooth + strongly convex), constant eta = 0.01.
+
+K = 20 devices, b_k^max = sqrt(5), theta_th = pi/3.  The channel keeps the
+paper's Rayleigh/noise *model*; the mean is scaled so the post-aggregation
+SNR is in the trainable regime the paper's figures imply (EXPERIMENTS.md
+§Faithfulness discusses the paper's literal 1e-5 / 1e-7 constants).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.data.datasets import (device_batches, ridge_data, split_dirichlet,
+                                 split_iid, synthetic_mnist)
+from repro.fed.runtime import FLConfig, run, setup
+from repro.models.simple import (init_mlp_classifier, init_ridge,
+                                 mlp_classifier_accuracy, mlp_classifier_loss,
+                                 ridge_constants, ridge_loss, ridge_optimum)
+
+K = 20
+CHANNEL_MEAN = 1e-3
+SEED = 0
+
+
+def channel(num_devices: int = K) -> ChannelConfig:
+    return ChannelConfig(num_devices=num_devices, channel_mean=CHANNEL_MEAN)
+
+
+# ---------------------------------------------------------------------------
+# Case I: synthetic-MNIST MLP classification
+
+
+class CaseIExperiment:
+    def __init__(self, num_train: int = 4000, num_test: int = 1000,
+                 hidden: int = 64, non_iid_alpha: float = 1.0):
+        key = jax.random.PRNGKey(SEED)
+        x, y = synthetic_mnist(key, num_train + num_test)
+        self.x_tr, self.y_tr = x[:num_train], y[:num_train]
+        self.x_te, self.y_te = x[num_train:], y[num_train:]
+        self.split = split_dirichlet(jax.random.fold_in(key, 1),
+                                     np.asarray(self.y_tr), K, non_iid_alpha)
+        self.hidden = hidden
+        self.params0 = init_mlp_classifier(jax.random.fold_in(key, 2),
+                                           hidden=hidden)
+        self.dim = sum(int(np.prod(np.asarray(l).shape))
+                       for l in jax.tree_util.tree_leaves(self.params0))
+        self._xnp, self._ynp = np.asarray(self.x_tr), np.asarray(self.y_tr)
+
+    def grad_fn(self, params, batch):
+        xb, yb = batch
+        return jax.grad(lambda p: mlp_classifier_loss(p, xb, yb))(params)
+
+    def provider(self, t, batch_size: int = 50):
+        idx = device_batches(jax.random.PRNGKey(3), self.split, batch_size, t)
+        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
+
+    def eval_fn(self, params) -> Dict[str, float]:
+        return {
+            "test_acc": float(mlp_classifier_accuracy(params, self.x_te, self.y_te)),
+            "train_loss": float(mlp_classifier_loss(params, self.x_tr, self.y_tr)),
+        }
+
+    def calibrate_G(self, rounds: int = 30) -> float:
+        """Empirical max-norm bound G (the conservative constant Benchmark I
+        provisions for): max per-device gradient norm over a noiseless
+        mean-aggregation calibration run, x1.2 headroom."""
+        if not hasattr(self, "_G"):
+            cfg = FLConfig(num_devices=K, scheme="mean", case="I", p=0.75,
+                           channel=channel(), seed=SEED, grad_bound=1.0,
+                           smoothness_L=5.0, expected_loss_drop=2.0)
+            state = setup(cfg, self.params0, self.dim)
+            _, hist = run(cfg, state, self.grad_fn, self.provider, rounds)
+            self._G = 1.2 * max(hist["grad_norm_max"])
+        return self._G
+
+    def config(self, scheme: str = "normalized", amplification: str = "optimal",
+               **kw) -> FLConfig:
+        base = dict(num_devices=K, scheme=scheme, case="I", p=0.75,
+                    channel=channel(), amplification=amplification,
+                    grad_bound=self.calibrate_G(), smoothness_L=5.0,
+                    expected_loss_drop=2.0, seed=SEED)
+        base.update(kw)
+        return FLConfig(**base)
+
+    def run(self, cfg: FLConfig, rounds: int, eval_every: int = 10):
+        state = setup(cfg, self.params0, self.dim)
+        return run(cfg, state, self.grad_fn, self.provider, rounds,
+                   self.eval_fn, eval_every)
+
+
+# ---------------------------------------------------------------------------
+# Case II: ridge regression
+
+
+class CaseIIExperiment:
+    def __init__(self, dim: int = 30, num_examples: int = 2000,
+                 lam: float = 0.1):
+        key = jax.random.PRNGKey(SEED + 10)
+        self.x, self.y, _ = ridge_data(key, num_examples, dim)
+        self.lam = lam
+        self.L, self.M, _ = ridge_constants(self.x, lam)
+        w_star = ridge_optimum(self.x, self.y, lam)
+        self.f_star = float(ridge_loss({"w": w_star}, self.x, self.y, lam))
+        self.split = split_iid(jax.random.fold_in(key, 1), num_examples, K)
+        self.params0 = init_ridge(jax.random.fold_in(key, 2), dim)
+        self.dim = dim
+        self._xnp, self._ynp = np.asarray(self.x), np.asarray(self.y)
+
+    def grad_fn(self, params, batch):
+        xb, yb = batch
+        return jax.grad(lambda p: ridge_loss(p, xb, yb, self.lam))(params)
+
+    def provider(self, t, batch_size: int = 50):
+        idx = device_batches(jax.random.PRNGKey(3), self.split, batch_size, t)
+        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
+
+    def eval_fn(self, params) -> Dict[str, float]:
+        return {"loss": float(ridge_loss(params, self.x, self.y, self.lam)),
+                "gap": float(ridge_loss(params, self.x, self.y, self.lam))
+                - self.f_star}
+
+    def calibrate_G(self, rounds: int = 30) -> float:
+        if not hasattr(self, "_G"):
+            cfg = FLConfig(num_devices=K, scheme="mean", case="II", eta=0.01,
+                           channel=channel(), seed=SEED, grad_bound=1.0,
+                           smoothness_L=self.L, strong_convexity_M=self.M,
+                           s_target=0.995)
+            state = setup(cfg, self.params0, self.dim)
+            _, hist = run(cfg, state, self.grad_fn, self.provider, rounds)
+            self._G = 1.2 * max(hist["grad_norm_max"])
+        return self._G
+
+    def config(self, scheme: str = "normalized", amplification: str = "optimal",
+               s_target: float = 0.995, **kw) -> FLConfig:
+        base = dict(num_devices=K, scheme=scheme, case="II", eta=0.01,
+                    channel=channel(), amplification=amplification,
+                    grad_bound=self.calibrate_G(), smoothness_L=self.L,
+                    strong_convexity_M=self.M, s_target=s_target, seed=SEED)
+        base.update(kw)
+        return FLConfig(**base)
+
+    def run(self, cfg: FLConfig, rounds: int, eval_every: int = 20):
+        state = setup(cfg, self.params0, self.dim)
+        return run(cfg, state, self.grad_fn, self.provider, rounds,
+                   self.eval_fn, eval_every)
+
+
+def timed_rounds(exp, cfg, rounds: int, eval_every: int = 50):
+    """Run and report wall time per round (us_per_call for the CSV)."""
+    t0 = time.perf_counter()
+    state, hist = exp.run(cfg, rounds, eval_every)
+    dt = time.perf_counter() - t0
+    return state, hist, dt / rounds * 1e6

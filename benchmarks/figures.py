@@ -1,0 +1,131 @@
+"""One benchmark per paper figure (Sec. V).  Each returns CSV rows
+``name,us_per_call,derived`` where ``derived`` is the figure's headline
+quantity; the full trajectories go to results/bench_<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import CaseIExperiment, CaseIIExperiment, timed_rounds
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def _dump(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"bench_{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def fig1a_opt_benefit(rounds: int = 300) -> List[Tuple[str, float, str]]:
+    """Fig. 1(a): Case I test accuracy — optimized (a, b) vs b_k = b_k^max."""
+    exp = CaseIExperiment()
+    rows, curves = [], {}
+    for amp in ("optimal", "bmax"):
+        cfg = exp.config(scheme="normalized", amplification=amp)
+        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=max(rounds // 12, 5))
+        acc = hist["test_acc"][-1]
+        early = hist["test_acc"][1] if len(hist["test_acc"]) > 1 else acc
+        curves[amp] = {"round": hist["eval_round"], "acc": hist["test_acc"]}
+        rows.append((f"fig1a/{amp}", us,
+                     f"early_acc={early:.4f};final_acc={acc:.4f}"))
+    _dump("fig1a", curves)
+    return rows
+
+
+def fig1b_benchmarks(rounds: int = 300) -> List[Tuple[str, float, str]]:
+    """Fig. 1(b): Case I — proposed vs Benchmark I [7] / II [13] (+ one-bit
+    [12] as the extra ablation the intro argues against)."""
+    exp = CaseIExperiment()
+    rows, curves = [], {}
+    for scheme in ("normalized", "benchmark1", "benchmark2", "onebit"):
+        cfg = exp.config(scheme=scheme)
+        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=25)
+        acc = hist["test_acc"][-1]
+        curves[scheme] = {"round": hist["eval_round"], "acc": hist["test_acc"]}
+        rows.append((f"fig1b/{scheme}", us, f"final_acc={acc:.4f}"))
+    _dump("fig1b", curves)
+    return rows
+
+
+def fig2a_opt_benefit_ridge(rounds: int = 400) -> List[Tuple[str, float, str]]:
+    """Fig. 2(a): Case II loss — optimized (a, b) vs b_k = b_k^max."""
+    exp = CaseIIExperiment()
+    rows, curves = [], {}
+    for amp in ("optimal", "bmax"):
+        cfg = exp.config(amplification=amp)
+        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=40)
+        curves[amp] = {"round": hist["eval_round"], "loss": hist["loss"]}
+        rows.append((f"fig2a/{amp}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    _dump("fig2a", curves)
+    return rows
+
+
+def fig2b_benchmarks_ridge(rounds: int = 400) -> List[Tuple[str, float, str]]:
+    """Fig. 2(b): Case II — proposed vs Benchmark I / II."""
+    exp = CaseIIExperiment()
+    rows, curves = [], {}
+    for scheme in ("normalized", "benchmark1", "benchmark2"):
+        cfg = exp.config(scheme=scheme)
+        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=40)
+        curves[scheme] = {"round": hist["eval_round"], "loss": hist["loss"]}
+        rows.append((f"fig2b/{scheme}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    _dump("fig2b", curves)
+    return rows
+
+
+def fig3a_case1_vs_case2(rounds: int = 400) -> List[Tuple[str, float, str]]:
+    """Fig. 3(a): on the strongly-convex task, Case-II parameters converge
+    faster than Case-I parameters (the benefit of exploiting convexity)."""
+    exp = CaseIIExperiment()
+    rows, curves = [], {}
+    for case in ("I", "II"):
+        kw = dict(case=case)
+        if case == "I":
+            kw.update(p=0.75, expected_loss_drop=20.0, s_target=None)
+        else:
+            kw.update(s_target=0.98)   # paper tunes Case II for speed (Fig. 3a)
+        cfg = exp.config(**kw)
+        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=40)
+        curves[case] = {"round": hist["eval_round"], "loss": hist["loss"]}
+        # rounds to reach 1.1x the better final gap
+        rows.append((f"fig3a/case{case}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    _dump("fig3a", curves)
+    return rows
+
+
+def fig3b_tradeoff(rounds: int = 600) -> List[Tuple[str, float, str]]:
+    """Fig. 3(b): the q_max <-> epsilon tradeoff — larger s gives a lower
+    floor but slower approach."""
+    exp = CaseIIExperiment()
+    rows, curves = [], {}
+    for s in (0.9779, 0.9890, 0.9945):
+        cfg = exp.config(s_target=s)
+        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=60)
+        curves[str(s)] = {"round": hist["eval_round"], "loss": hist["loss"]}
+        rows.append((f"fig3b/s={s}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    _dump("fig3b", curves)
+    return rows
+
+
+def grad_norm_fluctuation(rounds: int = 200) -> List[Tuple[str, float, str]]:
+    """Sec. I motivating claim: the local gradient norm fluctuates over
+    iterations (so provisioning b_k for the max norm G wastes headroom).
+    Reported on both experiment tasks; ridge (whose norms collapse as the
+    iterate approaches w*) shows the effect most starkly."""
+    rows, dump = [], {}
+    for name, exp in (("mnist", CaseIExperiment()), ("ridge", CaseIIExperiment())):
+        cfg = exp.config(scheme="normalized")
+        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=rounds)
+        norms = np.asarray(hist["grad_norm_mean"])
+        ratio = float(norms.max() / max(norms.min(), 1e-9))
+        dump[name] = {"round": hist["round"], "mean": hist["grad_norm_mean"],
+                      "min": hist["grad_norm_min"], "max": hist["grad_norm_max"]}
+        rows.append((f"grad_norm_fluctuation/{name}", us,
+                     f"max_over_min={ratio:.2f};final_mean={norms[-1]:.4f}"))
+    _dump("grad_norm_fluctuation", dump)
+    return rows

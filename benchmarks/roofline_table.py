@@ -1,0 +1,57 @@
+"""Roofline benchmark: renders the dry-run analysis JSONs into the
+EXPERIMENTS.md table and CSV rows (one per arch x shape)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def _load(name):
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_rows() -> List[Tuple[str, float, str]]:
+    """CSV rows from the analysis sweep (us_per_call = dominant roofline term
+    in us — the modeled per-step lower bound on v5e)."""
+    recs = _load("analysis_singlepod.json") or _load("dryrun_singlepod.json")
+    rows = []
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            rows.append((name, 0.0, f"status={r['status']}"))
+            continue
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append((name, dom_s * 1e6,
+                     f"bottleneck={rf['bottleneck']},useful={rf['useful_flops_ratio']:.2f}"))
+    return rows
+
+
+def markdown_table(recs) -> str:
+    lines = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+             "bottleneck | 6ND/HLO | note |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.2f} | "
+                f"{rf['memory_s']*1e3:.2f} | {rf['collective_s']*1e3:.2f} | "
+                f"{rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} | |")
+        else:
+            reason = r.get("skip_reason") or r.get("error", "")[:40]
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | "
+                         f"{r['status']}: {reason} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for row in roofline_rows():
+        print(",".join(str(c) for c in row))

@@ -1,0 +1,54 @@
+"""Benchmark harness entry point (deliverable (d)): one function per paper
+table/figure.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run             # full set
+    PYTHONPATH=src python -m benchmarks.run --quick     # CI-speed subset
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced round counts (smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import figures
+    from benchmarks.roofline_table import roofline_rows
+
+    r = (lambda full, quick: quick if args.quick else full)
+    benches = [
+        ("fig1a", lambda: figures.fig1a_opt_benefit(r(300, 60))),
+        ("fig1b", lambda: figures.fig1b_benchmarks(r(300, 60))),
+        ("fig2a", lambda: figures.fig2a_opt_benefit_ridge(r(400, 80))),
+        ("fig2b", lambda: figures.fig2b_benchmarks_ridge(r(400, 80))),
+        ("fig3a", lambda: figures.fig3a_case1_vs_case2(r(400, 80))),
+        ("fig3b", lambda: figures.fig3b_tradeoff(r(600, 120))),
+        ("grad_norm", lambda: figures.grad_norm_fluctuation(r(200, 50))),
+        ("roofline", roofline_rows),
+    ]
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = [b for b in benches if b[0] in keep]
+
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness alive; report the failure
+            print(f"{name},0,ERROR={e!r}", flush=True)
+            continue
+        for row in rows:
+            print(",".join(str(c) for c in row), flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Roofline-term extraction from compiled dry-run artifacts (deliverable (g)).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` supplies FLOPs / bytes-accessed of the SPMD-
+partitioned (per-chip) module, so dividing by per-chip peaks is equivalent to
+the global form above.  collective bytes are NOT in cost_analysis: we parse
+the post-optimization HLO and sum the *output* sizes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute (per-chip
+shapes; output-bytes is the standard per-op traffic proxy — an all-reduce of
+``n`` bytes moves ~2n across the ring, an all-gather's output *is* the moved
+buffer; we report raw output bytes and keep the convention fixed across every
+experiment so deltas are meaningful).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+# v5e per-chip constants
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one `dtype[d0,d1,...]` shape token
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# an HLO def line whose op is a collective:  %name = <output-type> <op>(
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per chip) summed over the module.
+    ``-done`` ops are skipped so async start/done pairs count once."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: int
+    coll_breakdown: Dict[str, int]
+    model_flops: float                 # 6*N*D (train) or 2*N_active*tokens (inference)
+    memory_analysis: str = ""
+    # derived
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flops_ratio: float = 0.0
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.flops_per_chip / PEAK_FLOPS
+        self.memory_s = self.bytes_per_chip / HBM_BW
+        self.collective_s = self.coll_bytes_per_chip / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo_flops = self.flops_per_chip * self.chips
+        self.useful_flops_ratio = (self.model_flops / total_hlo_flops
+                                   if total_hlo_flops else 0.0)
+        return self
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(name: str, compiled, chips: int, model_flops: float,
+            hlo_text: Optional[str] = None) -> RooflineReport:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    try:
+        mem = str(compiled.memory_analysis())
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem = f"<unavailable: {e}>"
+    rep = RooflineReport(
+        name=name, chips=chips, flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=sum(coll.values()), coll_breakdown=coll,
+        model_flops=model_flops, memory_analysis=mem)
+    return rep.finalize()
+
+
+def model_flops_for(cfg, shape, n_params_active: int) -> float:
+    """6*N*D for training (fwd+bwd), 2*N*D for inference; D = tokens."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_params_active * shape.global_batch
+
+
+def save_report(path: str, reports) -> None:
+    with open(path, "w") as f:
+        json.dump([r.to_dict() if isinstance(r, RooflineReport) else r
+                   for r in reports], f, indent=2)

@@ -1,0 +1,91 @@
+"""Checkpointing substrate: msgpack-serialized pytrees with metadata.
+
+Arrays are stored as (dtype, shape, raw bytes); the tree structure is
+reconstructed from a path-keyed flat dict, so any nested dict/tuple/list of
+jnp arrays round-trips.  Atomic write (tmp + rename), latest-k retention.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
+
+
+def _encode_array(a) -> Dict:
+    a = np.asarray(a)
+    # non-numpy-native dtypes (bfloat16 & friends) are stored as float32 with
+    # the original dtype name recorded for restore
+    orig = None
+    if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+        orig = str(jnp.asarray(a).dtype)
+        a = np.asarray(jnp.asarray(a).astype(jnp.float32))
+    return {"dtype": a.dtype.str, "shape": list(a.shape), "data": a.tobytes(),
+            "orig_dtype": orig}
+
+
+def _decode_array(d: Dict) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"]).copy()
+
+
+def save(path: str, tree: PyTree, metadata: Optional[Dict] = None) -> None:
+    leaves, _ = _flatten_with_paths(tree)
+    payload = {
+        "meta": metadata or {},
+        "leaves": {k: _encode_array(v) for k, v in leaves.items()},
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = _flatten_with_paths(like)
+    stored = payload["leaves"]
+    out = {}
+    for k, ref in leaves_like.items():
+        if k not in stored:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        arr = _decode_array(stored[k])
+        ref_dtype = jnp.asarray(ref).dtype if hasattr(ref, "dtype") else None
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch at {k}: {arr.shape} vs {np.shape(ref)}")
+        out[k] = jnp.asarray(arr).astype(ref_dtype)
+    flat = [out[jax.tree_util.keystr(p)] for p, _ in
+            jax.tree_util.tree_flatten_with_path(like)[0]]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), flat), \
+        payload["meta"]
+
+
+def save_round(ckpt_dir: str, round_idx: int, tree: PyTree,
+               metadata: Optional[Dict] = None, keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"round_{round_idx:08d}.msgpack")
+    meta = dict(metadata or {})
+    meta["round"] = round_idx
+    save(path, tree, meta)
+    existing = sorted(p for p in os.listdir(ckpt_dir) if p.startswith("round_"))
+    for old in existing[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+    return path
+
+
+def latest_round(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    existing = sorted(p for p in os.listdir(ckpt_dir) if p.startswith("round_"))
+    return os.path.join(ckpt_dir, existing[-1]) if existing else None

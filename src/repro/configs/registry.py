@@ -1,0 +1,141 @@
+"""Architecture registry + input specs + reduced (smoke) variants.
+
+``get_config(arch_id)`` returns the exact assigned configuration;
+``reduce_config(cfg)`` produces the family-preserving smoke variant
+(<=2 layers, d_model<=512, <=4 experts); ``input_specs(cfg, shape)`` builds
+``jax.ShapeDtypeStruct`` stand-ins for every model input — weak-type-correct,
+shardable, zero allocation — used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCH_IDS = (
+    "h2o-danube-1.8b", "jamba-v0.1-52b", "qwen2-7b", "xlstm-1.3b",
+    "olmoe-1b-7b", "granite-moe-1b-a400m", "phi3-mini-3.8b", "pixtral-12b",
+    "seamless-m4t-medium", "llama3-405b",
+)
+
+_MODULES = {
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen2-7b": "qwen2_7b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "pixtral-12b": "pixtral_12b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama3-405b": "llama3_405b",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; one of {ARCH_IDS}")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduce_config(cfg: ModelConfig, *, seq_len: int = 64) -> ModelConfig:
+    """Family-preserving reduced variant for CPU smoke tests."""
+    changes = dict(
+        name=cfg.name + "-smoke",
+        d_model=256, num_heads=4,
+        num_kv_heads=2 if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=None,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=512,
+        sliding_window=min(cfg.sliding_window, seq_len // 2) if cfg.sliding_window else None,
+        mlstm_chunk=16,
+        attn_q_chunk=32, loss_seq_chunk=32,
+        num_modal_tokens=8, modal_embed_dim=32,
+        mamba_dt_rank=None,
+    )
+    if cfg.is_moe:
+        changes.update(num_experts=4, experts_per_token=2, moe_d_ff=128)
+    if cfg.is_hybrid:
+        changes.update(attn_period=2, num_layers=4, moe_every=2)
+    elif cfg.is_xlstm:
+        changes.update(slstm_every=2, num_layers=4)
+    else:
+        changes.update(num_layers=2)
+    if cfg.is_encoder_decoder:
+        changes.update(num_encoder_layers=2)
+    return dataclasses.replace(cfg, **changes)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+
+
+def _enc_len(seq_len: int) -> int:
+    return max(seq_len // 4, 8)
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None if this (arch x shape) pair runs; else a skip reason (DESIGN.md §4)."""
+    if shape.name == "long_500k":
+        subquadratic = cfg.is_hybrid or cfg.is_xlstm or cfg.sliding_window is not None
+        if not subquadratic:
+            return "full attention, no sub-quadratic variant (DESIGN.md §4)"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one (arch, input-shape) pair, as ShapeDtypeStructs.
+
+    train/prefill: token batch (+ stub modality embeddings).
+    decode: one new token per sequence (the KV/state cache is built separately
+    by the launcher, since its sharding differs).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    emb_dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = s - cfg.num_modal_tokens if cfg.modality == "vision" else s
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), dtype)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_text), dtype)
+        if cfg.modality == "vision":
+            specs["modal_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_modal_tokens, cfg.modal_embed_dim), emb_dt)
+        if cfg.is_encoder_decoder:
+            specs["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, _enc_len(s), cfg.modal_embed_dim), emb_dt)
+    else:  # decode: one token, position scalar
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), dtype)
+        specs["pos"] = jax.ShapeDtypeStruct((), dtype)
+        if cfg.is_encoder_decoder:
+            specs["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, _enc_len(min(s, 4096)), cfg.modal_embed_dim), emb_dt)
+    return specs
+
+
+def make_dummy_inputs(cfg: ModelConfig, shape: InputShape, key=None) -> Dict:
+    """Concrete small inputs matching input_specs (smoke tests only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, spec in input_specs(cfg, shape).items():
+        sub = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            if name == "pos":
+                out[name] = jnp.zeros((), spec.dtype)
+            else:
+                out[name] = jax.random.randint(sub, spec.shape, 0, cfg.vocab_size,
+                                               spec.dtype)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, jnp.float32).astype(spec.dtype)
+    return out

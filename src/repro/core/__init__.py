@@ -1,0 +1,18 @@
+"""Paper core: over-the-air normalized-gradient aggregation + theory."""
+from repro.core.channel import (ChannelConfig, draw_channel, channel_for_round,
+                                draw_noise, DEFAULT_B_MAX, DEFAULT_CHANNEL_MEAN,
+                                DEFAULT_NOISE_VAR, DEFAULT_THETA_TH)
+from repro.core.ota import (OTAConfig, SCHEMES, aggregate, apply_update,
+                            device_transform, superpose, server_post,
+                            per_device_norm, per_device_sq_norm,
+                            per_device_mean_std, tree_num_elements,
+                            transmit_norms)
+from repro.core.amplification import (Problem3Solution, solve_problem3,
+                                      solve_problem6, problem3_objective,
+                                      optimal_S, case1_receiver_gain,
+                                      optimize_case1, optimize_case2,
+                                      Case1Parameters, Case2Parameters)
+from repro.core.convergence import (case1_bound, case2_bound, q_max,
+                                    case2_bias_floor, s_for_epsilon,
+                                    variance_term, rounds_to_reach, fit_rate,
+                                    RateFit)

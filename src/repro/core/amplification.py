@@ -1,0 +1,221 @@
+"""System-parameter optimization (paper Sec. IV, Problems 1-8, Algorithm 1).
+
+Everything reduces to **Problem 3**:
+
+    Z = min_b  ( sum_k 4 h_k^2 b_k^2 + n sigma^2 ) / ( sum_k h_k b_k )^2
+        s.t.   0 <= b_k <= b_k^max
+
+which is non-convex, but (paper Lemma 3 + Problems 4-6) is solved *optimally*
+by a bisection over ``r`` with an inner convex feasibility program:
+
+    feasible(r)  <=>  min_{b in box} phi_r(b) <= 0,
+    phi_r(b) = sqrt( sum_k 4 h_k^2 b_k^2 + n sigma^2 ) - r * sum_k h_k b_k
+
+``phi_r`` is convex (norm composed with an affine map, minus a linear term —
+paper Lemma 3/Appendix C), and the box is convex, so the inner problem is a
+box-constrained convex program: L-BFGS-B finds its global optimum.  Total
+complexity is ``O(log(1/eps_b))`` bisection steps times a polynomial convex
+solve, matching the paper's ``O(log2(eps_b) (K+1)^3)`` claim.
+
+After Problem 3, Case I picks ``S*`` by eq. (26) and ``a = 1/(S sum h_k b_k)``;
+Case II picks ``a * eta`` from eq. (30) given a target contraction ``s=q_max``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+from scipy import optimize as sopt
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem3Solution:
+    b: np.ndarray          # optimal per-device amplification factors
+    Z: float               # optimal objective of Problem 3
+    r_star: float          # optimal r from the bisection (Z = r_star^2)
+    iterations: int        # bisection iterations used
+
+
+def problem3_objective(b: np.ndarray, h: np.ndarray, noise_var: float, n: int) -> float:
+    """Objective of Problem 3: (sum 4 h^2 b^2 + n sigma^2) / (sum h b)^2."""
+    b = np.asarray(b, dtype=np.float64)
+    h = np.asarray(h, dtype=np.float64)
+    num = float(np.sum(4.0 * h * h * b * b) + n * noise_var)
+    den = float(np.sum(h * b)) ** 2
+    return num / den
+
+
+def _phi(b: np.ndarray, r: float, h: np.ndarray, c: float) -> Tuple[float, np.ndarray]:
+    """phi_r(b) = sqrt(sum 4 h^2 b^2 + c) - r sum h b, with gradient."""
+    q = np.sqrt(np.sum(4.0 * h * h * b * b) + c)
+    val = q - r * float(np.sum(h * b))
+    grad = (4.0 * h * h * b) / q - r * h
+    return val, grad
+
+
+def _min_phi_over_box(r: float, h: np.ndarray, c: float, b_max: np.ndarray) -> Tuple[float, np.ndarray]:
+    """Inner convex feasibility program of the bisection (Problem 6 in value form).
+
+    Returns (min phi, argmin b).  Convex objective over a box: L-BFGS-B from the
+    upper corner is globally optimal.  phi is scale-benefitting (larger b helps
+    the linear term), so the upper corner is an excellent warm start.
+    """
+    res = sopt.minimize(
+        _phi, x0=b_max.copy(), args=(r, h, c), jac=True,
+        method="L-BFGS-B", bounds=[(0.0, bm) for bm in b_max],
+        options={"maxiter": 500, "ftol": 1e-16, "gtol": 1e-14},
+    )
+    return float(res.fun), np.asarray(res.x)
+
+
+def solve_problem3(
+    h: Sequence[float],
+    noise_var: float,
+    n: int,
+    b_max: Sequence[float] | float,
+    tol: float = 1e-10,
+    max_iters: int = 200,
+) -> Problem3Solution:
+    """Algorithm 1 Part I: bisection on r + convex feasibility check.
+
+    ``n`` is the model dimension N (the noise enters per coordinate).
+    """
+    h = np.asarray(h, dtype=np.float64)
+    if np.isscalar(b_max):
+        b_max = np.full_like(h, float(b_max))
+    else:
+        b_max = np.asarray(b_max, dtype=np.float64)
+    if np.any(h < 0):
+        raise ValueError("channel coefficients must be non-negative magnitudes")
+    if not np.any(h * b_max > 0):
+        raise ValueError("sum h_k b_k^max must be positive for feasibility")
+    c = float(n) * float(noise_var)
+
+    # r is feasible iff min_b phi_r(b) <= 0.  r at the upper corner is always
+    # feasible, giving the initial hi; lo = 0 is infeasible (c > 0).
+    r_hi = math.sqrt(problem3_objective(b_max, h, noise_var, n))
+    r_lo = 0.0
+    b_best = b_max.copy()
+    iters = 0
+    # Relative tolerance on r.
+    while (r_hi - r_lo) > tol * max(1.0, r_hi) and iters < max_iters:
+        r_mid = 0.5 * (r_lo + r_hi)
+        val, b_arg = _min_phi_over_box(r_mid, h, c, b_max)
+        if val <= 0.0:
+            r_hi = r_mid
+            b_best = b_arg
+        else:
+            r_lo = r_mid
+        iters += 1
+
+    # Polish: evaluate the true Problem-3 objective at the feasibility argmin.
+    Z = problem3_objective(b_best, h, noise_var, n)
+    return Problem3Solution(b=b_best, Z=Z, r_star=math.sqrt(Z), iterations=iters)
+
+
+def solve_problem6(r: float, h: np.ndarray, noise_var: float, n: int,
+                   b_max: np.ndarray) -> Tuple[float, np.ndarray]:
+    """Literal Problem 6 (paper eq. (25)): min v s.t. cone constraint and
+    0 <= b_k <= b_k^max + v.  Used as a faithfulness cross-check of the
+    value-form feasibility test: V(r) <= 0  <=>  min_b phi_r(b) <= 0.
+
+    Solved via SLSQP (convex, per Lemma 3).
+    """
+    K = h.shape[0]
+    c = float(n) * float(noise_var)
+
+    def obj(x):
+        return x[-1]
+
+    def obj_jac(x):
+        g = np.zeros_like(x)
+        g[-1] = 1.0
+        return g
+
+    def cone(x):
+        b = x[:K]
+        return r * float(np.sum(h * b)) - math.sqrt(float(np.sum(4 * h * h * b * b)) + c)
+
+    cons = [{"type": "ineq", "fun": cone}]
+    # 0 <= b_k <= b_max_k + v  ->  b_max_k + v - b_k >= 0
+    for k in range(K):
+        cons.append({"type": "ineq", "fun": (lambda x, k=k: b_max[k] + x[-1] - x[k])})
+        cons.append({"type": "ineq", "fun": (lambda x, k=k: x[k])})
+    x0 = np.concatenate([b_max, [0.0]])
+    res = sopt.minimize(obj, x0, jac=obj_jac, constraints=cons, method="SLSQP",
+                        options={"maxiter": 500, "ftol": 1e-12})
+    return float(res.x[-1]), np.asarray(res.x[:K])
+
+
+def optimal_S(Z: float, L: float, p: float, expected_loss_drop: float) -> float:
+    """Case I, eq. (26): S* = sqrt( L (Z+1) p / ((2p-1) E{F(w1)-F(wT+1)}) )."""
+    if not (0.5 < p < 1.0):
+        raise ValueError("p must lie in (1/2, 1)")
+    if expected_loss_drop <= 0:
+        raise ValueError("expected loss drop must be positive")
+    return math.sqrt(L * (Z + 1.0) * p / ((2.0 * p - 1.0) * expected_loss_drop))
+
+
+def case1_receiver_gain(S: float, h: np.ndarray, b: np.ndarray) -> float:
+    """Case I: a = 1 / (S * sum_k h_k b_k), from constraint (18a)."""
+    denom = S * float(np.sum(h * b))
+    if denom <= 0:
+        raise ValueError("S * sum h_k b_k must be positive")
+    return 1.0 / denom
+
+
+@dataclasses.dataclass(frozen=True)
+class Case1Parameters:
+    b: np.ndarray
+    a: float
+    S: float
+    Z: float
+    p: float
+
+
+def optimize_case1(h, noise_var, n, b_max, L, p, expected_loss_drop,
+                   tol: float = 1e-10) -> Case1Parameters:
+    """Full Algorithm 1: Problem 3 then eq. (26) then a = 1/(S sum h b)."""
+    sol = solve_problem3(h, noise_var, n, b_max, tol=tol)
+    S = optimal_S(sol.Z, L, p, expected_loss_drop)
+    a = case1_receiver_gain(S, np.asarray(h, dtype=np.float64), sol.b)
+    return Case1Parameters(b=sol.b, a=a, S=S, Z=sol.Z, p=p)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case2Parameters:
+    b: np.ndarray
+    a_eta: float           # the product a*eta fixed by eq. (30)
+    s: float               # chosen contraction factor q_max in (0, 1)
+    Z: float
+    bias_bound: float      # the minimized second term of (15): (Z+1) L G^2 (1-s) / (8 M^2 cos^2 th)
+
+
+def optimize_case2(h, noise_var, n, b_max, L, M, G, theta_th,
+                   s: Optional[float] = None, epsilon: Optional[float] = None,
+                   tol: float = 1e-10) -> Case2Parameters:
+    """Case II (Sec. IV-B, q_max in (0,1) branch).
+
+    Exactly one of ``s`` (target contraction q_max) or ``epsilon`` (target bias)
+    must be given.  From the paper: C2(s) = (Z+1) L G^2 (1-s) / (8 M^2 cos^2 th),
+    and for a bias target eps: s = 1 - 8 M^2 cos^2(th) eps / ((Z+1) L G^2).
+    a*eta then follows from eq. (30): 2 M cos(th) eta a sum h b = G (1-s).
+    """
+    if (s is None) == (epsilon is None):
+        raise ValueError("specify exactly one of s / epsilon")
+    sol = solve_problem3(h, noise_var, n, b_max, tol=tol)
+    cos2 = math.cos(theta_th) ** 2
+    if s is None:
+        s = 1.0 - 8.0 * M * M * cos2 * epsilon / ((sol.Z + 1.0) * L * G * G)
+        if s <= 0.0:
+            # epsilon so loose that even q_max = 0 satisfies it; clamp into (0,1).
+            s = 1e-6
+    if not (0.0 < s < 1.0):
+        raise ValueError(f"target contraction s must lie in (0,1), got {s}")
+    h_arr = np.asarray(h, dtype=np.float64)
+    sum_hb = float(np.sum(h_arr * sol.b))
+    a_eta = G * (1.0 - s) / (2.0 * M * math.cos(theta_th) * sum_hb)
+    bias = (sol.Z + 1.0) * L * G * G * (1.0 - s) / (8.0 * M * M * cos2)
+    return Case2Parameters(b=sol.b, a_eta=a_eta, s=s, Z=sol.Z, bias_bound=bias)

@@ -1,0 +1,224 @@
+"""Over-the-air gradient aggregation schemes (the paper's core, Sec. II).
+
+Every scheme is expressed as a *device-side transform* of the local gradient
+pytree plus a *server-side post-transform* of the superposed signal
+
+    y = a * ( sum_k h_k b_k x_k + z ),      z ~ N(0, sigma^2 I)      (eq. 10)
+
+followed by the model update ``w <- w - eta * y`` (eq. 11).
+
+Schemes
+-------
+``normalized``      x_k = g_k / ||g_k||                 (the paper, eq. 12)
+``raw``             x_k = g_k                            (no power discipline; diagnostic)
+``benchmark1``      x_k = g_k / G                        (raw gradient under the
+                    conservative max-norm assumption of [7] — the worst-case
+                    bound G is what keeps the transmit amplitude <= b_k^max)
+``benchmark2``      x_k = (g_k - mean_k) / std_k         ([13]; mean/std sent as
+                    error-free side info and folded back in at the server)
+``onebit``          x_k = sign(g_k)/sqrt(N)              ([12]; server takes the
+                    sign of the aggregate — over-the-air signSGD-MV.  The 1/sqrt(N)
+                    keeps ||x_k|| = 1 so the transmit power discipline matches.)
+``mean``            ideal noiseless FedSGD mean          (upper-bound reference)
+
+All transforms act on *stacked* gradient pytrees whose leaves carry a leading
+device axis K (produced by ``jax.vmap`` over clients).  The mesh/shard_map
+variant, where each data shard is one device and the superposition is a single
+``psum``, lives in ``repro.distribution.ota_collectives``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+SCHEMES = ("normalized", "normalized_per_tensor", "raw", "benchmark1",
+           "benchmark2", "onebit", "mean")
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class OTAConfig:
+    """Per-round aggregation parameters (see ``amplification`` for how a, b
+    are chosen optimally)."""
+
+    scheme: str = "normalized"
+    a: float = 1.0                       # receiver gain (server side)
+    noise_var: float = 0.0               # sigma^2 of the AWGN at the ES
+    grad_bound: Optional[float] = None   # G, required by benchmark1
+    # When True the noise term is omitted (ideal channel); used by tests that
+    # isolate the deterministic part of a scheme.
+    noiseless: bool = False
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}; one of {SCHEMES}")
+        if self.scheme == "benchmark1" and self.grad_bound is None:
+            raise ValueError("benchmark1 requires grad_bound (the max-norm G)")
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers (leading axis = device)
+
+
+def tree_num_elements(tree: PyTree) -> int:
+    """Total number of scalar coordinates in one device's gradient (= N)."""
+    return sum(int(jnp.size(l)) // l.shape[0] for l in jax.tree_util.tree_leaves(tree))
+
+
+def per_device_sq_norm(stacked: PyTree) -> jax.Array:
+    """[K] vector of squared global L2 norms, one per device."""
+    leaves = jax.tree_util.tree_leaves(stacked)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32)).reshape(l.shape[0], -1), axis=1)
+               for l in leaves)
+
+
+def per_device_norm(stacked: PyTree) -> jax.Array:
+    return jnp.sqrt(per_device_sq_norm(stacked))
+
+
+def per_device_mean_std(stacked: PyTree) -> Tuple[jax.Array, jax.Array]:
+    """[K] global mean and std over each device's full gradient vector."""
+    leaves = jax.tree_util.tree_leaves(stacked)
+    n = tree_num_elements(stacked)
+    s1 = sum(jnp.sum(l.astype(jnp.float32).reshape(l.shape[0], -1), axis=1) for l in leaves)
+    mean = s1 / n
+    s2 = sum(jnp.sum(jnp.square(l.astype(jnp.float32)).reshape(l.shape[0], -1), axis=1)
+             for l in leaves)
+    var = jnp.maximum(s2 / n - jnp.square(mean), 0.0)
+    return mean, jnp.sqrt(var)
+
+
+def _scale_per_device(stacked: PyTree, scale: jax.Array) -> PyTree:
+    """Multiply each device's slice by scale[k] (broadcast over trailing dims)."""
+    def one(l):
+        s = scale.astype(l.dtype).reshape((l.shape[0],) + (1,) * (l.ndim - 1))
+        return l * s
+    return jax.tree_util.tree_map(one, stacked)
+
+
+def _shift_per_device(stacked: PyTree, shift: jax.Array) -> PyTree:
+    def one(l):
+        s = shift.astype(l.dtype).reshape((l.shape[0],) + (1,) * (l.ndim - 1))
+        return l + s
+    return jax.tree_util.tree_map(one, stacked)
+
+
+# ---------------------------------------------------------------------------
+# device-side transforms
+
+
+def device_transform(scheme: str, stacked_grads: PyTree,
+                     grad_bound: Optional[float] = None) -> Tuple[PyTree, dict]:
+    """Apply a scheme's device-side transform.  Returns (x_k stack, side_info)."""
+    if scheme in ("mean", "raw"):
+        return stacked_grads, {}
+    if scheme == "normalized":
+        norms = per_device_norm(stacked_grads)
+        return _scale_per_device(stacked_grads, 1.0 / (norms + _EPS)), {}
+    if scheme == "normalized_per_tensor":
+        # beyond-paper variant (DESIGN.md §4): each tensor normalized by its
+        # own norm (LARS-flavoured), then scaled by 1/sqrt(#tensors) so the
+        # total transmit norm is 1 — useful for MoE where a cold expert's
+        # gradient would otherwise be drowned by the dense layers.
+        leaves = jax.tree_util.tree_leaves(stacked_grads)
+        n_t = len(leaves)
+        def one(l):
+            lf = l.astype(jnp.float32)
+            norm = jnp.sqrt(jnp.sum(jnp.square(lf.reshape(l.shape[0], -1)), axis=1))
+            scale = (1.0 / ((norm + _EPS) * jnp.sqrt(float(n_t))))
+            return lf * scale.reshape((l.shape[0],) + (1,) * (l.ndim - 1))
+        return jax.tree_util.tree_map(one, stacked_grads), {}
+    if scheme == "benchmark1":
+        g = jnp.asarray(grad_bound, jnp.float32)
+        leaves0 = jax.tree_util.tree_leaves(stacked_grads)
+        k = leaves0[0].shape[0]
+        return _scale_per_device(stacked_grads, jnp.full((k,), 1.0) / g), {}
+    if scheme == "benchmark2":
+        # Standardize, then scale by 1/sqrt(N) so the transmitted signal obeys
+        # the SAME per-round energy budget as the other schemes (||x|| = 1).
+        # The raw [13] operation leaves ||x|| = sqrt(N) — an unbounded
+        # amplitude, which is exactly the paper's critique; comparing at
+        # sqrt(N)x the transmit energy would be meaningless.  The server
+        # folds the sqrt(N) back in (it knows the model dimension).
+        mean, std = per_device_mean_std(stacked_grads)
+        n = tree_num_elements(stacked_grads)
+        centred = _shift_per_device(stacked_grads, -mean)
+        x = _scale_per_device(centred, 1.0 / ((std + _EPS) * jnp.sqrt(float(n))))
+        return x, {"mean": mean, "std": std, "sqrt_n": float(n) ** 0.5}
+    if scheme == "onebit":
+        n = tree_num_elements(stacked_grads)
+        inv_sqrt_n = 1.0 / jnp.sqrt(jnp.asarray(n, jnp.float32))
+        x = jax.tree_util.tree_map(lambda l: jnp.sign(l) * inv_sqrt_n, stacked_grads)
+        return x, {}
+    raise ValueError(scheme)
+
+
+# ---------------------------------------------------------------------------
+# superposition + server-side post-transform
+
+
+def superpose(stacked_x: PyTree, h: jax.Array, b: jax.Array, a: float,
+              key: Optional[jax.Array], noise_var: float) -> PyTree:
+    """The MAC channel: y = a (sum_k h_k b_k x_k + z).  One fused reduction."""
+    hb = (h * b).astype(jnp.float32)
+    summed = jax.tree_util.tree_map(
+        lambda l: jnp.tensordot(hb.astype(l.dtype), l, axes=(0, 0)), stacked_x)
+    if key is not None and noise_var > 0.0:
+        flat, treedef = jax.tree_util.tree_flatten(summed)
+        keys = jax.random.split(key, len(flat))
+        flat = [l + jnp.sqrt(jnp.asarray(noise_var, l.dtype))
+                * jax.random.normal(k, l.shape, l.dtype) for l, k in zip(flat, keys)]
+        summed = jax.tree_util.tree_unflatten(treedef, flat)
+    return jax.tree_util.tree_map(lambda l: jnp.asarray(a, l.dtype) * l, summed)
+
+
+def server_post(scheme: str, y: PyTree, side: dict, h: jax.Array,
+                b: jax.Array) -> PyTree:
+    """Server-side reconstruction applied after the receiver gain."""
+    if scheme == "benchmark2":
+        hb = h * b
+        w = hb / (jnp.sum(hb) + _EPS)
+        std_bar = jnp.sum(w * side["std"]) * side["sqrt_n"]
+        mean_bar = jnp.sum(w * side["mean"])
+        return jax.tree_util.tree_map(lambda l: l * std_bar + mean_bar, y)
+    if scheme == "onebit":
+        return jax.tree_util.tree_map(jnp.sign, y)
+    return y
+
+
+def aggregate(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
+              key: Optional[jax.Array] = None) -> PyTree:
+    """Full OTA aggregation: device transform -> superpose -> server post.
+
+    Returns the update direction ``y`` such that ``w <- w - eta * y``.
+    """
+    if cfg.scheme == "mean":
+        k = jax.tree_util.tree_leaves(stacked_grads)[0].shape[0]
+        return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), stacked_grads)
+    x, side = device_transform(cfg.scheme, stacked_grads, cfg.grad_bound)
+    noise_key = None if cfg.noiseless else key
+    y = superpose(x, h, b, cfg.a, noise_key, cfg.noise_var)
+    return server_post(cfg.scheme, y, side, h, b)
+
+
+def apply_update(params: PyTree, y: PyTree, eta) -> PyTree:
+    """w <- w - eta y  (eq. 11)."""
+    return jax.tree_util.tree_map(
+        lambda w, u: w - jnp.asarray(eta, w.dtype) * u.astype(w.dtype), params, y)
+
+
+def transmit_norms(scheme: str, stacked_grads: PyTree,
+                   grad_bound: Optional[float] = None) -> jax.Array:
+    """[K] transmit-signal norms ||x_k|| — the quantity the paper's power
+    discipline is about.  For ``normalized`` this is exactly 1 for every
+    device at every round; for ``benchmark1`` it is ||g_k||/G <= 1 (wasting
+    headroom); for ``benchmark2`` it is sqrt(N) (unbounded per element)."""
+    x, _ = device_transform(scheme, stacked_grads, grad_bound)
+    return per_device_norm(x)

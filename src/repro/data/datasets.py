@@ -1,0 +1,123 @@
+"""Data substrate: synthetic task generators + federated (non-IID) partitioner.
+
+No network access in this container, so the paper's MNIST task is reproduced
+with a *synthetic MNIST-like* generator (class-conditional Gaussian digit
+blobs, 28x28) — see DESIGN.md §7.  Trend/ordering claims, not absolute
+accuracy numbers, are the reproduction target; the exact theory is validated
+on ridge regression where the constants are computable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# synthetic MNIST-like classification task (Case I)
+
+
+def synthetic_mnist(key, num_examples: int, num_classes: int = 10,
+                    side: int = 28, noise: float = 0.35):
+    """Class-conditional images: each class is a fixed random smooth template
+    plus per-example Gaussian noise.  Linearly non-separable at this noise
+    level, so the MLP's non-convexity matters."""
+    k_tmpl, k_lab, k_noise = jax.random.split(key, 3)
+    base = jax.random.normal(k_tmpl, (num_classes, side * side))
+    # smooth the templates a little so nearby pixels correlate (image-like)
+    tmpl = base.reshape(num_classes, side, side)
+    kernel = jnp.ones((3, 3)) / 9.0
+    tmpl = jax.scipy.signal.convolve2d if False else tmpl  # keep jnp-only
+    for _ in range(2):
+        pad = jnp.pad(tmpl, ((0, 0), (1, 1), (1, 1)), mode="edge")
+        tmpl = sum(pad[:, i:i + side, j:j + side] for i in range(3) for j in range(3)) / 9.0
+    tmpl = tmpl.reshape(num_classes, side * side)
+    labels = jax.random.randint(k_lab, (num_examples,), 0, num_classes)
+    x = tmpl[labels] + noise * jax.random.normal(k_noise, (num_examples, side * side))
+    return x, labels
+
+
+# ---------------------------------------------------------------------------
+# ridge regression task (Case II)
+
+
+def ridge_data(key, num_examples: int, dim: int, noise: float = 0.05):
+    k_w, k_x, k_n = jax.random.split(key, 3)
+    w_true = jax.random.normal(k_w, (dim,))
+    x = jax.random.normal(k_x, (num_examples, dim))
+    y = x @ w_true + noise * jax.random.normal(k_n, (num_examples,))
+    return x, y, w_true
+
+
+# ---------------------------------------------------------------------------
+# synthetic token streams (for transformer FL / throughput examples)
+
+
+def token_stream(key, num_sequences: int, seq_len: int, vocab: int):
+    """Markov-ish synthetic tokens so loss can actually decrease."""
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (num_sequences, 1), 0, vocab)
+    steps = jax.random.randint(k2, (num_sequences, seq_len - 1), 0, 17)
+    toks = jnp.cumsum(jnp.concatenate([start, steps], axis=1), axis=1) % vocab
+    return toks.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# federated partitioner
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedSplit:
+    """Per-device index sets (variable sizes => the paper's D_k / D_A weights)."""
+    indices: Tuple[np.ndarray, ...]
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.array([len(i) for i in self.indices])
+
+    def weights(self) -> np.ndarray:
+        s = self.sizes
+        return s / s.sum()
+
+
+def split_iid(key, num_examples: int, num_devices: int) -> FederatedSplit:
+    perm = np.asarray(jax.random.permutation(key, num_examples))
+    return FederatedSplit(tuple(np.sort(p) for p in np.array_split(perm, num_devices)))
+
+
+def split_dirichlet(key, labels: np.ndarray, num_devices: int,
+                    alpha: float = 0.5) -> FederatedSplit:
+    """Label-skewed non-IID split (Dirichlet over class proportions) — the
+    statistical heterogeneity the paper's Assumption 5 bounds."""
+    labels = np.asarray(labels)
+    classes = np.unique(labels)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2 ** 31 - 1)))
+    dev_idx: List[List[int]] = [[] for _ in range(num_devices)]
+    for c in classes:
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * num_devices)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for d, part in enumerate(np.split(idx, cuts)):
+            dev_idx[d].extend(part.tolist())
+    # guarantee every device has at least one example
+    for d in range(num_devices):
+        if not dev_idx[d]:
+            donor = int(np.argmax([len(x) for x in dev_idx]))
+            dev_idx[d].append(dev_idx[donor].pop())
+    return FederatedSplit(tuple(np.sort(np.array(d, dtype=np.int64)) for d in dev_idx))
+
+
+def device_batches(key, split: FederatedSplit, batch_size: int, round_idx: int
+                   ) -> np.ndarray:
+    """[K, batch_size] example indices for one round (per-device sampling
+    with replacement when a shard is smaller than the batch)."""
+    out = []
+    for k, idx in enumerate(split.indices):
+        sub = jax.random.fold_in(jax.random.fold_in(key, round_idx), k)
+        choice = jax.random.randint(sub, (batch_size,), 0, len(idx))
+        out.append(idx[np.asarray(choice)])
+    return np.stack(out)

@@ -1,0 +1,144 @@
+"""The paper's aggregation as a first-class mesh collective: ``ota_psum``.
+
+Inside a ``jax.shard_map`` whose *manual* axes are the FL-client axes
+(('data',) on one pod; ('pod',) or ('pod','data') across pods), each shard
+plays one mobile device of the paper's system:
+
+    g_k  --normalize-->  x_k  --* h_k b_k-->  [psum over client axes]  --*a, +a z-->
+
+The single ``psum`` *is* the over-the-air superposition (DESIGN.md §2): the
+paper's method costs exactly the same collective bytes as a standard
+data-parallel all-reduce, plus two scalar psums for the norm bookkeeping —
+which the roofline table in EXPERIMENTS.md confirms.
+
+The channel noise ``a*z`` is added *after* the psum from a key that is
+replicated across shards, so every client computes the identical server-side
+result (model replicas stay bitwise in sync, as Step 3 "Broadcast" requires).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_EPS = 1e-12
+
+
+def client_index(axis_names: Sequence[str]) -> jax.Array:
+    """Flat FL-client index of this shard over the manual aggregation axes."""
+    idx = jnp.zeros((), jnp.int32)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def _tree_sq_norm(tree: PyTree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def _tree_sum_count(tree: PyTree) -> Tuple[jax.Array, int]:
+    s = sum(jnp.sum(l.astype(jnp.float32)) for l in jax.tree_util.tree_leaves(tree))
+    n = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(tree))
+    return s, n
+
+
+def _psum_tree(tree: PyTree, axes) -> PyTree:
+    return jax.tree_util.tree_map(lambda l: jax.lax.psum(l, axes), tree)
+
+
+def _scale_tree(tree: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda l: (l.astype(jnp.float32) * s), tree)
+
+
+def _add_noise(tree: PyTree, key, a: float, noise_var: float) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(flat))
+    std = jnp.sqrt(jnp.asarray(noise_var, jnp.float32)) * a
+    flat = [l + std * jax.random.normal(k, l.shape, jnp.float32)
+            for l, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def ota_psum(grads: PyTree, *, scheme: str, axes: Tuple[str, ...],
+             h: jax.Array, b: jax.Array, a: float, noise_var: float,
+             key: Optional[jax.Array] = None,
+             grad_bound: Optional[float] = None,
+             reduce_dtype=None) -> PyTree:
+    """Aggregate this shard's gradient with every other FL client's, over the
+    air.  ``h``/``b`` are the full [K] per-client arrays (replicated); each
+    shard selects its own coefficient by mesh position.
+
+    Returns the server-side update direction y (identical on all clients).
+    """
+    if scheme == "mean":
+        k_total = 1
+        for ax in axes:
+            k_total *= jax.lax.axis_size(ax)
+        return _psum_tree(_scale_tree(grads, 1.0 / k_total), axes)
+
+    me = client_index(axes)
+    hk = h[me].astype(jnp.float32)
+    bk = b[me].astype(jnp.float32)
+
+    if scheme == "normalized":
+        norm = jnp.sqrt(_tree_sq_norm(grads))
+        x = _scale_tree(grads, hk * bk / (norm + _EPS))
+        side = None
+    elif scheme == "normalized_per_tensor":
+        leaves = jax.tree_util.tree_leaves(grads)
+        n_t = float(len(leaves))
+        x = jax.tree_util.tree_map(
+            lambda l: l.astype(jnp.float32) * (hk * bk / (
+                (jnp.sqrt(jnp.sum(jnp.square(l.astype(jnp.float32)))) + _EPS)
+                * jnp.sqrt(n_t))), grads)
+        side = None
+    elif scheme == "raw":
+        x = _scale_tree(grads, hk * bk)
+        side = None
+    elif scheme == "benchmark1":
+        x = _scale_tree(grads, hk * bk / jnp.asarray(grad_bound, jnp.float32))
+        side = None
+    elif scheme == "benchmark2":
+        # energy-fair standardization (see repro.core.ota.device_transform)
+        s, n = _tree_sum_count(grads)
+        mean = s / n
+        var = jnp.maximum(_tree_sq_norm(grads) / n - mean * mean, 0.0)
+        std = jnp.sqrt(var)
+        sqrt_n = float(n) ** 0.5
+        x = jax.tree_util.tree_map(
+            lambda l: (l.astype(jnp.float32) - mean)
+            * (hk * bk / ((std + _EPS) * sqrt_n)), grads)
+        side = (mean, std, sqrt_n)
+    elif scheme == "onebit":
+        _, n = _tree_sum_count(grads)
+        x = jax.tree_util.tree_map(
+            lambda l: jnp.sign(l.astype(jnp.float32)) * (hk * bk / jnp.sqrt(float(n))),
+            grads)
+        side = None
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    if reduce_dtype is not None:
+        # beyond-paper §Perf lever: superpose in bf16 (halves the gradient
+        # collective bytes; the analog channel would quantize far more
+        # coarsely than bf16 anyway, so fidelity-wise this is still above
+        # the paper's operating point).  Norms/side-info stay fp32.
+        x = jax.tree_util.tree_map(lambda l: l.astype(reduce_dtype), x)
+    y = _psum_tree(x, axes)                       # <-- the over-the-air superposition
+    y = jax.tree_util.tree_map(lambda l: l.astype(jnp.float32), y)
+    if key is not None and noise_var > 0.0:
+        y = _add_noise(y, key, 1.0, noise_var)    # z added once, pre-gain
+    y = _scale_tree(y, jnp.asarray(a, jnp.float32))
+
+    if scheme == "benchmark2":
+        mean, std, sqrt_n = side
+        sum_hb = jax.lax.psum(hk * bk, axes)
+        std_bar = jax.lax.psum(hk * bk * std, axes) / (sum_hb + _EPS) * sqrt_n
+        mean_bar = jax.lax.psum(hk * bk * mean, axes) / (sum_hb + _EPS)
+        y = jax.tree_util.tree_map(lambda l: l * std_bar + mean_bar, y)
+    elif scheme == "onebit":
+        y = jax.tree_util.tree_map(jnp.sign, y)
+    return y

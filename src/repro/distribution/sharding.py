@@ -1,0 +1,171 @@
+"""Parameter/activation sharding rules (logical-axis style).
+
+Rules are keyed on parameter leaf names (the model zoo uses stable names) and
+produce ``PartitionSpec``s.  ``model_axis`` carries tensor parallelism
+(attention heads / FFN hidden / experts / vocab); ``fsdp_axis`` optionally
+shards the other large dim (required for llama3-405b).  Leaves with a leading
+superblock-stack axis get a ``None`` prepended automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name -> spec WITHOUT the stack axis; 'M' = model axis, 'F' = fsdp axis
+_RULES = {
+    # embeddings.  NOTE: the token table is deliberately NOT fsdp-sharded:
+    # a gather from a table sharded over BOTH mesh axes inside a partial-manual
+    # shard_map trips an XLA SPMD-partitioner check failure (b/433785288-like;
+    # minimal repro in tests/test_distribution.py) — and at TP-only sharding
+    # the table is small per chip anyway (llama3-405b: 263 MB).
+    "tok": ("M", None),           # vocab-sharded embedding table
+    "unemb": ("F", "M"),
+    "modal_proj": (None, "M"),
+    # attention
+    "wq": ("F", "M"), "wk": ("F", "M"), "wv": ("F", "M"),
+    "bq": ("M",), "bk": ("M",), "bv": ("M",),
+    "wo": ("M", "F"),
+    # dense mlp (rank-2) / moe experts (rank-3) share names; see _spec_for
+    "w_gate": ("F", "M"), "w_up": ("F", "M"), "w_down": ("M", "F"),
+    "router": (None, None),
+    # mamba
+    "in_proj": ("F", "M"), "out_proj": ("M", "F"),
+    "conv_w": (None, "M"), "conv_b": ("M",),
+    "x_proj": ("M", None), "dt_proj_w": (None, "M"), "dt_proj_b": ("M",),
+    "A_log": ("M", None), "D": ("M",),
+    # xlstm
+    "up": ("F", "M"), "down": ("M", "F"),
+    "ogate": (None, "M"),
+    "wi": ("M", None), "wf": ("M", None), "bi": (None,), "bf": (None,),
+    "w_gates": ("M", None),
+    "r_gates": (None, None, None, None),
+    "b_gates": (None,),
+    # norms
+    "scale": (None,),
+}
+
+_MOE_RULES = {  # rank-3 expert-stacked weights: experts over the model axis
+    "w_gate": ("M", "F", None), "w_up": ("M", "F", None), "w_down": ("M", None, "F"),
+}
+
+
+def _resolve(symbolic, model_axis, fsdp_axis):
+    out = []
+    for s in symbolic:
+        if s == "M":
+            out.append(model_axis)
+        elif s == "F":
+            out.append(fsdp_axis)
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def _spec_for(name: str, parents: tuple, ndim: int, model_axis: str,
+              fsdp_axis: Optional[str]) -> P:
+    rule = _RULES.get(name)
+    if name in _MOE_RULES and "moe" in parents:   # expert-stacked weights
+        rule = _MOE_RULES[name]
+    if rule is None:
+        return P()
+    spec = _resolve(rule, model_axis, fsdp_axis)
+    if ndim == len(spec) + 1:      # leading superblock-stack axis
+        spec = (None,) + spec
+    elif ndim != len(spec):
+        return P()                 # unknown layout: replicate (safe default)
+    return P(*spec)
+
+
+def param_specs(params, *, model_axis: str = "model",
+                fsdp_axis: Optional[str] = None):
+    """PartitionSpec pytree for a model parameter pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        names = [str(e.key) for e in path if isinstance(e, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        specs.append(_spec_for(name, tuple(names[:-1]), jnp.ndim(leaf),
+                               model_axis, fsdp_axis))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop mesh axes from dims they don't divide (e.g. vocab 256206 on a
+    16-way model axis) — replicating such a dim is always legal."""
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if d < len(shape) and shape[d] % size == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def named_shardings(mesh, spec_tree, like_tree=None):
+    """NamedShardings for a spec pytree; with ``like_tree`` given, specs are
+    sanitized against the actual leaf shapes first."""
+    if like_tree is None:
+        return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                      is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map(
+        lambda s, l: NamedSharding(mesh, sanitize_spec(mesh, s, l.shape)),
+        spec_tree, like_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_like, axes) -> object:
+    """Shard the leading (batch) dim of every batch leaf over ``axes``;
+    scalars (e.g. ``pos``) replicate."""
+    def one(leaf):
+        if jnp.ndim(leaf) == 0:
+            return P()
+        return P(tuple(axes))
+    return jax.tree_util.tree_map(one, batch_like)
+
+
+def cache_specs(cache_like, *, batch_axes, model_axis: str, num_kv_heads: int,
+                model_size: int, seq_axis: Optional[str] = None):
+    """Decode-cache shardings, name-keyed like ``param_specs``.
+
+    KV caches [n_sb,B,S,Hkv,dh] shard batch over ``batch_axes``, kv-heads over
+    ``model_axis`` when divisible (else the seq axis over ``seq_axis`` for the
+    context-parallel long-decode path); recurrent states shard batch + their
+    big feature dim over the model axis.
+    """
+    kv_ok = num_kv_heads % model_size == 0
+    b_ax = tuple(batch_axes) if batch_axes else None
+
+    def spec_for(name: str, nd: int) -> P:
+        if name in ("k", "v") and nd == 5:
+            return P(None, b_ax, seq_axis, model_axis if kv_ok else None, None)
+        if name == "ssm" and nd == 4:       # [n_sb, B, di, N]
+            return P(None, b_ax, model_axis, None)
+        if name == "conv" and nd == 4:      # [n_sb, B, K-1, di]
+            return P(None, b_ax, None, model_axis)
+        if name == "C" and nd == 5:         # [n_sb, B, H, dh, dh] mlstm memory
+            return P(None, b_ax, None, model_axis, None)
+        if name == "n" and nd == 4:         # [n_sb, B, H, dh] mlstm normalizer
+            return P(None, b_ax, None, model_axis)
+        if nd == 3:                         # [n_sb, B, di] slstm states
+            return P(None, b_ax, model_axis)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+    specs = []
+    for path, leaf in flat:
+        name = ""
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        specs.append(spec_for(name, jnp.ndim(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, specs)

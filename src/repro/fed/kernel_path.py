@@ -1,0 +1,51 @@
+"""Kernel-accelerated aggregation path.
+
+On TPU the per-round hot loop of the paper's method is: global L2 norm of
+every device's gradient (HBM-bound reduction) followed by the fused
+normalize-amplify-superpose (eq. 10 with eq. 12).  This module routes the
+``normalized`` scheme through the Pallas kernels
+(``repro.kernels.grad_norm`` / ``repro.kernels.ota_aggregate``); on CPU the
+kernels execute under interpret=True, so this path is also the kernels'
+system-level integration test (vs ``repro.core.ota.aggregate``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.kernels import ops
+
+PyTree = Any
+
+
+def aggregate_normalized_kernels(stacked_grads: PyTree, h: jax.Array,
+                                 b: jax.Array, a: float,
+                                 key: Optional[jax.Array], noise_var: float,
+                                 interpret: Optional[bool] = None) -> PyTree:
+    """Pallas-kernel implementation of the ``normalized`` scheme.
+
+    stacked_grads: pytree with leading device axis K.  Returns the update
+    direction y with the single-device pytree structure.
+    """
+    leaves = jax.tree_util.tree_leaves(stacked_grads)
+    k = leaves[0].shape[0]
+    # flatten each device's gradient to one vector (shared unravel)
+    _, unravel = ravel_pytree(jax.tree_util.tree_map(lambda l: l[0], stacked_grads))
+    flat = jnp.stack([ravel_pytree(
+        jax.tree_util.tree_map(lambda l: l[i], stacked_grads))[0]
+        for i in range(k)])                                     # [K, N]
+
+    norms = jnp.stack([ops.grad_norm(flat[i], interpret=interpret)
+                       for i in range(k)])                      # [K]
+    n = flat.shape[1]
+    if key is not None and noise_var > 0.0:
+        noise = jnp.sqrt(jnp.asarray(noise_var, jnp.float32)) \
+            * jax.random.normal(key, (n,), jnp.float32)
+    else:
+        noise = jnp.zeros((n,), jnp.float32)
+    y_flat = ops.ota_aggregate(flat, (h * b).astype(jnp.float32), norms,
+                               noise, a, interpret=interpret)
+    return unravel(y_flat)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: blocked global L2-norm reduction.
+
+The paper's device-side transform needs ``||g_k||`` over the *entire* flat
+gradient (millions of elements) before any element can be scaled — an
+HBM-bandwidth-bound two-pass reduction.  The kernel streams the vector
+through VMEM in lane-aligned ``(8, 1024)``-shaped blocks and emits one
+partial sum-of-squares per grid step; the (tiny) final add + sqrt happens in
+the jitted wrapper (``ops.grad_norm``).
+
+Target: TPU (MXU/VPU 8x128 tiling); validated on CPU via interpret=True
+against ``ref.grad_norm_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sumsq_kernel(x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(x * x)
+
+
+def blocked_sumsq(x: jax.Array, *, block_rows: int = 256,
+                  interpret: bool = True) -> jax.Array:
+    """Partial sums of squares of a [R, 128k]-shaped view of the flat vector.
+
+    x must be 2-D with a lane-aligned trailing dim; returns [num_blocks] f32.
+    """
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        raise ValueError(f"rows {rows} must divide block_rows {br}")
+    grid = (rows // br,)
+    out = pl.pallas_call(
+        _sumsq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:, 0]

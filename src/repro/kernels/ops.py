@@ -1,0 +1,101 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True when no TPU is present (this container), so the
+same call sites compile to real Mosaic kernels on TPU and to the Python
+interpreter on CPU (the correctness-validation path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_blocked
+from repro.kernels.grad_norm import blocked_sumsq
+from repro.kernels.ota_aggregate import ota_aggregate_blocked
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+LANES = 1024  # trailing-dim packing for flat-vector kernels (8x128-aligned)
+
+
+def _pack_flat(x: jax.Array, lanes: int = LANES):
+    """Flatten + zero-pad a vector to [rows, lanes] (padding is norm-neutral)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // lanes)
+    pad = rows * lanes - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(rows, lanes), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def grad_norm(x: jax.Array, *, block_rows: int = 256,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Global L2 norm of a gradient vector via the blocked Pallas reduction."""
+    interpret = _default_interpret() if interpret is None else interpret
+    x2, _ = _pack_flat(x)
+    rows = x2.shape[0]
+    br = block_rows
+    while rows % br != 0:   # static: shapes are concrete under jit
+        br -= 1
+    partials = blocked_sumsq(x2, block_rows=br, interpret=interpret)
+    return jnp.sqrt(jnp.sum(partials))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ota_aggregate(g: jax.Array, hb: jax.Array, norms: jax.Array,
+                  noise: jax.Array, a, *, block: int = LANES,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Fused normalize-amplify-superpose (paper eq. 10 with eq. 12).
+
+    g: [K, N] stacked device gradients; hb: [K] h_k*b_k; norms: [K] ||g_k||;
+    noise: [N]; a: scalar.  Returns y [N] f32.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    k, n = g.shape
+    scale = hb.astype(jnp.float32) / (norms.astype(jnp.float32) + 1e-12)
+    pad_rows = -(-n // block) * block - n
+    if pad_rows:
+        g = jnp.concatenate([g, jnp.zeros((k, pad_rows), g.dtype)], axis=1)
+        noise = jnp.concatenate([noise, jnp.zeros((pad_rows,), noise.dtype)])
+    y = ota_aggregate_blocked(g, scale, noise, jnp.asarray(a, jnp.float32),
+                              block=block, interpret=interpret)
+    return y[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Flash attention over [B, H, S, d] (kv head-expanded)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention_blocked(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(u, dt, a, bmat, cmat, *, block_d: int = 128,
+                   chunk: int = 256, interpret: Optional[bool] = None):
+    """Fused Mamba selective scan (see kernels/selective_scan.py)."""
+    from repro.kernels.selective_scan import selective_scan_blocked
+    interpret = _default_interpret() if interpret is None else interpret
+    d, s = u.shape[2], u.shape[1]
+    bd = block_d
+    while d % bd != 0:
+        bd //= 2
+    cs = chunk
+    while s % cs != 0:
+        cs //= 2
+    return selective_scan_blocked(u, dt, a, bmat, cmat, block_d=max(bd, 1),
+                                  chunk=max(cs, 1), interpret=interpret)

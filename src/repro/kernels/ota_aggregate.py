@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused OTA superposition.
+
+Computes, for a block of the flat gradient dimension,
+
+    y[j] = a * ( sum_k (h_k b_k / ||g_k||) * g[k, j] + z[j] )
+
+in one HBM pass: the K stacked device gradients stream through VMEM
+``(K, block)`` tiles, the per-device scale (amplification x channel x inverse
+norm — precomputed by ``grad_norm``) is applied in-register, the K-way
+reduction happens in VMEM, and the channel noise + receiver gain fuse into
+the same tile before write-back.  An unfused implementation reads the K
+gradients once for the scale, once for the sum and touches y three times;
+this kernel is the paper's entire eq. (10) as a single memory-bound sweep.
+
+Target: TPU VPU (8x128 lanes); validated on CPU via interpret=True against
+``ref.ota_aggregate_ref``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ota_kernel(g_ref, scale_ref, noise_ref, a_ref, out_ref):
+    g = g_ref[...].astype(jnp.float32)              # [K, blk]
+    scale = scale_ref[...].astype(jnp.float32)      # [K, 1]
+    acc = jnp.sum(g * scale, axis=0)                # superposition
+    z = noise_ref[...].astype(jnp.float32)[0]       # [blk]
+    out_ref[0, :] = a_ref[0, 0] * (acc + z)
+
+
+def ota_aggregate_blocked(g: jax.Array, scale: jax.Array, noise: jax.Array,
+                          a: jax.Array, *, block: int = 2048,
+                          interpret: bool = True) -> jax.Array:
+    """g: [K, N] stacked flat device gradients; scale: [K] per-device
+    h_k*b_k/||g_k||; noise: [N]; a: scalar receiver gain.  Returns y [N]."""
+    k, n = g.shape
+    blk = min(block, n)
+    if n % blk != 0:
+        raise ValueError(f"N={n} must be divisible by block={blk}")
+    grid = (n // blk,)
+    out = pl.pallas_call(
+        _ota_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, blk), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, blk), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(g, scale.reshape(k, 1), noise.reshape(1, n), a.reshape(1, 1))
+    return out[0]

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def grad_norm_ref(x: jax.Array) -> jax.Array:
+    """Global L2 norm of a flat (or any-shape) gradient vector."""
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def blocked_sumsq_ref(x: jax.Array, block_rows: int) -> jax.Array:
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    xb = x.reshape(rows // br, br * cols).astype(jnp.float32)
+    return jnp.sum(xb * xb, axis=1)
+
+
+def ota_aggregate_ref(g: jax.Array, scale: jax.Array, noise: jax.Array,
+                      a: jax.Array) -> jax.Array:
+    """y = a * (sum_k scale_k g_k + z), scale_k = h_k b_k / ||g_k||."""
+    acc = jnp.einsum("k,kn->n", scale.astype(jnp.float32),
+                     g.astype(jnp.float32))
+    return a * (acc + noise.astype(jnp.float32))
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None) -> jax.Array:
+    """q/k/v: [B, H, S, d].  Plain softmax attention, fp32 math."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok = ok & (k_pos <= q_pos)
+    if window is not None:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(u, dt, a, bmat, cmat):
+    """Sequential-scan oracle for the fused selective-scan kernel.
+
+    u/dt: [B,S,D]; a: [D,N]; bmat/cmat: [B,S,N] -> y [B,S,D] f32."""
+    b, s, d = u.shape
+    n = a.shape[1]
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, t):
+        da = jnp.exp(dtf[:, t, :, None] * a[None])              # [B,D,N]
+        dbu = (dtf[:, t] * uf[:, t])[..., None] * bmat[:, t, None, :]
+        h = da * h + dbu
+        y = jnp.sum(h * cmat[:, t, None, :], axis=-1)           # [B,D]
+        return h, y
+
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.transpose(1, 0, 2)

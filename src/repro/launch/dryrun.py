@@ -1,0 +1,404 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place the 512 placeholder
+# devices exist; tests and benchmarks see the real single CPU device.
+"""Multi-pod dry-run launcher (deliverable (e)).
+
+For every (architecture x input shape x mesh) combination this lowers and
+compiles the real train/prefill/decode step on the production mesh —
+16x16 = 256 chips single-pod and 2x16x16 = 512 chips multi-pod — with
+ShapeDtypeStruct stand-ins (zero allocation), then records
+``memory_analysis()`` / ``cost_analysis()`` / per-collective bytes for the
+roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import roofline as rl
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs import registry as reg
+from repro.core import amplification as amp
+from repro.core import channel as chan
+from repro.launch import mesh as mesh_lib
+from repro.launch import serve as serve_lib
+from repro.launch import train as train_lib
+from repro.models import transformer as T
+from repro.optim.optimizers import sgd
+from repro.distribution import sharding as sh
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _replicated(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def plan_for(cfg: ModelConfig, shape: InputShape, mesh, scheme: str):
+    """Decide aggregation axes / fsdp / context-parallel per DESIGN.md §5."""
+    multi_pod = "pod" in mesh.axis_names
+    plan = dict(scheme=scheme, aggregation_axes=None, fsdp_axis=None,
+                context_parallel=False)
+    if shape.kind == "train":
+        if cfg.name.startswith("llama3-405b"):
+            # params+grads per FL client exceed a 16-chip client: OTA clients
+            # would have to be pods with FSDP *inside* each client, but FSDP
+            # param sharding under a partial-manual shard_map trips an XLA
+            # SPMD-partitioner check failure (DESIGN.md §8; Shardy too).
+            # Default: mean + FSDP (proves the mesh shards & fits).  The
+            # OTA-over-pod schedule is recorded separately via
+            # scheme='normalized' (no FSDP; memory overflow flagged).
+            if scheme == "mean" or not multi_pod:
+                plan.update(scheme="mean",
+                            fsdp_axis=("pod", "data") if multi_pod else "data")
+            else:
+                plan.update(aggregation_axes=("pod",), fsdp_axis=None)
+        else:
+            plan.update(aggregation_axes=("pod", "data") if multi_pod else ("data",))
+    elif shape.kind == "decode" and shape.name == "long_500k":
+        # context-parallel KV cache only for hybrids (jamba); SWA and pure-
+        # recurrent archs have O(window)/O(1) state.
+        if cfg.is_hybrid:
+            plan.update(context_parallel=True)
+    return plan
+
+
+def ota_params_for(cfg: ModelConfig, mesh, axes) -> train_lib.OTARunParams:
+    k = 1
+    for a in axes:
+        k *= mesh.shape[a]
+    ch = chan.ChannelConfig(num_devices=k, channel_mean=1e-3)
+    h = np.asarray(chan.draw_channel(jax.random.PRNGKey(0), ch))
+    sol = amp.solve_problem3(h, ch.noise_var, min(cfg.param_count(), 10 ** 9),
+                             ch.b_max, tol=1e-8)
+    a_gain = 1.0 / float(np.sum(h * sol.b))
+    return train_lib.OTARunParams(h=h, b=sol.b, a=a_gain,
+                                  noise_var=ch.noise_var)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              scheme: str = "normalized",
+              overrides: Optional[dict] = None,
+              perf: Optional[dict] = None) -> dict:
+    """Lower + compile one (arch, shape, mesh) combination; returns a record.
+
+    ``overrides`` patches ModelConfig fields; ``perf`` carries the builder-
+    level §Perf levers: {"shard_cache_seq": bool, "reduce_dtype": str}.
+    """
+    perf = perf or {}
+    cfg = reg.get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    skip = reg.applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "scheme": scheme,
+           "status": "skip", "skip_reason": skip}
+    if skip:
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    plan = plan_for(cfg, shape, mesh, scheme)
+    rec["plan"] = {k: (list(v) if isinstance(v, tuple) else v) for k, v in plan.items()}
+    params_like = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = reg.input_specs(cfg, shape)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = sgd(1e-2)
+            opt_like = jax.eval_shape(lambda: opt.init(
+                jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                       params_like)))
+            ota = (ota_params_for(cfg, mesh, plan["aggregation_axes"])
+                   if plan["aggregation_axes"] else None)
+            if ota is not None and perf.get("reduce_dtype"):
+                import dataclasses as _dc
+                ota = _dc.replace(ota, reduce_dtype=perf["reduce_dtype"])
+            step, in_sh_fn = train_lib.build_train_step(
+                cfg, mesh, scheme=plan["scheme"],
+                aggregation_axes=plan["aggregation_axes"],
+                fsdp_axis=plan["fsdp_axis"], ota=ota, optimizer=opt)
+            batch_like = dict(specs)
+            rng_like = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            ps, os_, bs = in_sh_fn(params_like, opt_like, batch_like)
+            jitted = jax.jit(step,
+                             in_shardings=(ps, os_, bs, NamedSharding(mesh, P())),
+                             out_shardings=(ps, os_, None))
+            lowered = jitted.lower(params_like, opt_like, batch_like, rng_like)
+        elif shape.kind == "prefill":
+            step, in_sh_fn = serve_lib.build_prefill_step(cfg, mesh)
+            ps, bs = in_sh_fn(params_like, specs)
+            jitted = jax.jit(step, in_shardings=(ps, bs))
+            lowered = jitted.lower(params_like, specs)
+        else:  # decode
+            b = shape.global_batch
+            dp = mesh_lib.dp_axes(mesh)
+            n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+            batch_axes = dp if b % n_dp == 0 and b >= n_dp else ()
+            cache_like = jax.eval_shape(
+                lambda: T.init_cache(cfg, b, shape.seq_len,
+                                     cp_shards=mesh.shape["data"]
+                                     if plan["context_parallel"] else 1))
+            step, in_sh_fn = serve_lib.build_decode_step(
+                cfg, mesh, context_parallel=plan["context_parallel"],
+                cache_len=shape.seq_len,
+                shard_cache_seq=perf.get("shard_cache_seq", False))
+            tokens_like = {"tokens": specs["tokens"], "pos": specs["pos"]}
+            if cfg.is_encoder_decoder:
+                enc_like = jax.ShapeDtypeStruct(
+                    (b, specs["src_embeds"].shape[1], cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+                sh_tuple = in_sh_fn(params_like, cache_like, tokens_like,
+                                    {"enc": enc_like})
+                ps, cs, bs = sh_tuple[:3]
+                es = NamedSharding(mesh, P(tuple(batch_axes) if batch_axes else None))
+
+                def step_ed(params, cache, tokens, pos, enc_out):
+                    return step(params, cache, tokens, pos, enc_out=enc_out)
+
+                ts = NamedSharding(mesh, P(tuple(batch_axes) if batch_axes else None))
+                jitted = jax.jit(step_ed, in_shardings=(
+                    ps, cs, bs["tokens"], bs["pos"], es),
+                    out_shardings=(ts, cs))
+                lowered = jitted.lower(params_like, cache_like,
+                                       tokens_like["tokens"], tokens_like["pos"],
+                                       enc_like)
+            else:
+                ps, cs, bs = in_sh_fn(params_like, cache_like, tokens_like)
+                ts = NamedSharding(mesh, P(tuple(batch_axes) if batch_axes else None))
+                jitted = jax.jit(step, in_shardings=(ps, cs, bs["tokens"], bs["pos"]),
+                                 out_shardings=(ts, cs))
+                lowered = jitted.lower(params_like, cache_like,
+                                       tokens_like["tokens"], tokens_like["pos"])
+
+        compiled = lowered.compile()
+
+    n_active = cfg.active_param_count()
+    report = rl.analyze(f"{arch}/{shape_name}", compiled, chips,
+                        rl.model_flops_for(cfg, shape, n_active))
+    rec.update(status="ok",
+               lower_compile_s=round(time.time() - t0, 1),
+               roofline=report.to_dict(),
+               params=cfg.param_count(), active_params=n_active)
+    print(compiled.memory_analysis())
+    return rec
+
+
+def _depth_overrides(cfg: ModelConfig, mult: int, shape: InputShape) -> dict:
+    """Shrink a config to ``mult`` superblocks (encoder scaled alongside) and
+    bound every chunk-loop's trip count so the unrolled HLO stays small
+    (total op counts are chunking-invariant; only loop structure changes)."""
+    s = shape.seq_len
+    ov = {"num_layers": len(cfg.block_pattern) * mult, "unroll": True,
+          "attn_q_chunk": max(s // 4, 512),
+          "loss_seq_chunk": max(s // 4, 512),
+          "mlstm_chunk": max(s // 4, 512),
+          "mamba_chunk": max(s // 4, 512)}
+    if cfg.is_encoder_decoder:
+        ov["num_encoder_layers"] = mult
+    return ov
+
+
+def _slstm_missing_flops(cfg: ModelConfig, shape: InputShape, chips: int) -> float:
+    """Analytic correction for the one loop we cannot unroll: the sLSTM
+    time recurrence (S sequential steps; cost_analysis counts the body once).
+    Per step per layer: block-diag recurrent matmuls 8*B*di*dh + O(B*di)
+    elementwise.  Train counts fwd+recompute+bwd ~ 4x fwd (remat)."""
+    if not cfg.is_xlstm or shape.kind == "decode":
+        return 0.0
+    from repro.models.xlstm import xlstm_inner_dim
+    di = xlstm_inner_dim(cfg)
+    dh = di // cfg.num_heads
+    n_slstm = cfg.num_layers // cfg.slstm_every
+    b, s = shape.global_batch, shape.seq_len
+    per_step = 8.0 * b * di * dh + 24.0 * b * di
+    factor = 4.0 if shape.kind == "train" else 1.0
+    return factor * n_slstm * (s - 1) * per_step / chips
+
+
+def analyze_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+                scheme: str = "normalized",
+                overrides: Optional[dict] = None,
+                perf: Optional[dict] = None,
+                depths=(1, 2)) -> dict:
+    """Roofline-grade analysis: lower UNROLLED at 1 and 2 superblocks, fit
+    the per-superblock slope, extrapolate to full depth (EXPERIMENTS.md
+    §Methodology — XLA cost_analysis counts while-loop bodies once, so the
+    scanned production lowering cannot be used for op counts)."""
+    cfg = reg.get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    skip = reg.applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "mode": "analysis", "status": "skip", "skip_reason": skip}
+    chips = 512 if multi_pod else 256
+    meas = []
+    for mult in depths:
+        depth_ov = _depth_overrides(cfg, mult, shape)
+        # caller-specified levers win over the analysis chunk defaults
+        for k_ov in (overrides or {}):
+            depth_ov.pop(k_ov, None)
+        ov = dict(overrides or {})
+        ov.update(depth_ov)
+        rec = lower_one(arch, shape_name, multi_pod=multi_pod, scheme=scheme,
+                        overrides=ov, perf=perf)
+        if rec["status"] != "ok":
+            rec["mode"] = "analysis"
+            return rec
+        meas.append(rec["roofline"])
+
+    n_full = cfg.num_superblocks
+    d1, d2 = depths
+    def extrap(key):
+        v1, v2 = meas[0][key], meas[1][key]
+        slope = (v2 - v1) / (d2 - d1)
+        return max(v1 + slope * (n_full - d1), 0.0)
+
+    flops = extrap("flops_per_chip") + _slstm_missing_flops(cfg, shape, chips)
+    byts = extrap("bytes_per_chip")
+    coll = extrap("coll_bytes_per_chip")
+    breakdown = {k: meas[0]["coll_breakdown"][k]
+                 + (meas[1]["coll_breakdown"][k] - meas[0]["coll_breakdown"][k])
+                 * (n_full - 1) for k in meas[0]["coll_breakdown"]}
+    rep = rl.RooflineReport(
+        name=f"{arch}/{shape_name}", chips=chips, flops_per_chip=flops,
+        bytes_per_chip=byts, coll_bytes_per_chip=int(coll),
+        coll_breakdown=breakdown,
+        model_flops=rl.model_flops_for(cfg, shape, cfg.active_param_count()),
+        memory_analysis="<see fits-run record>").finalize()
+    return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "mode": "analysis", "scheme": scheme, "status": "ok",
+            "depth_points": [meas[0]["flops_per_chip"], meas[1]["flops_per_chip"]],
+            "n_superblocks": n_full, "roofline": rep.to_dict(),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+
+
+def run_isolated(pairs, args) -> list:
+    """Run each pair in its own subprocess (XLA partitioner check-failures
+    abort the process; isolation keeps the sweep alive) and merge records."""
+    import subprocess, sys, tempfile
+    records = []
+    for arch, shape in pairs:
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+            tmp = tf.name
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--scheme", args.scheme, "--out", tmp]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        if args.analysis:
+            cmd.append("--analysis")
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True, timeout=3000)
+            recs = []
+            if os.path.exists(tmp) and os.path.getsize(tmp):
+                with open(tmp) as f:
+                    recs = json.load(f)
+            if recs:
+                records.extend(recs)
+            else:
+                records.append({
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if args.multi_pod else "16x16",
+                    "status": "error",
+                    "error": f"subprocess exit {r.returncode}",
+                    "stderr_tail": r.stderr[-1200:]})
+        except subprocess.TimeoutExpired:
+            records.append({"arch": arch, "shape": shape,
+                            "mesh": "2x16x16" if args.multi_pod else "16x16",
+                            "status": "error", "error": "timeout"})
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        last = records[-1]
+        print(f"[{last['status']:5s}] {arch} x {shape} (isolated)", flush=True)
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--isolate", action="store_true",
+                    help="run every pair in its own subprocess")
+    ap.add_argument("--analysis", action="store_true",
+                    help="unrolled depth-extrapolated roofline analysis")
+    ap.add_argument("--scheme", default="normalized")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in reg.ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        pairs.append((args.arch, args.shape))
+
+    if args.isolate:
+        records = run_isolated(pairs, args)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(records, f, indent=2)
+            print(f"wrote {args.out}")
+        return
+
+    records = []
+    for arch, shape in pairs:
+        try:
+            if args.analysis:
+                rec = analyze_one(arch, shape, multi_pod=args.multi_pod,
+                                  scheme=args.scheme)
+            else:
+                rec = lower_one(arch, shape, multi_pod=args.multi_pod,
+                                scheme=args.scheme)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-2000:]}
+        records.append(rec)
+        ok = rec["status"]
+        extra = ""
+        if ok == "ok":
+            r = rec["roofline"]
+            extra = (f" compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms"
+                     f" coll={r['collective_s']*1e3:.2f}ms bottleneck={r['bottleneck']}")
+        elif ok == "skip":
+            extra = f" ({rec['skip_reason']})"
+        elif ok == "error":
+            extra = f" {rec['error'][:120]}"
+        print(f"[{ok:5s}] {arch} x {shape} on {rec['mesh']}{extra}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Production mesh definition (deliverable (e)).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import and only then calls this.
+
+Axes:
+  single-pod:  (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod:   (pod=2, data=16, model=16)     — 512 chips (two pods)
+
+FL-device mapping (DESIGN.md §2/§5): the OTA "mobile devices" are the shards
+of the aggregation axes — ('data',) on one pod (16 clients), ('pod',) or
+('pod','data') across pods.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (forced) host devices exist — tests."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"mesh {data}x{model} needs {data*model} devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Axes that carry the batch (and the FL devices): ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_fl_devices(mesh, aggregation_axes: Optional[Tuple[str, ...]] = None) -> int:
+    axes = aggregation_axes or dp_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

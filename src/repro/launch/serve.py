@@ -1,0 +1,163 @@
+"""Serving step builders: prefill and single-token decode (+ context-parallel
+long-context decode for the sub-quadratic architectures).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distribution import sharding as sh
+from repro.models import transformer as T
+
+PyTree = Any
+
+
+def _reshard_kv_seq(cache_specs_tree, batch_axes, seq_axis: str):
+    """Rewrite kv-cache specs [n_sb,B,S,Hkv,dh] to shard S over seq_axis."""
+    def one(spec):
+        if isinstance(spec, P) and len(spec) == 5:
+            return P(None, tuple(batch_axes) or None, seq_axis, None, None)
+        return spec
+    return jax.tree_util.tree_map(one, cache_specs_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def build_prefill_step(cfg: ModelConfig, mesh):
+    """prefill_step(params, batch) -> next-token ids [B].
+
+    Runs the full forward over the prompt and greedily samples the first new
+    token (KV-cache writing is accounted separately — EXPERIMENTS.md §Dry-run).
+    """
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def prefill_step(params, batch):
+        x = T.forward_hidden(params, cfg, batch)
+        from repro.models import layers as L
+        last = x[:, -1, :]
+        logits = (last @ L.unembed_matrix(params["emb"], cfg)).astype(jnp.float32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def in_shardings_fn(params_like, batch_like):
+        ps = sh.named_shardings(mesh, sh.param_specs(params_like, model_axis="model"), params_like)
+        bs = sh.named_shardings(mesh, sh.batch_specs(batch_like, batch_axes), batch_like)
+        return ps, bs
+
+    return prefill_step, in_shardings_fn
+
+
+def build_prefill_cache_step(cfg: ModelConfig, mesh, cache_len: int):
+    """prefill_cache_step(params, batch) -> (first new token ids [B], cache).
+
+    The production prefill: runs the prompt forward AND writes the decode
+    cache (exact handoff — tests/test_models.py::test_prefill_cache_handoff).
+    """
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def prefill_cache_step(params, batch):
+        from repro.models import layers as L
+        x, cache = T.prefill_with_cache(params, cfg, batch, cache_len)
+        last = x[:, -1, :]
+        logits = (last @ L.unembed_matrix(params["emb"], cfg)).astype(jnp.float32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def in_shardings_fn(params_like, batch_like):
+        ps = sh.named_shardings(mesh, sh.param_specs(params_like, model_axis="model"), params_like)
+        bs = sh.named_shardings(mesh, sh.batch_specs(batch_like, batch_axes), batch_like)
+        return ps, bs
+
+    return prefill_cache_step, in_shardings_fn
+
+
+def build_decode_step(cfg: ModelConfig, mesh, *, context_parallel: bool = False,
+                      cache_len: int = 0, shard_cache_seq: bool = False):
+    """decode_step(params, cache, tokens, pos[, enc_out]) ->
+    (next_tokens [B], new_cache).
+
+    ``context_parallel=True`` shards the KV-cache *sequence* axis over the
+    'data' mesh axis with a flash-decoding (shifted-softmax psum) merge — the
+    long_500k path for hybrid models whose KV cache cannot fit otherwise.
+
+    ``shard_cache_seq=True`` (beyond-paper §Perf lever): when the kv heads
+    cannot shard over the model axis, shard the cache *sequence* dim over it
+    instead (GSPMD-auto; requires cfg.decode_cache_update='select' so the
+    slot write stays gather-free).
+    """
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+    model_size = mesh.shape["model"]
+
+    if not context_parallel:
+        seq_axis = ("model" if shard_cache_seq
+                    and cfg.num_kv_heads % model_size != 0 else None)
+        if seq_axis:
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, decode_cache_seq_axis=seq_axis)
+
+        def decode_step(params, cache, tokens, pos, enc_out=None):
+            logits, new_cache = T.decode_step(params, cfg, cache, tokens, pos,
+                                              enc_out=enc_out)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+        def in_shardings_fn(params_like, cache_like, batch_like,
+                            enc_like=None):
+            ps = sh.named_shardings(mesh, sh.param_specs(params_like, model_axis="model"), params_like)
+            cache_sp = sh.cache_specs(
+                cache_like, batch_axes=batch_axes, model_axis="model",
+                num_kv_heads=cfg.num_kv_heads, model_size=model_size)
+            if seq_axis:
+                cache_sp = _reshard_kv_seq(cache_sp, batch_axes, seq_axis)
+            cs = sh.named_shardings(mesh, cache_sp, cache_like)
+            bs = sh.named_shardings(mesh, sh.batch_specs(batch_like, batch_axes), batch_like)
+            out = [ps, cs, bs]
+            if enc_like is not None:
+                out.append(sh.named_shardings(mesh, sh.batch_specs(enc_like, batch_axes), enc_like))
+            return tuple(out)
+
+        return decode_step, in_shardings_fn
+
+    # ----- context-parallel long decode -----
+    data_size = mesh.shape["data"]
+    local_len = cache_len // data_size
+
+    def per_shard(params, cache, tokens, pos):
+        offset = jax.lax.axis_index("data") * local_len
+        logits, new_cache = T.decode_step(params, cfg, cache, tokens, pos,
+                                          axis_name="data", shard_offset=offset)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    def cache_manual_specs(cache_like):
+        # kv caches: seq axis (2 after the stack axis) manually sharded over data
+        def one_path(path, leaf):
+            name = ""
+            for entry in reversed(path):
+                if isinstance(entry, jax.tree_util.DictKey):
+                    name = str(entry.key)
+                    break
+            if name in ("k", "v") and jnp.ndim(leaf) == 5:
+                return P(None, None, "data", None, None)
+            return P()
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+        return jax.tree_util.tree_unflatten(
+            treedef, [one_path(p, l) for p, l in flat])
+
+    def decode_step(params, cache, tokens, pos, enc_out=None):
+        specs = cache_manual_specs(cache)
+        f = jax.shard_map(per_shard, mesh=mesh,
+                          in_specs=(P(), specs, P(), P()),
+                          out_specs=(P(), specs),
+                          axis_names={"data"}, check_vma=False)
+        return f(params, cache, tokens, pos)
+
+    def in_shardings_fn(params_like, cache_like, batch_like, enc_like=None):
+        ps = sh.named_shardings(mesh, sh.param_specs(params_like, model_axis="model"), params_like)
+        cs = sh.named_shardings(mesh, sh.cache_specs(
+            cache_like, batch_axes=(), model_axis="model",
+            num_kv_heads=cfg.num_kv_heads, model_size=model_size,
+            seq_axis="data"), cache_like)
+        bs = sh.named_shardings(mesh, sh.batch_specs(batch_like, ()), batch_like)
+        return ps, cs, bs
+
+    return decode_step, in_shardings_fn

@@ -1,0 +1,136 @@
+"""Mesh train-step builder: the paper's OTA aggregation as the data-parallel
+gradient collective of a production training step.
+
+Two paths:
+
+* ``scheme='mean'`` — standard pjit data parallelism (+ optional FSDP); this
+  is the non-FL baseline and the only option when FSDP must span the same
+  axis that would otherwise separate FL clients (llama3-405b on one pod —
+  DESIGN.md §5).
+* OTA schemes — ``jax.shard_map`` with the FL-client axes *manual* and the
+  ``model`` axis auto (GSPMD tensor parallelism inside each client), the
+  gradient collective being ``ota_psum``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distribution import ota_collectives as oc
+from repro.distribution import sharding as sh
+from repro.models import transformer as T
+from repro.optim.optimizers import Optimizer, sgd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OTARunParams:
+    """Concrete per-run OTA parameters (from repro.core.amplification)."""
+    h: Any                       # [K] channel draws
+    b: Any                       # [K] amplification factors
+    a: float = 1.0
+    noise_var: float = 0.0
+    grad_bound: Optional[float] = None
+    # §Perf lever: dtype for the superposition psum (None = fp32, faithful)
+    reduce_dtype: Optional[str] = None
+
+
+def build_train_step(cfg: ModelConfig, mesh, *, scheme: str = "normalized",
+                     aggregation_axes: Optional[Sequence[str]] = None,
+                     fsdp_axis: Optional[str] = None,
+                     ota: Optional[OTARunParams] = None,
+                     optimizer: Optional[Optimizer] = None):
+    """Returns (train_step, in_shardings_fn).
+
+    train_step(params, opt_state, batch, rng) -> (params, opt_state, metrics)
+
+    ``in_shardings_fn(params_like, opt_like, batch_like)`` produces the
+    matching in_shardings pytree for jax.jit.
+    """
+    opt = optimizer or sgd(1e-2)
+
+    def param_sharding_specs(params_like):
+        return sh.param_specs(params_like, model_axis="model", fsdp_axis=fsdp_axis)
+
+    if scheme == "mean" or not aggregation_axes:
+        batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+        def train_step(params, opt_state, batch, rng):
+            def loss_fn(p):
+                loss, metrics = T.forward_loss(p, cfg, batch)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            metrics = dict(metrics, loss=loss)
+            return params, opt_state, metrics
+
+        def in_shardings_fn(params_like, opt_like, batch_like):
+            ps = sh.named_shardings(mesh, param_sharding_specs(params_like), params_like)
+            os_ = sh.named_shardings(mesh, param_sharding_specs(opt_like), opt_like) \
+                if opt_like is not None else None
+            bs = sh.named_shardings(mesh, sh.batch_specs(batch_like, batch_axes), batch_like)
+            return ps, os_, bs
+
+        return train_step, in_shardings_fn
+
+    # ----- OTA path -----
+    axes = tuple(aggregation_axes)
+    if ota is None:
+        raise ValueError("OTA schemes need OTARunParams")
+    h_arr = jnp.asarray(ota.h, jnp.float32)
+    b_arr = jnp.asarray(ota.b, jnp.float32)
+
+    def per_client(params, opt_state, batch, rng):
+        def loss_fn(p):
+            loss, metrics = T.forward_loss(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        y = oc.ota_psum(grads, scheme=scheme, axes=axes, h=h_arr, b=b_arr,
+                        a=ota.a, noise_var=ota.noise_var, key=rng,
+                        grad_bound=ota.grad_bound,
+                        reduce_dtype=ota.reduce_dtype)
+        params, opt_state = opt.update(y, opt_state, params)
+        k_total = 1
+        for ax in axes:
+            k_total *= jax.lax.axis_size(ax)
+        metrics = dict(metrics, loss=jax.lax.psum(loss, axes) / k_total,
+                       grad_norm=jnp.sqrt(oc._tree_sq_norm(grads)))
+        return params, opt_state, metrics
+
+    def train_step(params, opt_state, batch, rng):
+        batch_specs = sh.batch_specs(batch, axes)
+        f = jax.shard_map(per_client, mesh=mesh,
+                          in_specs=(P(), P(), batch_specs, P()),
+                          out_specs=(P(), P(), P()),
+                          axis_names=set(axes), check_vma=False)
+        return f(params, opt_state, batch, rng)
+
+    # Outer (pjit-level) batch sharding: the FL-client axes plus, when FSDP is
+    # on, the fsdp axis (batch is then data-parallel *within* each client too).
+    outer_batch_axes = axes + ((fsdp_axis,) if fsdp_axis and fsdp_axis not in axes
+                               else ())
+
+    def in_shardings_fn(params_like, opt_like, batch_like):
+        ps = sh.named_shardings(mesh, param_sharding_specs(params_like), params_like)
+        os_ = sh.named_shardings(mesh, param_sharding_specs(opt_like), opt_like) \
+            if opt_like is not None else None
+        bs = sh.named_shardings(mesh, sh.batch_specs(batch_like, outer_batch_axes), batch_like)
+        return ps, os_, bs
+
+    return train_step, in_shardings_fn
+
+
+def make_batch_from_specs(specs, cfg: ModelConfig):
+    """Turn input_specs into a loss-ready batch dict (labels defaulting to
+    tokens for LM-style next-token training when absent)."""
+    batch = dict(specs)
+    return batch

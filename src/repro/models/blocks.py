@@ -1,0 +1,205 @@
+"""Block-level assembly: pattern-driven superblocks, scanned over depth.
+
+A model is ``num_superblocks`` repetitions of ``cfg.block_pattern`` (a tuple
+of block-kind strings).  Parameters for each pattern *position* are stacked
+over superblocks and the stack is traversed with ``jax.lax.scan`` so the HLO
+stays O(pattern) instead of O(num_layers) — essential for 126-layer models
+compiled for 512 devices on a single-core CPU host.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+
+PyTree = Any
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> Dict:
+    ks = jax.random.split(key, 4)
+    mixer, _, mlp_kind = kind.partition("+")
+    p: Dict[str, Any] = {}
+    if mixer == "attn":
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif mixer == "xattn":  # decoder block of an encoder-decoder
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["ln_x"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"] = L.init_attention(ks[3], cfg, cross=True)
+    elif mixer == "mamba":
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["mamba"] = M.init_mamba(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["cell"] = X.init_mlstm(ks[0], cfg)
+        return p
+    elif mixer == "slstm":
+        p["ln1"] = L.init_rmsnorm(cfg.d_model)
+        p["cell"] = X.init_slstm(ks[0], cfg)
+        return p
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if mlp_kind == "dense":
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif mlp_kind == "moe":
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    return p
+
+
+def apply_block(params: Dict, cfg: ModelConfig, kind: str, x, *,
+                causal: bool = True, enc_out=None,
+                cache_len: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Full-sequence block application.  Returns (x, aux_loss, cache|None).
+
+    ``cache_len > 0`` collects this block's decode cache (prefill handoff),
+    structured exactly like ``init_block_cache``.
+    """
+    mixer, _, mlp_kind = kind.partition("+")
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    collect = cache_len > 0
+    if mixer in ("attn", "xattn"):
+        window = cfg.sliding_window
+        h_in = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if collect:
+            h, (k_kv, v_kv) = L.attention(params["attn"], cfg, h_in,
+                                          causal=causal, window=window,
+                                          return_kv=True)
+            ck, cv = L.prefill_kv_cache(cfg, k_kv, v_kv, x.shape[1], cache_len)
+            cache = {"k": ck, "v": cv}
+        else:
+            h = L.attention(params["attn"], cfg, h_in, causal=causal,
+                            window=window)
+        x = x + h
+        if mixer == "xattn":
+            h = L.attention(params["cross"], cfg,
+                            L.rmsnorm(params["ln_x"], x, cfg.norm_eps),
+                            causal=False, kv_x=enc_out)
+            x = x + h
+    elif mixer == "mamba":
+        h_in = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if collect:
+            h, (ssm, conv) = M.mamba_mix(params["mamba"], cfg, h_in,
+                                         return_state=True)
+            cache = {"ssm": ssm, "conv": conv.astype(L.dtype_of(cfg))}
+        else:
+            h = M.mamba_mix(params["mamba"], cfg, h_in)
+        x = x + h
+    elif mixer == "mlstm":
+        h_in = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if collect:
+            h, (c_mem, n_mem) = X.mlstm_mix(params["cell"], cfg, h_in,
+                                            return_state=True)
+            cache = {"C": c_mem, "n": n_mem}
+        else:
+            h = X.mlstm_mix(params["cell"], cfg, h_in)
+        return x + h, aux, cache
+    elif mixer == "slstm":
+        h_in = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if collect:
+            h, st = X.slstm_mix(params["cell"], cfg, h_in, return_state=True)
+            cache = dict(zip(("c", "n", "h", "m"), st))
+        else:
+            h = X.slstm_mix(params["cell"], cfg, h_in)
+        return x + h, aux, cache
+    if mlp_kind == "dense":
+        x = x + L.mlp(params["mlp"], cfg, L.rmsnorm(params["ln2"], x, cfg.norm_eps))
+    elif mlp_kind == "moe":
+        y, moe_aux = MOE.moe_mlp(params["moe"], cfg,
+                                 L.rmsnorm(params["ln2"], x, cfg.norm_eps))
+        x = x + y
+        aux = aux + MOE.aux_loss(cfg, moe_aux)
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# decode-step application (single token, carried caches)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     cp_shards: int = 1) -> Dict:
+    """Cache pytree for ONE layer of the given kind (unstacked)."""
+    mixer = kind.partition("+")[0]
+    if mixer in ("attn", "xattn"):
+        window = cfg.sliding_window
+        s = min(max_len, window) if window else max_len
+        if cp_shards > 1 and s % cp_shards != 0:
+            raise ValueError("cache length must divide the context-parallel shards")
+        c = {"k": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), L.dtype_of(cfg)),
+             "v": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), L.dtype_of(cfg))}
+        return c
+    if mixer == "mamba":
+        return {"ssm": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner),
+                                  L.dtype_of(cfg))}
+    if mixer == "mlstm":
+        di = X.xlstm_inner_dim(cfg)
+        dh = di // cfg.num_heads
+        return {"C": jnp.zeros((batch, cfg.num_heads, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, cfg.num_heads, dh), jnp.float32)}
+    if mixer == "slstm":
+        di = X.xlstm_inner_dim(cfg)
+        z = jnp.zeros((batch, di), jnp.float32)
+        return {"c": z, "n": z, "h": z, "m": jnp.full((batch, di), -1e30, jnp.float32)}
+    raise ValueError(kind)
+
+
+def apply_block_decode(params: Dict, cfg: ModelConfig, kind: str, x, cache: Dict,
+                       pos, *, enc_out=None, axis_name: Optional[str] = None,
+                       shard_offset=None) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token decode through one block.  x: [B,1,D]."""
+    mixer = kind.partition("+")[0]
+    new_cache = dict(cache)
+    if mixer in ("attn", "xattn"):
+        h, nk, nv = L.decode_attention(
+            params["attn"], cfg, L.rmsnorm(params["ln1"], x, cfg.norm_eps),
+            cache["k"], cache["v"], pos, window=cfg.sliding_window,
+            axis_name=axis_name, shard_offset=shard_offset)
+        new_cache["k"], new_cache["v"] = nk, nv
+        x = x + h
+        if mixer == "xattn":
+            h = L.attention(params["cross"], cfg,
+                            L.rmsnorm(params["ln_x"], x, cfg.norm_eps),
+                            causal=False, kv_x=enc_out,
+                            positions=jnp.full((1,), pos))
+            x = x + h
+    elif mixer == "mamba":
+        h, ssm, conv = M.mamba_decode_step(
+            params["mamba"], cfg, L.rmsnorm(params["ln1"], x, cfg.norm_eps),
+            cache["ssm"], cache["conv"])
+        new_cache["ssm"], new_cache["conv"] = ssm, conv
+        x = x + h
+        return _decode_mlp(params, cfg, kind, x), new_cache
+    elif mixer == "mlstm":
+        h, c_new, n_new = X.mlstm_decode_step(
+            params["cell"], cfg, L.rmsnorm(params["ln1"], x, cfg.norm_eps),
+            cache["C"], cache["n"])
+        new_cache["C"], new_cache["n"] = c_new, n_new
+        return x + h, new_cache
+    elif mixer == "slstm":
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+        h, new_state = X.slstm_decode_step(
+            params["cell"], cfg, L.rmsnorm(params["ln1"], x, cfg.norm_eps), state)
+        new_cache = dict(zip(("c", "n", "h", "m"), new_state))
+        return x + h, new_cache
+    return _decode_mlp(params, cfg, kind, x), new_cache
+
+
+def _decode_mlp(params, cfg, kind, x):
+    mlp_kind = kind.partition("+")[2]
+    if mlp_kind == "dense":
+        x = x + L.mlp(params["mlp"], cfg, L.rmsnorm(params["ln2"], x, cfg.norm_eps))
+    elif mlp_kind == "moe":
+        y, _ = MOE.moe_mlp(params["moe"], cfg, L.rmsnorm(params["ln2"], x, cfg.norm_eps))
+        x = x + y
+    return x

@@ -1,0 +1,397 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / decode), SwiGLU MLP, embeddings.
+
+Functional style: ``init_*`` builds parameter dicts, ``apply``-style functions
+are pure.  Attention is *query-chunked* (blockwise over the query axis with a
+rematerialized scan) so that 32k-sequence prefill never materializes an
+S x S score matrix — the pure-JAX analogue of the Pallas flash kernel in
+``repro.kernels.flash_attention`` (which is the TPU hot-path implementation;
+this path is what the dry-run lowers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def loop_map(f, xs, unroll: bool = False):
+    """jax.lax.map with an unroll switch (analysis mode: true op counts)."""
+    _, ys = jax.lax.scan(lambda c, x: (c, f(x)), None, xs,
+                         unroll=True if unroll else 1)
+    return ys
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # [Dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., :, None, :]                 # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * scale).astype(dt),
+        "wk": (jax.random.normal(k2, (d, hkv * hd)) * scale).astype(dt),
+        "wv": (jax.random.normal(k3, (d, hkv * hd)) * scale).astype(dt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * scale / math.sqrt(2 * cfg.num_layers)).astype(dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, kv_x=None):
+    """Returns q [B,S,H,Dh], k/v [B,Skv,Hkv,Dh]."""
+    b, s, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    skv = kv_x.shape[1]
+    q = x @ params["wq"]
+    k = kv_x @ params["wk"]
+    v = kv_x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _expand_kv(cfg: ModelConfig, k):
+    """[B,S,Hkv,Dh] -> [B,S,H,Dh] by repeating each kv head q_per_kv times."""
+    if cfg.q_per_kv == 1:
+        return k
+    return jnp.repeat(k, cfg.q_per_kv, axis=2)
+
+
+def _attend_chunk(q, k, v, bias, softcap: Optional[float]):
+    """q: [B,C,H,Dh], k/v: [B,Skv,H,Dh], bias: [C,Skv] additive mask."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = scores + bias[None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive mask bias [len(q_pos), len(k_pos)] in fp32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(params, cfg: ModelConfig, x, *, causal: bool = True,
+              positions=None, kv_x=None, kv_positions=None,
+              window: Optional[int] = None, return_kv: bool = False):
+    """Full-sequence attention, query-chunked.  x: [B,S,D] -> [B,S,D].
+
+    ``return_kv=True`` additionally returns the (rope'd, unexpanded) k/v for
+    prefill->decode cache handoff.
+    """
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, cfg, x, kv_x)
+    skv = k.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv_positions is None:
+        kv_positions = positions if kv_x is None else jnp.arange(skv)
+    if kv_x is None:  # self-attention: rope on q and k
+        q = apply_rope(q, jnp.broadcast_to(positions, (s,)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(kv_positions, (skv,)), cfg.rope_theta)
+    kv_for_cache = (k, v) if return_kv else None
+    k = _expand_kv(cfg, k)
+    v = _expand_kv(cfg, v)
+
+    cq = min(cfg.attn_q_chunk, s)
+    if s % cq != 0:
+        cq = s  # fall back to single chunk for ragged smoke shapes
+    n_chunks = s // cq
+    q = q.reshape(b, n_chunks, cq, cfg.num_heads, cfg.head_dim)
+    qpos = jnp.asarray(positions).reshape(n_chunks, cq)
+
+    def one_chunk(args):
+        qc, qp = args
+        bias = _mask_bias(qp, kv_positions, causal, window)
+        return _attend_chunk(qc, k, v, bias, cfg.attn_logit_softcap)
+
+    body = jax.checkpoint(one_chunk) if cfg.remat else one_chunk
+    out = loop_map(body, (q.transpose(1, 0, 2, 3, 4), qpos), unroll=cfg.unroll)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, cfg.num_heads * cfg.head_dim)
+    out = out @ params["wo"]
+    if return_kv:
+        return out, kv_for_cache
+    return out
+
+
+def prefill_kv_cache(cfg: ModelConfig, k, v, seq_len: int, cache_len: int):
+    """Arrange prefill k/v [B,S,Hkv,dh] into the decode cache layout.
+
+    Full-attention: left-aligned, zero-padded to cache_len.  Sliding window:
+    rotating buffer where slot i holds the latest position p < S with
+    p % W == i — exactly what decode_attention's slot arithmetic expects.
+    """
+    b, s, hkv, dh = k.shape
+    if cfg.sliding_window:
+        w = min(cache_len, cfg.sliding_window)
+        slots = jnp.arange(w)
+        # latest p < s with p % w == slot
+        p = s - 1 - ((s - 1 - slots) % w)
+        ck = jnp.take(k, p, axis=1)
+        cv = jnp.take(v, p, axis=1)
+        # positions p < 0 impossible when s >= w; for s < w zero out unused
+        valid = (p >= 0) & (p < s)
+        ck = jnp.where(valid[None, :, None, None], ck, 0)
+        cv = jnp.where(valid[None, :, None, None], cv, 0)
+        return ck, cv
+    pad = cache_len - s
+    if pad > 0:
+        zeros = jnp.zeros((b, pad, hkv, dh), k.dtype)
+        return (jnp.concatenate([k, zeros], axis=1),
+                jnp.concatenate([v, zeros], axis=1))
+    return k[:, :cache_len], v[:, :cache_len]
+
+
+# --- decode path -----------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=None):
+    """Stacked KV cache for the scanned layer stack: [L, B, S, Hkv, Dh]."""
+    dt = dtype or dtype_of(cfg)
+    window = cfg.sliding_window
+    s = min(max_len, window) if window else max_len
+    shape = (n_layers, batch, s, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_attention(params, cfg: ModelConfig, x, cache_k, cache_v, pos,
+                     *, window: Optional[int] = None, axis_name: Optional[str] = None,
+                     shard_offset=None):
+    """Single-token decode.  x: [B,1,D]; cache_k/v: [B,Scache,Hkv,Dh]; pos: scalar
+    current position.  Returns (out [B,1,D], new_k, new_v).
+
+    With ``window`` set, the cache is a rotating buffer of length window and the
+    slot is ``pos % window``.  With ``axis_name`` set, the cache *sequence* axis
+    is sharded across that mesh axis (context-parallel decode): each shard
+    attends over its local slice and partial results merge with a shifted-
+    softmax (flash-decoding) ``psum``; ``shard_offset`` gives the global
+    position of this shard's first cache slot.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, cfg, x)
+    posv = jnp.full((1,), pos)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    s_cache = cache_k.shape[1]
+    if window:
+        slot = pos % s_cache
+    else:
+        slot = pos
+
+    if axis_name is None:
+        if cfg.decode_cache_update == "select":
+            # masked full-cache write: shardable across a seq-sharded cache
+            # (no cross-shard dynamic_update_slice -> no GSPMD gathers)
+            sel = (jnp.arange(s_cache) == slot)[None, :, None, None]
+            cache_k = jnp.where(sel, k_new.astype(cache_k.dtype), cache_k)
+            cache_v = jnp.where(sel, v_new.astype(cache_v.dtype), cache_v)
+        else:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+        kpos = jnp.arange(s_cache)
+        if window:
+            # rotating buffer: slot i holds the latest position p with p % W == i
+            kpos = jnp.where(kpos <= slot, pos - slot + kpos, pos - slot - s_cache + kpos)
+        valid = (kpos >= 0) & (kpos <= pos)
+        if window:
+            valid = valid & (pos - kpos < window)
+        bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, :]
+        k = _expand_kv(cfg, cache_k)
+        v = _expand_kv(cfg, cache_v)
+        if cfg.decode_cache_seq_axis is not None:
+            # Flash-decoding sharding, pinned at the decisive tensor: the
+            # SCORES must be sharded over the cache's seq dim (the softmax
+            # reductions are then small psums and the o-contraction one small
+            # all-reduce).  Pinning q or the cache is NOT enough — GSPMD still
+            # picks head-sharded scores and all-gathers the multi-GB cache
+            # (both tried and refuted — EXPERIMENTS.md §Perf).
+            from jax.sharding import PartitionSpec as SP
+            ax = cfg.decode_cache_seq_axis
+            scale = 1.0 / math.sqrt(q.shape[-1])
+            scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                                k.astype(jnp.float32)) * scale
+            if cfg.attn_logit_softcap is not None:
+                scores = cfg.attn_logit_softcap * jnp.tanh(
+                    scores / cfg.attn_logit_softcap)
+            scores = scores + bias[None, None, :, :]
+            scores = jax.lax.with_sharding_constraint(
+                scores, SP(None, None, None, ax))
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+        else:
+            out = _attend_chunk(q, k, v, bias, cfg.attn_logit_softcap)
+    else:
+        # context-parallel: each shard owns cache slots [offset, offset + s_cache)
+        in_shard = (slot >= shard_offset) & (slot < shard_offset + s_cache)
+        local_slot = jnp.clip(slot - shard_offset, 0, s_cache - 1)
+        upd_k = jnp.where(in_shard, k_new, jax.lax.dynamic_slice_in_dim(cache_k, local_slot, 1, 1))
+        upd_v = jnp.where(in_shard, v_new, jax.lax.dynamic_slice_in_dim(cache_v, local_slot, 1, 1))
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, upd_k, local_slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, upd_v, local_slot, axis=1)
+        kpos = shard_offset + jnp.arange(s_cache)
+        valid = kpos <= pos
+        bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, :]
+        k = _expand_kv(cfg, cache_k)
+        v = _expand_kv(cfg, cache_v)
+        # local flash partials
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale + bias[None, None]
+        m_loc = jnp.max(scores, axis=-1, keepdims=True)
+        m_glob = jax.lax.pmax(m_loc, axis_name)
+        p = jnp.exp(scores - m_glob)
+        num = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+        den = jnp.sum(p, axis=-1)[..., None].transpose(0, 2, 1, 3)  # [B,1,H,1]
+        num = jax.lax.psum(num.astype(jnp.float32), axis_name)
+        den = jax.lax.psum(den.astype(jnp.float32), axis_name)
+        out = (num / jnp.maximum(den, 1e-30)).astype(x.dtype)
+
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) / math.sqrt(d)).astype(dt),
+        "w_up": (jax.random.normal(k2, (d, f)) / math.sqrt(d)).astype(dt),
+        "w_down": (jax.random.normal(k3, (f, d)) / math.sqrt(f)
+                   / math.sqrt(2 * cfg.num_layers)).astype(dt),
+    }
+
+
+def mlp(params, cfg: ModelConfig, x):
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    return (act(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+
+
+def init_embeddings(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    p = {"tok": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["unemb"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab_size))
+                      / math.sqrt(cfg.d_model)).astype(dt)
+    if cfg.modality:
+        p["modal_proj"] = (jax.random.normal(k3, (cfg.modal_embed_dim, cfg.d_model))
+                           / math.sqrt(cfg.modal_embed_dim)).astype(dt)
+    return p
+
+
+def embed(params, cfg: ModelConfig, tokens):
+    return params["tok"][tokens]
+
+
+def unembed_matrix(params, cfg: ModelConfig):
+    return params["tok"].T if cfg.tie_embeddings else params["unemb"]
+
+
+def chunked_softmax_xent(x, w_unemb, labels, chunk: int, mask=None,
+                         unroll: bool = False):
+    """Next-token cross-entropy without materializing [B,S,V] logits.
+
+    x: [B,S,D] final hidden states; labels: [B,S] int32; returns mean nll.
+    Scans over sequence chunks; each chunk's [B,c,V] logits live transiently
+    (rematerialized in backward).
+    """
+    b, s, d = x.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        c = s
+    n = s // c
+    xc = x.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, c).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mc = mask.reshape(b, n, c).transpose(1, 0, 2)
+
+    def one(args):
+        xx, ll, mm = args
+        logits = (xx @ w_unemb).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mm), jnp.sum(mm)
+
+    body = jax.checkpoint(one)
+    nll, cnt = loop_map(body, (xc, lc, mc), unroll=unroll)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(cnt), 1.0)

@@ -1,0 +1,160 @@
+"""Mamba (S6) selective-state-space block, TPU-adapted.
+
+The CUDA reference fuses the selective scan into one kernel with shared-memory
+chunking; the TPU-native adaptation here is a *chunked associative scan*:
+within a chunk the recurrence ``h_t = A_t h_{t-1} + B_t x_t`` (A_t diagonal)
+runs as ``jax.lax.associative_scan`` (log-depth, maps onto the VPU), and a
+``jax.lax.scan`` carries the [B, D_inner, N] state across chunks so the
+[B, S, D_inner, N] intermediate never exists at full sequence length — the
+same working-set discipline the GPU kernel achieves with SRAM tiling.
+
+Decode is the exact O(1)-state single-step recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    r = cfg.mamba_dt_rank
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    # S4D-real initialization for A (negative real spectrum).
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) / math.sqrt(d)).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, di)) /
+                   math.sqrt(cfg.mamba_d_conv)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * n)) / math.sqrt(di)).astype(dt),
+        "dt_proj_w": (jax.random.normal(ks[3], (r, di)) * (r ** -0.5)).astype(dt),
+        "dt_proj_b": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))).astype(jnp.float32),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) / math.sqrt(di)
+                     / math.sqrt(2 * cfg.num_layers)).astype(dt),
+    }
+
+
+def _ssm_inputs(params, cfg: ModelConfig, u):
+    """u: [B, C, Di] conv+silu activations -> (dA [B,C,Di,N], dBu, C_mat [B,C,N])."""
+    n, r = cfg.mamba_d_state, cfg.mamba_dt_rank
+    proj = u @ params["x_proj"]                                  # [B,C,r+2N]
+    dt_r, b_mat, c_mat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus((dt_r @ params["dt_proj_w"]).astype(jnp.float32)
+                         + params["dt_proj_b"])                  # [B,C,Di]
+    a = -jnp.exp(params["A_log"])                                # [Di,N]
+    da = jnp.exp(dt[..., None] * a[None, None])                  # [B,C,Di,N]
+    dbu = (dt * u.astype(jnp.float32))[..., :, None] * b_mat.astype(jnp.float32)[..., None, :]
+    return da, dbu, c_mat.astype(jnp.float32)
+
+
+def _chunk_scan(carry_h, da, dbu):
+    """Associative scan of h_t = da_t * h_{t-1} + dbu_t within one chunk.
+
+    carry_h: [B, Di, N]; da/dbu: [B, C, Di, N].  Returns (h_all [B,C,Di,N], h_last).
+    """
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+    h_all = a_cum * carry_h[:, None] + b_cum
+    return h_all, h_all[:, -1]
+
+
+def mamba_mix(params, cfg: ModelConfig, x, chunk: int = None,
+              return_state: bool = False):
+    """Full-sequence Mamba mixing.  x: [B,S,D] -> [B,S,D].
+
+    ``return_state=True`` additionally returns (ssm_state [B,Di,N],
+    conv_tail [B,K-1,Di]) for prefill->decode handoff."""
+    chunk = chunk or cfg.mamba_chunk
+    b, s, d = x.shape
+    di, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                             # [B,S,Di] each
+
+    # depthwise causal conv, kernel K: pad left K-1
+    kk = cfg.mamba_d_conv
+    u_pad = jnp.pad(u, ((0, 0), (kk - 1, 0), (0, 0)))
+    u_conv = sum(u_pad[:, i:i + s, :] * params["conv_w"][i] for i in range(kk))
+    u_conv = jax.nn.silu(u_conv + params["conv_b"])
+
+    if cfg.mamba_shard_channels is not None:
+        from jax.sharding import PartitionSpec as P
+        u_conv = jax.lax.with_sharding_constraint(
+            u_conv, P(None, None, cfg.mamba_shard_channels))
+
+    c = min(chunk, s)
+    if s % c != 0:
+        c = s
+    nc = s // c
+    u_chunks = u_conv.reshape(b, nc, c, di).transpose(1, 0, 2, 3)  # [nc,B,C,Di]
+
+    scan_dt = jnp.dtype(cfg.mamba_scan_dtype)
+
+    def step(h, u_c):
+        da, dbu, c_mat = _ssm_inputs(params, cfg, u_c)
+        h_all, h_last = _chunk_scan(h.astype(scan_dt), da.astype(scan_dt),
+                                    dbu.astype(scan_dt))
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c_mat.astype(scan_dt))
+        return h_last.astype(jnp.float32), y.astype(jnp.float32)
+
+    body = jax.checkpoint(step) if cfg.remat else step
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, u_chunks, unroll=True if cfg.unroll else 1)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = y + u_conv.astype(jnp.float32) * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    if return_state:
+        # decode's conv_state holds the last K-1 PRE-conv inputs u
+        conv_tail = u[:, -(kk - 1):, :]
+        return out, (h_last, conv_tail)
+    return out
+
+
+# --- decode ---------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, n_layers: int):
+    di, n, kk = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "ssm": jnp.zeros((n_layers, batch, di, n), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, kk - 1, di), dtype_of(cfg)),
+    }
+
+
+def mamba_decode_step(params, cfg: ModelConfig, x, ssm_state, conv_state
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B,1,D]; ssm_state: [B,Di,N]; conv_state: [B,K-1,Di]."""
+    b = x.shape[0]
+    di, n, kk = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                             # [B,1,Di]
+
+    window = jnp.concatenate([conv_state, u], axis=1)            # [B,K,Di]
+    u_conv = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+    u_conv = jax.nn.silu(u_conv)[:, None, :]                     # [B,1,Di]
+    new_conv = window[:, 1:, :]
+
+    da, dbu, c_mat = _ssm_inputs(params, cfg, u_conv)            # [B,1,Di,N]
+    h = da[:, 0] * ssm_state + dbu[:, 0]                         # [B,Di,N]
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None, :]
+    y = y + u_conv.astype(jnp.float32) * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"], h, new_conv

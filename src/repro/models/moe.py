@@ -1,0 +1,101 @@
+"""Top-k mixture-of-experts MLP with capacity-bounded scatter dispatch.
+
+Dispatch is Megablocks-style-in-spirit but JAX-native: flatten the (token,
+slot) pairs, compute each pair's position within its expert via a one-hot
+cumsum, scatter tokens into an ``[E, C, D]`` buffer (C = capacity), run all
+experts as one batched einsum (expert axis shards over the ``model`` mesh
+axis — expert parallelism), and gather back with the router's combine
+weights.  Tokens beyond capacity are dropped (standard capacity-factor
+semantics); the aux load-balance loss keeps the router near-uniform so drops
+stay rare.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "router": (jax.random.normal(k0, (d, e)) * 0.02).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k1, (e, d, f)) / math.sqrt(d)).astype(dt),
+        "w_up": (jax.random.normal(k2, (e, d, f)) / math.sqrt(d)).astype(dt),
+        "w_down": (jax.random.normal(k3, (e, f, d)) / math.sqrt(f)
+                   / math.sqrt(2 * cfg.num_layers)).astype(dt),
+    }
+
+
+def capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(num_tokens * cfg.experts_per_token / cfg.num_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8 (TPU lane-friendly)
+
+
+def router_probs(params, x_flat):
+    """x_flat: [T, D] -> probs [T, E] (router math in fp32, per common practice)."""
+    logits = x_flat.astype(jnp.float32) @ params["router"]
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def moe_mlp(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, dict]:
+    """x: [B,S,D] -> (y [B,S,D], aux {load_balance_loss, router_z_loss})."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.experts_per_token
+    x_flat = x.reshape(t, d)
+
+    probs, logits = router_probs(params, x_flat)                 # [T, E]
+    top_p, top_e = jax.lax.top_k(probs, k)                       # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)       # renormalize
+
+    # --- aux losses (fp32) ---
+    # load balance (Switch-style): E * sum_e (frac tokens to e) * (mean prob e)
+    assign = jnp.zeros((t, e), jnp.float32).at[
+        jnp.arange(t)[:, None], top_e].set(1.0)                  # [T, E] multi-hot
+    frac_tokens = jnp.mean(assign, axis=0) / k
+    mean_prob = jnp.mean(probs, axis=0)
+    lb_loss = e * jnp.sum(frac_tokens * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    aux = {"load_balance_loss": lb_loss, "router_z_loss": z_loss}
+
+    # --- dispatch ---
+    cap = capacity(t, cfg)
+    flat_e = top_e.reshape(t * k)                                # expert of each pair
+    # position of each (token, slot) within its expert, in pair order
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # [T*k, E]
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)             # exclusive cumsum
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+    # clip dropped pairs into slot cap-1 of a scratch row? scatter with drop mode:
+    dest_e = jnp.where(keep, flat_e, 0)
+    dest_c = jnp.where(keep, flat_pos, cap)                      # cap row index == drop
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    buf = buf.at[dest_e, dest_c].set(x_flat[tok_idx], mode="drop")
+    buf = buf[:, :cap, :]                                        # [E, C, D]
+
+    # --- expert compute (expert-parallel einsum over the leading E axis) ---
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y_buf = jnp.einsum("ecf,efd->ecd", act(gate) * up, params["w_down"])
+
+    # --- combine ---
+    y_pairs = y_buf[dest_e, jnp.minimum(dest_c, cap - 1)]        # [T*k, D]
+    w_pairs = (top_p.reshape(t * k) * keep).astype(y_pairs.dtype)
+    y_flat = jax.ops.segment_sum(y_pairs * w_pairs[:, None], tok_idx, num_segments=t)
+    return y_flat.reshape(b, s, d), aux
+
+
+def aux_loss(cfg: ModelConfig, aux: dict):
+    return (cfg.router_aux_coef * aux["load_balance_loss"]
+            + cfg.router_z_coef * aux["router_z_loss"])

@@ -1,0 +1,85 @@
+"""The paper's own experiment models (Sec. V).
+
+* Case I: a 3-fully-connected-layer classifier with one ReLU activation and a
+  SoftMax output (as in [7]) for 10-digit recognition — smooth, non-convex.
+* Case II: ridge regression — smooth and strongly convex (strong-convexity
+  modulus M = lam + lambda_min(X^T X / D), smoothness L = lam +
+  lambda_max(X^T X / D), both computable exactly for tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Case I model: 784 -> hidden -> hidden -> 10 MLP with a ReLU (paper's classifier)
+
+
+def init_mlp_classifier(key, in_dim: int = 784, hidden: int = 64,
+                        num_classes: int = 10) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1, s2, s3 = (1 / math.sqrt(in_dim), 1 / math.sqrt(hidden), 1 / math.sqrt(hidden))
+    return {
+        "w1": jax.random.normal(k1, (in_dim, hidden)) * s1,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, hidden)) * s2,
+        "b2": jnp.zeros((hidden,)),
+        "w3": jax.random.normal(k3, (hidden, num_classes)) * s3,
+        "b3": jnp.zeros((num_classes,)),
+    }
+
+
+def mlp_classifier_logits(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ params["w1"] + params["b1"]
+    h = jax.nn.relu(h)
+    h = h @ params["w2"] + params["b2"]
+    return h @ params["w3"] + params["b3"]
+
+
+def mlp_classifier_loss(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Softmax cross-entropy; y: [B] int labels."""
+    logits = mlp_classifier_logits(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def mlp_classifier_accuracy(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(mlp_classifier_logits(params, x), -1) == y)
+                    .astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Case II model: ridge regression
+
+
+def init_ridge(key, dim: int) -> Dict:
+    return {"w": jax.random.normal(key, (dim,)) * 0.1}
+
+
+def ridge_loss(params: Dict, x: jnp.ndarray, y: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """(1/2B) ||X w - y||^2 + (lam/2) ||w||^2."""
+    r = x @ params["w"] - y
+    return 0.5 * jnp.mean(r * r) + 0.5 * lam * jnp.sum(params["w"] ** 2)
+
+
+def ridge_constants(x_all: jnp.ndarray, lam: float) -> Tuple[float, float, float]:
+    """Exact (L, M) smoothness/strong-convexity constants of the *global* ridge
+    loss, plus the optimal loss value's hessian condition helper.
+
+    Hessian = X^T X / D + lam I  ->  L = lmax + lam, M = lmin + lam.
+    """
+    h = (x_all.T @ x_all) / x_all.shape[0]
+    eig = jnp.linalg.eigvalsh(h)
+    return float(eig[-1] + lam), float(eig[0] + lam), float(eig[-1] / jnp.maximum(eig[0], 1e-12))
+
+
+def ridge_optimum(x_all: jnp.ndarray, y_all: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """Closed-form global minimizer of the global ridge loss."""
+    d = x_all.shape[1]
+    a = x_all.T @ x_all / x_all.shape[0] + lam * jnp.eye(d)
+    b = x_all.T @ y_all / x_all.shape[0]
+    return jnp.linalg.solve(a, b)

@@ -1,0 +1,216 @@
+"""Top-level model API: init / loss forward / prefill / decode for every
+assigned architecture family (decoder LM, hybrid, xLSTM, MoE, enc-dec, VLM
+and audio backbones with stub frontends).
+
+All depth traversal is ``jax.lax.scan`` over superblock-stacked parameters
+(see ``blocks.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _stack_superblocks(keys, cfg: ModelConfig):
+    """Returns a tuple (per pattern position) of superblock-stacked param dicts."""
+    pattern = cfg.block_pattern
+    per_pos = []
+    for pos, kind in enumerate(pattern):
+        blocks = [B.init_block(jax.random.fold_in(keys[i], pos), cfg, kind)
+                  for i in range(cfg.num_superblocks)]
+        per_pos.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks))
+    return tuple(per_pos)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    k_emb, k_blocks, k_enc = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, cfg.num_superblocks)
+    p = {
+        "emb": L.init_embeddings(k_emb, cfg),
+        "blocks": _stack_superblocks(keys, cfg),
+        "final_ln": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(k_enc, cfg.num_encoder_layers)
+        enc_blocks = [B.init_block(enc_keys[i], cfg, "attn+dense")
+                      for i in range(cfg.num_encoder_layers)]
+        p["encoder"] = {
+            "blocks": (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *enc_blocks),),
+            "final_ln": L.init_rmsnorm(cfg.d_model),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared depth scan
+
+
+def _seq_shard(cfg: ModelConfig, x):
+    """Sequence-parallel activation constraint (cfg.seq_shard_activations)."""
+    if cfg.seq_shard_activations is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(None, cfg.seq_shard_activations, None))
+
+
+def _run_stack(blocks, cfg: ModelConfig, pattern, x, *, causal=True,
+               enc_out=None, cache_len: int = 0):
+    """Depth scan.  With ``cache_len > 0`` the scan additionally emits every
+    block's decode cache (prefill handoff), stacked over superblocks —
+    matching ``init_cache`` layout."""
+    def superblock(carry, blkparams):
+        x, aux = carry
+        x = _seq_shard(cfg, x)
+        caches = []
+        for pos, kind in enumerate(pattern):
+            x, a, c = B.apply_block(blkparams[pos], cfg, kind, x,
+                                    causal=causal, enc_out=enc_out,
+                                    cache_len=cache_len)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), (tuple(caches) if cache_len else None)
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(superblock, policy=policy)
+    else:
+        body = superblock
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    blocks, unroll=True if cfg.unroll else 1)
+    if cache_len:
+        return x, aux, caches
+    return x, aux
+
+
+def _encode(params, cfg: ModelConfig, src_embeds):
+    """Encoder over stub modality embeddings.  src_embeds: [B, S_enc, E_modal]."""
+    x = src_embeds @ params["emb"]["modal_proj"]
+    x, _ = _run_stack(params["encoder"]["blocks"], cfg, ("attn+dense",), x,
+                      causal=False)
+    return L.rmsnorm(params["encoder"]["final_ln"], x, cfg.norm_eps)
+
+
+def _decoder_inputs(params, cfg: ModelConfig, batch: Dict):
+    """Embed tokens, prepend projected modality tokens for VLM-style models."""
+    x = L.embed(params["emb"], cfg, batch["tokens"])
+    if cfg.modality == "vision":
+        img = batch["modal_embeds"] @ params["emb"]["modal_proj"]
+        x = jnp.concatenate([img.astype(x.dtype), x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# training forward (full sequence -> mean NLL + aux)
+
+
+def forward_loss(params, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """batch: tokens [B,St], labels [B,St] (+ modal_embeds / src_embeds).
+
+    Returns (scalar loss, metrics dict).
+    """
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["src_embeds"])
+    x = _decoder_inputs(params, cfg, batch)
+    x, aux = _run_stack(params["blocks"], cfg, cfg.block_pattern, x,
+                        causal=True, enc_out=enc_out)
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    if cfg.modality == "vision":  # loss only over the text positions
+        x = x[:, -batch["tokens"].shape[1]:, :]
+    w_un = L.unembed_matrix(params["emb"], cfg)
+    nll = L.chunked_softmax_xent(x, w_un, batch["labels"], cfg.loss_seq_chunk,
+                                 batch.get("loss_mask"), unroll=cfg.unroll)
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: Dict) -> jnp.ndarray:
+    """Prefill: final hidden states [B,S,D] (no loss) — serving prefill path."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["src_embeds"])
+    x = _decoder_inputs(params, cfg, batch)
+    x, _ = _run_stack(params["blocks"], cfg, cfg.block_pattern, x,
+                      causal=True, enc_out=enc_out)
+    return L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+
+
+def prefill_with_cache(params, cfg: ModelConfig, batch: Dict,
+                       cache_len: int) -> Tuple[jnp.ndarray, PyTree]:
+    """Serving prefill that also writes the decode cache: returns
+    (hidden [B,S,D], cache) where cache matches ``init_cache(cfg, B,
+    cache_len)`` and decode can continue at pos = S."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["src_embeds"])
+    x = _decoder_inputs(params, cfg, batch)
+    x, _, cache = _run_stack(params["blocks"], cfg, cfg.block_pattern, x,
+                             causal=True, enc_out=enc_out, cache_len=cache_len)
+    return L.rmsnorm(params["final_ln"], x, cfg.norm_eps), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, cp_shards: int = 1):
+    """Stacked decode cache: tuple (per pattern position) of dicts whose leaves
+    have leading axis num_superblocks."""
+    caches = []
+    for kind in cfg.block_pattern:
+        one = B.init_block_cache(cfg, kind, batch, max_len, cp_shards)
+        stacked = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.num_superblocks,) + l.shape), one)
+        caches.append(stacked)
+    return tuple(caches)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
+                enc_out=None, axis_name: Optional[str] = None,
+                shard_offset=None) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step.  tokens: [B,1] int32; pos: scalar int32 (current
+    position).  Returns (logits [B, vocab], new_cache)."""
+    x = L.embed(params["emb"], cfg, tokens)
+    pattern = cfg.block_pattern
+
+    def superblock(x, scanned):
+        blkparams, cache_in = scanned
+        new_caches = []
+        for p_idx, kind in enumerate(pattern):
+            x, nc = B.apply_block_decode(blkparams[p_idx], cfg, kind, x,
+                                         cache_in[p_idx], pos, enc_out=enc_out,
+                                         axis_name=axis_name,
+                                         shard_offset=shard_offset)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(superblock, x, (params["blocks"], cache),
+                                unroll=True if cfg.unroll else 1)
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = (x[:, 0, :] @ L.unembed_matrix(params["emb"], cfg)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def encode_for_decode(params, cfg: ModelConfig, batch: Dict):
+    """Encoder pass used once before decoding (enc-dec archs)."""
+    if not cfg.is_encoder_decoder:
+        return None
+    return _encode(params, cfg, batch["src_embeds"])
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))

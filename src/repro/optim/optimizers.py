@@ -1,0 +1,118 @@
+"""Optimizer substrate (no external deps): SGD / momentum / Adam(W) and the
+paper's learning-rate schedules.
+
+The FL server update (eq. 11) is plain SGD on the OTA-aggregated direction;
+the mesh training path also supports Adam for the beyond-paper runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree          # first moment / momentum (zeros-like or None-like)
+    nu: PyTree          # second moment (Adam only)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
+    name: str = "sgd"
+
+
+def _zeros_like(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array] | float,
+        momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        mu = _zeros_like(params) if momentum else jnp.zeros(())
+        return OptState(jnp.zeros((), jnp.int32), mu, jnp.zeros(()))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        eta = lr_fn(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state.mu, grads)
+            upd = mu
+        else:
+            mu = state.mu
+            upd = grads
+        new = jax.tree_util.tree_map(
+            lambda p, u: p - (eta * u).astype(p.dtype), params, upd)
+        return new, OptState(step, mu, state.nu)
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like(params), _zeros_like(params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        eta = lr_fn(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.nu, grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return p - (eta * u).astype(p.dtype)
+
+        new = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new, OptState(step, mu, nu)
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+
+def inverse_power_schedule(p: float, eta0: float = 1.0):
+    """The paper's Case-I schedule: eta_t = eta0 / t^p, 1/2 < p < 1."""
+    if not (0.5 < p < 1.0):
+        raise ValueError("p must lie in (1/2, 1)")
+
+    def sched(step):
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return eta0 / t ** p
+
+    return sched
+
+
+def constant_schedule(eta: float):
+    """The paper's Case-II schedule: eta_t = eta."""
+    return lambda step: jnp.asarray(eta, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def sched(step):
+        t = step.astype(jnp.float32)
+        warm = peak * t / max(warmup, 1)
+        prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(t < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,122 @@
+"""Optimality tests for the paper's system-parameter optimization (Sec. IV)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (case1_receiver_gain, optimal_S, optimize_case1,
+                        optimize_case2, problem3_objective, solve_problem3,
+                        solve_problem6)
+
+
+def rayleigh(seed, k, mean=1e-3):
+    rng = np.random.default_rng(seed)
+    return rng.rayleigh(mean / math.sqrt(math.pi / 2), k)
+
+
+class TestProblem3:
+    def test_beats_brute_force(self):
+        """Bisection+convex (Algorithm 1) must match 20k-point random search."""
+        h = rayleigh(0, 20)
+        b_max = math.sqrt(5)
+        sol = solve_problem3(h, 1e-7, 1000, b_max)
+        rng = np.random.default_rng(1)
+        best = problem3_objective(np.full(20, b_max), h, 1e-7, 1000)
+        for _ in range(20000):
+            b = rng.uniform(0, b_max, 20)
+            best = min(best, problem3_objective(b, h, 1e-7, 1000))
+        assert sol.Z <= best * (1 + 1e-6)
+
+    def test_noise_free_interior_structure(self):
+        """With c -> 0 the optimum equalizes h_k b_k (waterfilling-like):
+        b_k ~ 1/h_k capped at b_max."""
+        h = np.array([1.0, 2.0, 4.0])
+        sol = solve_problem3(h, 1e-12, 1, b_max=10.0)
+        hb = h * sol.b
+        assert np.std(hb) / np.mean(hb) < 0.05
+
+    def test_noise_dominated_corner(self):
+        """When the noise term dominates, every b_k sits at its cap (Sec. V
+        regime: maximize received signal power)."""
+        h = rayleigh(2, 10, mean=1e-5)
+        sol = solve_problem3(h, 1e-3, 100000, b_max=2.0)
+        np.testing.assert_allclose(sol.b, 2.0, rtol=1e-3)
+
+    def test_z_positive_and_consistent(self):
+        h = rayleigh(3, 8)
+        sol = solve_problem3(h, 1e-7, 500, 2.0)
+        assert sol.Z > 0
+        np.testing.assert_allclose(
+            sol.Z, problem3_objective(sol.b, h, 1e-7, 500), rtol=1e-9)
+        np.testing.assert_allclose(sol.Z, sol.r_star ** 2, rtol=1e-9)
+
+    def test_problem6_feasibility_crosscheck(self):
+        """Literal Problem 6 (SLSQP) agrees with the value-form feasibility
+        test at r slightly above/below r*."""
+        h = rayleigh(4, 6)
+        b_max = np.full(6, 1.5)
+        sol = solve_problem3(h, 1e-7, 200, b_max)
+        v_hi, _ = solve_problem6(sol.r_star * 1.05, h, 1e-7, 200, b_max)
+        v_lo, _ = solve_problem6(sol.r_star * 0.8, h, 1e-7, 200, b_max)
+        assert v_hi <= 1e-6          # feasible above r*
+        assert v_lo > 0.0            # infeasible below r*
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 12),
+       log_noise=st.floats(-9, -4))
+def test_property_problem3_optimality(seed, k, log_noise):
+    """Hypothesis: solver never loses to 2000 random feasible points."""
+    h = rayleigh(seed, k)
+    noise = 10.0 ** log_noise
+    b_max = 2.0
+    sol = solve_problem3(h, noise, 100, b_max)
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(2000):
+        b = rng.uniform(0, b_max, k)
+        if (h * b).sum() <= 0:
+            continue
+        assert sol.Z <= problem3_objective(b, h, noise, 100) * (1 + 1e-6)
+
+
+class TestCaseParameters:
+    def test_optimal_S_formula(self):
+        S = optimal_S(Z=3.0, L=2.0, p=0.75, expected_loss_drop=4.0)
+        want = math.sqrt(2.0 * 4.0 * 0.75 / (0.5 * 4.0))
+        assert abs(S - want) < 1e-12
+
+    def test_case1_gain_inverse(self):
+        h = rayleigh(5, 4)
+        sol = solve_problem3(h, 1e-7, 50, 1.0)
+        a = case1_receiver_gain(2.0, h, sol.b)
+        assert abs(a * 2.0 * (h * sol.b).sum() - 1.0) < 1e-9
+
+    def test_case2_epsilon_to_s_roundtrip(self):
+        h = rayleigh(6, 8)
+        p = optimize_case2(h, 1e-7, 100, 1.5, L=2.0, M=0.5, G=10.0,
+                           theta_th=math.pi / 3, epsilon=0.05)
+        assert 0.0 < p.s < 1.0
+        assert abs(p.bias_bound - 0.05) < 1e-6
+
+    def test_case2_tradeoff_monotone(self):
+        """Remark 2: larger s (slower contraction) => lower bias floor."""
+        h = rayleigh(7, 8)
+        common = dict(L=2.0, M=0.5, G=10.0, theta_th=math.pi / 3)
+        floors = [optimize_case2(h, 1e-7, 100, 1.5, s=s, **common).bias_bound
+                  for s in (0.9, 0.99, 0.999)]
+        assert floors[0] > floors[1] > floors[2]
+
+    def test_case1_full_pipeline(self):
+        h = rayleigh(8, 10)
+        p = optimize_case1(h, 1e-7, 1000, math.sqrt(5), L=1.0, p=0.75,
+                           expected_loss_drop=2.0)
+        assert p.a > 0 and p.S > 0 and p.Z > 0
+        assert np.all(p.b >= 0) and np.all(p.b <= math.sqrt(5) + 1e-9)
+
+    def test_bad_inputs_raise(self):
+        with pytest.raises(ValueError):
+            optimal_S(1.0, 1.0, p=0.4, expected_loss_drop=1.0)
+        with pytest.raises(ValueError):
+            optimize_case2(rayleigh(9, 4), 1e-7, 10, 1.0, L=1, M=1, G=1,
+                           theta_th=1.0)  # neither s nor epsilon

@@ -1,0 +1,152 @@
+"""Assigned-architecture configs: every number matches the assignment sheet
+exactly, input specs cover every (arch x shape), and the roofline HLO parser
+is unit-tested."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import roofline as rl
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (ARCH_IDS, applicable, get_config,
+                                    input_specs, reduce_config)
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment sheet
+ASSIGNED = {
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+}
+
+MOE = {  # (num_experts, top_k)
+    "jamba-v0.1-52b": (16, 2),
+    "olmoe-1b-7b": (64, 8),
+    "granite-moe-1b-a400m": (32, 8),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_numbers(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.vocab_size == v
+    if arch in MOE:
+        e, k = MOE[arch]
+        assert (cfg.num_experts, cfg.experts_per_token) == (e, k)
+        if arch != "jamba-v0.1-52b":   # jamba's ff is its dense-layer size
+            assert cfg.moe_d_ff == ff
+    elif ff:
+        assert cfg.d_ff == ff
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_family_markers(arch):
+    cfg = get_config(arch)
+    if arch == "jamba-v0.1-52b":
+        assert cfg.is_hybrid and cfg.attn_period == 8   # 1:7 interleave
+        assert cfg.moe_every == 2
+    if arch == "xlstm-1.3b":
+        assert cfg.is_xlstm and cfg.slstm_every == 8    # xLSTM[7:1]
+    if arch == "h2o-danube-1.8b":
+        assert cfg.sliding_window                        # SWA
+    if arch == "qwen2-7b":
+        assert cfg.qkv_bias
+    if arch == "pixtral-12b":
+        assert cfg.modality == "vision"
+    if arch == "seamless-m4t-medium":
+        assert cfg.is_encoder_decoder and cfg.modality == "audio"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_cover_all_pairs(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    skip = applicable(cfg, shape)
+    if skip:
+        assert shape_name == "long_500k"
+        return
+    specs = input_specs(cfg, shape)
+    assert "tokens" in specs
+    b = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        s_tok = specs["tokens"].shape
+        total = s_tok[1] + (cfg.num_modal_tokens if cfg.modality == "vision" else 0)
+        assert s_tok[0] == b and total == shape.seq_len
+        if shape.kind == "train":
+            assert specs["labels"].shape == s_tok
+    else:
+        assert specs["tokens"].shape == (b, 1)
+        assert specs["pos"].shape == ()
+    if cfg.is_encoder_decoder:
+        assert "src_embeds" in specs
+
+
+def test_long500k_runs_only_for_subquadratic():
+    runnable = [a for a in ARCH_IDS
+                if applicable(get_config(a), INPUT_SHAPES["long_500k"]) is None]
+    assert sorted(runnable) == sorted(
+        ["h2o-danube-1.8b", "jamba-v0.1-52b", "xlstm-1.3b"])
+
+
+def test_reduced_configs_meet_smoke_limits():
+    for arch in ARCH_IDS:
+        r = reduce_config(get_config(arch))
+        assert r.num_layers <= 4 and r.d_model <= 512
+        if r.is_moe:
+            assert r.num_experts <= 4
+        # family preserved
+        full = get_config(arch)
+        assert r.is_hybrid == full.is_hybrid
+        assert r.is_xlstm == full.is_xlstm
+        assert r.is_moe == full.is_moe
+        assert r.is_encoder_decoder == full.is_encoder_decoder
+
+
+class TestRooflineParser:
+    HLO = """
+  %ag = bf16[8,1024,128]{2,1,0} all-gather(%x), replica_groups=[...]
+  %ar.1 = f32[256,512]{1,0} all-reduce(%y), to_apply=%add
+  %tup = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%a, %b)
+  %rs = f32[64]{0} reduce-scatter(%z), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%w)
+  %start = f32[32]{0} all-reduce-start(%q)
+  %done = f32[32]{0} all-reduce-done(%start)
+  %notacoll = f32[9999]{0} add(%p, %q)
+"""
+
+    def test_collective_bytes(self):
+        got = rl.collective_bytes(self.HLO)
+        assert got["all-gather"] == 8 * 1024 * 128 * 2
+        assert got["all-reduce"] == 256 * 512 * 4 + 32 * 4   # start counted once
+        assert got["all-to-all"] == 2 * 16 * 16 * 4
+        assert got["reduce-scatter"] == 64 * 4
+        assert got["collective-permute"] == 100
+
+    def test_report_bottleneck(self):
+        rep = rl.RooflineReport(
+            name="t", chips=256, flops_per_chip=197e12,      # 1 s compute
+            bytes_per_chip=819e9 * 2,                         # 2 s memory
+            coll_bytes_per_chip=int(50e9 * 0.5),              # 0.5 s collective
+            coll_breakdown={}, model_flops=197e12 * 256 * 0.5).finalize()
+        assert rep.bottleneck == "memory"
+        assert abs(rep.compute_s - 1.0) < 1e-9
+        assert abs(rep.useful_flops_ratio - 0.5) < 1e-9
+
+    def test_model_flops_kinds(self):
+        from repro.configs.base import TRAIN_4K, DECODE_32K, PREFILL_32K
+        n = 1_000_000
+        assert rl.model_flops_for(None, TRAIN_4K, n) == 6.0 * n * 256 * 4096
+        assert rl.model_flops_for(None, PREFILL_32K, n) == 2.0 * n * 32 * 32768
+        assert rl.model_flops_for(None, DECODE_32K, n) == 2.0 * n * 128

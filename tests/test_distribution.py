@@ -1,0 +1,354 @@
+"""Distribution-layer tests: sharding rules, and (via subprocesses, since the
+forced-device XLA flag must be set before jax initializes — and one case
+documents a fatal XLA partitioner bug) the mesh OTA collective.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config, reduce_config
+from repro.distribution import sharding as sh
+from repro.models import transformer as T
+
+ENV = dict(os.environ, PYTHONPATH="src",
+           XLA_FLAGS="--xla_force_host_platform_device_count=8")
+
+
+def run_sub(code: str, timeout=400):
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=ENV,
+                          timeout=timeout, cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+
+
+class TestParamSpecs:
+    def test_rules_cover_all_archs(self):
+        """Every parameter leaf of every architecture gets a valid spec whose
+        sharded dims divide under a 4x4 mesh after sanitization."""
+        for arch in ("qwen2-7b", "jamba-v0.1-52b", "xlstm-1.3b",
+                     "olmoe-1b-7b", "seamless-m4t-medium", "pixtral-12b"):
+            cfg = get_config(arch)
+            params = jax.eval_shape(
+                lambda c=cfg: T.init_params(c, jax.random.PRNGKey(0)))
+            specs = sh.param_specs(params, model_axis="model")
+            n_sharded = 0
+            flat_p = jax.tree_util.tree_leaves(params)
+            flat_s = jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))
+            assert len(flat_p) == len(flat_s)
+            for leaf, spec in zip(flat_p, flat_s):
+                assert len(spec) <= leaf.ndim
+                if any(e is not None for e in spec):
+                    n_sharded += 1
+            # the big weights must actually be sharded
+            assert n_sharded >= len(flat_p) * 0.3, arch
+
+    def test_moe_experts_sharded_on_model(self):
+        cfg = get_config("olmoe-1b-7b")
+        params = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = sh.param_specs(params)
+        moe_spec = specs["blocks"][0]["moe"]["w_gate"]
+        assert moe_spec[1] == "model"    # expert axis (after superblock stack)
+
+    def test_dense_mlp_not_expert_sharded(self):
+        cfg = get_config("qwen2-7b")
+        params = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = sh.param_specs(params)
+        spec = specs["blocks"][0]["mlp"]["w_down"]
+        assert spec == P(None, "model", None)
+
+    def test_sanitize_drops_nondivisible(self):
+        class FakeMesh:
+            shape = {"model": 16, "data": 16}
+        spec = sh.sanitize_spec(FakeMesh(), P("model", None), (256206, 64))
+        assert spec == P(None, None)
+        spec = sh.sanitize_spec(FakeMesh(), P("model", None), (256, 64))
+        assert spec == P("model", None)
+
+    def test_fsdp_axis_threads_through(self):
+        cfg = get_config("llama3-405b")
+        params = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = sh.param_specs(params, fsdp_axis="data")
+        assert specs["blocks"][0]["mlp"]["w_gate"] == P(None, "data", "model")
+        # embedding table deliberately NOT fsdp-sharded (XLA bug workaround)
+        assert specs["emb"]["tok"] == P("model", None)
+
+
+@pytest.mark.slow
+class TestMeshOTA:
+    def test_mesh_ota_matches_vmap_reference(self):
+        """The shard_map ota_psum and the single-host vmap aggregate must
+        produce identical updates given identical inputs — the mesh path IS
+        the paper's system."""
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import ota as core_ota
+        from repro.distribution import ota_collectives as oc
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        K, N = 4, 64
+        key = jax.random.PRNGKey(0)
+        stacked = {"w": jax.random.normal(key, (K, N, 8))}
+        h = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (K,))) + 0.1
+        b = jnp.ones((K,))
+        for scheme in ("normalized", "benchmark1", "benchmark2", "onebit", "mean"):
+            cfg = core_ota.OTAConfig(scheme=scheme, a=0.7, noise_var=0.0,
+                                     grad_bound=5.0, noiseless=True)
+            want = core_ota.aggregate(cfg, stacked, h, b, None)
+
+            def per_client(g):
+                return oc.ota_psum(g, scheme=scheme, axes=("data",), h=h, b=b,
+                                   a=0.7, noise_var=0.0, key=None, grad_bound=5.0)
+
+            f = jax.shard_map(per_client, mesh=mesh,
+                              in_specs=({"w": P("data", None, None)},),
+                              out_specs={"w": P()}, axis_names={"data"},
+                              check_vma=False)
+            with jax.set_mesh(mesh):
+                got = jax.jit(f)({"w": stacked["w"]})
+            err = float(jnp.max(jnp.abs(got["w"] - want["w"].astype(jnp.float32))))
+            scale = float(jnp.max(jnp.abs(want["w"]))) + 1e-9
+            assert err / scale < 1e-4, (scheme, err, scale)
+        print("MESH_OTA_OK")
+        """
+        r = run_sub(code)
+        assert "MESH_OTA_OK" in r.stdout, r.stderr[-2000:]
+
+    def test_known_xla_bug_fsdp_gather_manual_pod(self):
+        """Documented XLA limitation (DESIGN.md §8): a gather from a table
+        sharded over two mesh axes inside a partial-manual shard_map aborts
+        the SPMD partitioner.  This test pins the behaviour so we notice if
+        an XLA upgrade fixes it (it would start passing -> drop the
+        embedding-FSDP workaround)."""
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        emb = jax.device_put(jnp.ones((64, 16)), NamedSharding(mesh, P("model", "data")))
+        tok = jax.device_put(jnp.zeros((8, 4), jnp.int32),
+                             NamedSharding(mesh, P(("pod","data"), None)))
+        def per_pod(emb, tok):
+            g = jax.grad(lambda e: jnp.sum(e[tok] ** 2))(emb)
+            return jax.lax.psum(g, "pod")
+        f = jax.shard_map(per_pod, mesh=mesh, in_specs=(P(), P("pod", None)),
+                          out_specs=P(), axis_names={"pod"}, check_vma=False)
+        with jax.set_mesh(mesh):
+            jax.jit(f, in_shardings=(NamedSharding(mesh, P("model","data")),
+                                     NamedSharding(mesh, P(("pod","data"), None))),
+                    out_shardings=NamedSharding(mesh, P("model","data"))
+                    ).lower(emb, tok).compile()
+        print("COMPILED")
+        """
+        r = run_sub(code)
+        # expected: fatal abort (exit -6). If it ever compiles, the
+        # workaround in distribution/sharding.py can be removed.
+        assert "COMPILED" not in r.stdout
+        assert r.returncode != 0
+
+    def test_context_parallel_decode_matches_single_device(self):
+        """The flash-decoding (shifted-softmax psum) context-parallel path
+        must produce identical tokens to plain decode — validates the
+        long_500k jamba configuration's correctness."""
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.registry import get_config, reduce_config
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch import serve as serve_lib
+        from repro.models import transformer as T
+
+        mesh = make_host_mesh(4, 2)
+        cfg = dataclasses.replace(reduce_config(get_config("jamba-v0.1-52b")),
+                                  dtype="float32")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        B, MAXLEN = 2, 32
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+
+        # reference: plain single-device decode
+        cache = T.init_cache(cfg, B, MAXLEN)
+        ref = []
+        for pos in range(8):
+            logits, cache = T.decode_step(params, cfg, cache, toks[:, pos:pos+1],
+                                          jnp.asarray(pos))
+            ref.append(jnp.argmax(logits, -1))
+
+        # context-parallel decode on the mesh
+        step, in_sh = serve_lib.build_decode_step(cfg, mesh, context_parallel=True,
+                                                  cache_len=MAXLEN)
+        cache = T.init_cache(cfg, B, MAXLEN)
+        tokens_like = {"tokens": toks[:, :1], "pos": jnp.asarray(0)}
+        ps, cs, bs = in_sh(params, cache, tokens_like)
+        with jax.set_mesh(mesh):
+            params_s = jax.device_put(params, ps)
+            cache_s = jax.device_put(cache, cs)
+            step_j = jax.jit(step, in_shardings=(ps, cs, bs["tokens"], bs["pos"]),
+                             out_shardings=(None, cs))
+            got = []
+            for pos in range(8):
+                nxt, cache_s = step_j(params_s, cache_s, toks[:, pos:pos+1],
+                                      jnp.asarray(pos))
+                got.append(nxt)
+        for p_, (a, b) in enumerate(zip(ref, got)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (p_, a, b)
+        print("CP_DECODE_OK")
+        """
+        r = run_sub(code)
+        assert "CP_DECODE_OK" in r.stdout, r.stderr[-2500:]
+
+    def test_seq_sharded_decode_matches_reference(self):
+        """The §Perf decode levers (select update + seq-over-model cache +
+        pinned scores sharding) must produce the same tokens as the plain
+        single-device decode."""
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_config, reduce_config
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch import serve as serve_lib
+        from repro.models import transformer as T
+
+        mesh = make_host_mesh(2, 4)   # model=4 > kv=2 -> seq sharding active
+        cfg = dataclasses.replace(reduce_config(get_config("pixtral-12b")),
+                                  dtype="float32", decode_cache_update="select")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        B, MAXLEN = 2, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+
+        ref_cache = T.init_cache(cfg, B, MAXLEN)
+        ref = []
+        for pos in range(8):
+            lg, ref_cache = T.decode_step(params, cfg, ref_cache,
+                                          toks[:, pos:pos+1], jnp.asarray(pos))
+            ref.append(jnp.argmax(lg, -1))
+
+        step, in_sh = serve_lib.build_decode_step(cfg, mesh, shard_cache_seq=True)
+        cache = T.init_cache(cfg, B, MAXLEN)
+        tl = {"tokens": toks[:, :1], "pos": jnp.asarray(0)}
+        ps, cs, bs = in_sh(params, cache, tl)
+        with jax.set_mesh(mesh):
+            p = jax.device_put(params, ps)
+            c = jax.device_put(cache, cs)
+            sj = jax.jit(step, in_shardings=(ps, cs, bs["tokens"], bs["pos"]),
+                         out_shardings=(None, cs))
+            for pos in range(8):
+                t = jax.device_put(toks[:, pos:pos+1], bs["tokens"])
+                nxt, c = sj(p, c, t, jnp.asarray(pos))
+                assert np.array_equal(np.asarray(nxt), np.asarray(ref[pos])), pos
+        print("SEQ_SHARDED_DECODE_OK")
+        """
+        r = run_sub(code, timeout=500)
+        assert "SEQ_SHARDED_DECODE_OK" in r.stdout, r.stderr[-2500:]
+
+    def test_seq_parallel_is_numerically_transparent(self):
+        """The §Perf sequence-parallel lever is a sharding annotation only:
+        losses/gradients must match the baseline bit-for-bit-ish."""
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.registry import get_config, reduce_config
+        from repro.launch import train as train_lib
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import transformer as T
+        from repro.optim.optimizers import sgd
+        mesh = make_host_mesh(4, 2)
+        losses = {}
+        for variant, ov in (("base", {}), ("seqpar", {"seq_shard_activations": "model"}),
+                            ("dots", {"seq_shard_activations": "model",
+                                      "remat_policy": "dots"})):
+            cfg = dataclasses.replace(reduce_config(get_config("qwen2-7b")),
+                                      dtype="float32", **ov)
+            params = T.init_params(cfg, jax.random.PRNGKey(0))
+            opt = sgd(0.05); opt_state = opt.init(params)
+            ota = train_lib.OTARunParams(h=np.full(4, 1e-3), b=np.ones(4),
+                                         a=250.0, noise_var=0.0)
+            step, in_sh = train_lib.build_train_step(
+                cfg, mesh, scheme="normalized", aggregation_axes=("data",),
+                ota=ota, optimizer=opt)
+            tokens = jax.random.randint(jax.random.PRNGKey(2), (8, 64), 0,
+                                        cfg.vocab_size)
+            batch = {"tokens": tokens, "labels": tokens}
+            ps, os_, bs = in_sh(params, opt_state, batch)
+            with jax.set_mesh(mesh):
+                p = jax.device_put(params, ps); o = jax.device_put(opt_state, os_)
+                b = jax.device_put(batch, bs)
+                jitted = jax.jit(step, in_shardings=(ps, os_, bs, NamedSharding(mesh, P())),
+                                 out_shardings=(ps, os_, None))
+                ls = []
+                for i in range(3):
+                    p, o, m = jitted(p, o, b, jax.random.fold_in(jax.random.PRNGKey(3), i))
+                    ls.append(float(m["loss"]))
+            losses[variant] = ls
+        for variant in ("seqpar", "dots"):
+            for a, c in zip(losses["base"], losses[variant]):
+                assert abs(a - c) < 1e-4 * max(abs(a), 1.0), (variant, losses)
+        print("SEQPAR_TRANSPARENT_OK")
+        """
+        r = run_sub(code, timeout=500)
+        assert "SEQPAR_TRANSPARENT_OK" in r.stdout, r.stderr[-2000:]
+
+    def test_ota_train_step_loss_decreases_on_mesh(self):
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.registry import get_config, reduce_config
+        from repro.launch import train as train_lib
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import transformer as T
+        from repro.optim.optimizers import sgd
+        mesh = make_host_mesh(4, 2)
+        cfg = reduce_config(get_config("granite-moe-1b-a400m"))
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        opt = sgd(0.05); opt_state = opt.init(params)
+        ota = train_lib.OTARunParams(h=np.full(4, 1e-3), b=np.ones(4),
+                                     a=250.0, noise_var=1e-7)
+        step, in_sh = train_lib.build_train_step(
+            cfg, mesh, scheme="normalized", aggregation_axes=("data",),
+            ota=ota, optimizer=opt)
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (8, 64), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        ps, os_, bs = in_sh(params, opt_state, batch)
+        with jax.set_mesh(mesh):
+            params = jax.device_put(params, ps)
+            opt_state = jax.device_put(opt_state, os_)
+            batch = jax.device_put(batch, bs)
+            jitted = jax.jit(step, in_shardings=(ps, os_, bs, NamedSharding(mesh, P())),
+                             out_shardings=(ps, os_, None))
+            losses = []
+            for i in range(6):
+                params, opt_state, m = jitted(params, opt_state, batch,
+                                              jax.random.fold_in(jax.random.PRNGKey(3), i))
+                losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.2, losses
+        print("MESH_TRAIN_OK", losses[0], losses[-1])
+        """
+        r = run_sub(code)
+        assert "MESH_TRAIN_OK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,85 @@
+"""FL-runtime integration tests: the paper's Case-I task end to end, the
+per-tensor-normalized beyond-paper variant, and block-fading operation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelConfig
+from repro.data.datasets import device_batches, split_dirichlet, synthetic_mnist
+from repro.fed.runtime import FLConfig, run, setup
+from repro.models.simple import (init_mlp_classifier, mlp_classifier_accuracy,
+                                 mlp_classifier_loss)
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def mnist_task():
+    key = jax.random.PRNGKey(0)
+    x, y = synthetic_mnist(key, 1500)
+    x_tr, y_tr, x_te, y_te = x[:1200], y[:1200], x[1200:], y[1200:]
+    split = split_dirichlet(jax.random.fold_in(key, 1), np.asarray(y_tr), K, 1.0)
+    params0 = init_mlp_classifier(jax.random.fold_in(key, 2), hidden=32)
+    dim = sum(int(np.prod(np.asarray(l).shape))
+              for l in jax.tree_util.tree_leaves(params0))
+    xnp, ynp = np.asarray(x_tr), np.asarray(y_tr)
+
+    def grad_fn(params, batch):
+        xb, yb = batch
+        return jax.grad(lambda p: mlp_classifier_loss(p, xb, yb))(params)
+
+    def provider(t):
+        idx = device_batches(jax.random.PRNGKey(3), split, 32, t)
+        return (jnp.asarray(xnp[idx]), jnp.asarray(ynp[idx]))
+
+    def ev(params):
+        return {"acc": float(mlp_classifier_accuracy(params, x_te, y_te))}
+
+    return dict(params0=params0, dim=dim, grad_fn=grad_fn, provider=provider,
+                ev=ev)
+
+
+def _cfg(scheme="normalized", **kw):
+    base = dict(num_devices=K, scheme=scheme, case="I", p=0.75,
+                channel=ChannelConfig(num_devices=K, channel_mean=1e-3),
+                grad_bound=10.0, smoothness_L=5.0, expected_loss_drop=2.0,
+                seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _run(task, cfg, rounds=80):
+    state = setup(cfg, task["params0"], task["dim"])
+    return run(cfg, state, task["grad_fn"], task["provider"], rounds,
+               task["ev"], eval_every=rounds)
+
+
+class TestCaseIEndToEnd:
+    def test_accuracy_improves_over_chance(self, mnist_task):
+        _, hist = _run(mnist_task, _cfg("normalized"))
+        assert hist["acc"][-1] > 0.5      # 10-class chance = 0.1
+
+    def test_per_tensor_variant_trains(self, mnist_task):
+        _, hist = _run(mnist_task, _cfg("normalized_per_tensor"))
+        assert hist["acc"][-1] > 0.5
+
+    def test_block_fading_reoptimizes_and_trains(self, mnist_task):
+        chan = ChannelConfig(num_devices=K, channel_mean=1e-3,
+                             block_fading=True)
+        _, hist = _run(mnist_task, _cfg("normalized", channel=chan))
+        assert hist["acc"][-1] > 0.5
+
+    def test_eta_schedule_is_paper_case1(self, mnist_task):
+        _, hist = _run(mnist_task, _cfg("normalized"), rounds=20)
+        for t, e in zip(hist["round"], hist["eta"]):
+            assert abs(e - t ** -0.75) < 1e-5
+
+    def test_all_schemes_train(self, mnist_task):
+        """Every aggregation scheme learns on the Case-I task.  (Relative
+        orderings are horizon- and task-dependent; they are *reported* by the
+        fig1b/fig2b benchmarks rather than asserted here — see EXPERIMENTS.md
+        §Faithfulness.)"""
+        for scheme in ("onebit", "benchmark2"):
+            _, hist = _run(mnist_task, _cfg(scheme), rounds=60)
+            assert hist["acc"][-1] > 0.3, scheme

@@ -1,0 +1,211 @@
+"""Per-architecture smoke tests (deliverable (f)) + model correctness:
+prefill-vs-decode agreement, SWA masking, MoE dispatch exactness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import InputShape
+from repro.configs.registry import (ARCH_IDS, get_config, make_dummy_inputs,
+                                    reduce_config)
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+SMOKE_TRAIN = InputShape("smoke_train", 64, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        """Reduced variant (<=4 layers, d_model<=512, <=4 experts): one
+        forward + one SGD step on CPU; asserts shapes and no NaNs."""
+        cfg = reduce_config(get_config(arch))
+        assert cfg.d_model <= 512 and cfg.num_layers <= 4
+        if cfg.is_moe:
+            assert cfg.num_experts <= 4
+        params = T.init_params(cfg, KEY)
+        batch = make_dummy_inputs(cfg, SMOKE_TRAIN)
+        if "labels" not in batch:
+            batch["labels"] = batch["tokens"]
+
+        loss, metrics = jax.jit(
+            lambda p, b: T.forward_loss(p, cfg, b))(params, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss))
+
+        grads = jax.grad(lambda p: T.forward_loss(p, cfg, batch)[0])(params)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                          for l in jax.tree_util.tree_leaves(grads)))
+        assert bool(jnp.isfinite(gn)) and float(gn) > 0
+        new = jax.tree_util.tree_map(
+            lambda p, g: p - 0.01 * g.astype(p.dtype), params, grads)
+        loss2, _ = jax.jit(lambda p, b: T.forward_loss(p, cfg, b))(new, batch)
+        assert bool(jnp.isfinite(loss2))
+
+    def test_decode_step_shapes(self, arch):
+        cfg = reduce_config(get_config(arch))
+        params = T.init_params(cfg, KEY)
+        b = 2
+        cache = T.init_cache(cfg, b, 32)
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            src = jnp.zeros((b, 16, cfg.modal_embed_dim), jnp.float32)
+            enc_out = T.encode_for_decode(params, cfg, {"src_embeds": src})
+        tok = jnp.zeros((b, 1), jnp.int32)
+        logits, cache2 = T.decode_step(params, cfg, cache, tok,
+                                       jnp.asarray(0), enc_out=enc_out)
+        assert logits.shape == (b, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert jax.tree_util.tree_structure(cache) == \
+            jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "qwen2-7b",
+                                  "jamba-v0.1-52b", "xlstm-1.3b",
+                                  "olmoe-1b-7b"])
+def test_prefill_decode_consistency(arch):
+    """Teacher-forced full-sequence logits must match step-by-step decode —
+    the strongest cache-correctness check (covers SWA rotation, mamba/xlstm
+    state recurrences, MoE routing determinism)."""
+    cfg = reduce_config(get_config(arch))
+    # capacity_factor high so the prefill path drops no tokens: capacity
+    # drops are legitimate train/prefill behaviour but decode (T=B tokens)
+    # never drops, so exact agreement needs drop-free routing.
+    cfg = dataclasses.replace(cfg, dtype="float32", capacity_factor=8.0)
+    params = T.init_params(cfg, KEY)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 1), (b, s), 0,
+                                cfg.vocab_size)
+    # full-forward logits
+    x = T.forward_hidden(params, cfg, {"tokens": tokens})
+    w_un = L.unembed_matrix(params["emb"], cfg)
+    full_logits = (x @ w_un).astype(jnp.float32)          # [b, s, V]
+    # stepwise decode
+    cache = T.init_cache(cfg, b, s)
+    step = jax.jit(lambda c, t, pos: T.decode_step(params, cfg, c, t, pos))
+    errs = []
+    for pos in range(s):
+        logits, cache = step(cache, tokens[:, pos:pos + 1], jnp.asarray(pos))
+        errs.append(float(jnp.max(jnp.abs(logits - full_logits[:, pos, :]))))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-6
+    assert max(errs) / scale < 2e-3, (arch, errs)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "h2o-danube-1.8b",
+                                  "jamba-v0.1-52b", "xlstm-1.3b"])
+def test_prefill_cache_handoff(arch):
+    """prefill_with_cache + decode continuation == decode-from-scratch — the
+    serving handoff is exact for every mixer (KV incl. SWA rotation, mamba
+    ssm/conv state, mLSTM matrix memory, sLSTM state)."""
+    cfg = dataclasses.replace(reduce_config(get_config(arch)), dtype="float32",
+                              capacity_factor=8.0)
+    params = T.init_params(cfg, KEY)
+    b, s, maxlen = 2, 12, 24
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1), (b, s + 4), 0,
+                              cfg.vocab_size)
+    _, cache = T.prefill_with_cache(params, cfg, {"tokens": toks[:, :s]}, maxlen)
+    c2 = T.init_cache(cfg, b, maxlen)
+    for pos in range(s):
+        _, c2 = T.decode_step(params, cfg, c2, toks[:, pos:pos + 1],
+                              jnp.asarray(pos))
+    scale = None
+    for pos in range(s, s + 4):
+        la, cache = T.decode_step(params, cfg, cache, toks[:, pos:pos + 1],
+                                  jnp.asarray(pos))
+        lb, c2 = T.decode_step(params, cfg, c2, toks[:, pos:pos + 1],
+                               jnp.asarray(pos))
+        scale = scale or float(jnp.max(jnp.abs(lb))) + 1e-9
+        assert float(jnp.max(jnp.abs(la - lb))) / scale < 1e-4
+
+
+def test_sliding_window_masks_old_tokens():
+    """With window W, logits at position t must not depend on tokens older
+    than t - W + 1."""
+    cfg = reduce_config(get_config("h2o-danube-1.8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32", sliding_window=4,
+                              num_layers=2)
+    params = T.init_params(cfg, KEY)
+    b, s = 1, 12
+    t1 = jax.random.randint(jax.random.fold_in(KEY, 2), (b, s), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 7) % cfg.vocab_size)   # perturb an old token
+    h1 = T.forward_hidden(params, cfg, {"tokens": t1})
+    h2 = T.forward_hidden(params, cfg, {"tokens": t2})
+    # position >= window: old token is out of every layer's window reach only
+    # for 1-layer receptive fields; with 2 layers reach is 2W-1 = 7
+    reach = 2 * 4 - 1
+    diff = jnp.max(jnp.abs(h1 - h2), axis=(0, 2))
+    assert float(jnp.max(diff[reach + 1:])) < 1e-5
+    assert float(diff[0]) > 1e-4     # sanity: it does affect early positions
+
+
+class TestMoE:
+    def _cfg(self, e=4, k=2, cf=8.0):
+        return dataclasses.replace(
+            reduce_config(get_config("olmoe-1b-7b")),
+            num_experts=e, experts_per_token=k, capacity_factor=cf,
+            dtype="float32")
+
+    def test_topk_equals_dense_mix_when_k_equals_e(self):
+        """With k = E and ample capacity, MoE output must equal the dense
+        prob-weighted mixture of all experts — dispatch/combine exactness."""
+        cfg = self._cfg(e=4, k=4, cf=8.0)
+        p = MOE.init_moe(jax.random.fold_in(KEY, 3), cfg)
+        x = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 8, cfg.d_model))
+        y, aux = MOE.moe_mlp(p, cfg, x)
+
+        probs, _ = MOE.router_probs(p, x.reshape(-1, cfg.d_model))
+        act = jax.nn.silu
+        outs = []
+        for e in range(4):
+            h = act(x @ p["w_gate"][e]) * (x @ p["w_up"][e])
+            outs.append(h @ p["w_down"][e])
+        dense = sum(probs.reshape(2, 8, 4)[..., e:e + 1] * outs[e]
+                    for e in range(4))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(dense),
+                                   rtol=2e-3, atol=2e-4)
+
+    def test_capacity_drops_dont_crash_and_bound_output(self):
+        cfg = self._cfg(e=4, k=2, cf=0.1)   # absurdly tight capacity
+        p = MOE.init_moe(jax.random.fold_in(KEY, 5), cfg)
+        x = jax.random.normal(jax.random.fold_in(KEY, 6), (2, 32, cfg.d_model))
+        y, aux = MOE.moe_mlp(p, cfg, x)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_load_balance_loss_uniform_router(self):
+        """A perfectly uniform router gives the theoretical minimum lb loss 1."""
+        cfg = self._cfg(e=4, k=2)
+        p = MOE.init_moe(jax.random.fold_in(KEY, 7), cfg)
+        p = dict(p, router=jnp.zeros_like(p["router"]))
+        x = jax.random.normal(jax.random.fold_in(KEY, 8), (2, 64, cfg.d_model))
+        _, aux = MOE.moe_mlp(p, cfg, x)
+        assert abs(float(aux["load_balance_loss"]) - 1.0) < 0.05
+
+
+def test_chunked_xent_matches_dense():
+    b, s, d, v = 2, 16, 8, 32
+    x = jax.random.normal(KEY, (b, s, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (d, v))
+    labels = jax.random.randint(jax.random.fold_in(KEY, 2), (b, s), 0, v)
+    got = L.chunked_softmax_xent(x, w, labels, chunk=4)
+    logits = x @ w
+    lse = jax.scipy.special.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = jnp.mean(lse - gold)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_param_count_estimate_close():
+    """ModelConfig.param_count() (used for 6ND rooflines) within 10% of the
+    true initialized parameter count."""
+    for arch in ("qwen2-7b", "olmoe-1b-7b", "jamba-v0.1-52b"):
+        cfg = reduce_config(get_config(arch))
+        params = jax.eval_shape(lambda c=cfg: T.init_params(c, KEY))
+        true = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+        est = cfg.param_count()
+        assert abs(est - true) / true < 0.10, (arch, est, true)

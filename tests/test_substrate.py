@@ -1,0 +1,168 @@
+"""Substrate tests: data pipeline, optimizers, checkpointing, channel."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store
+from repro.core.channel import ChannelConfig, channel_for_round, draw_channel
+from repro.data.datasets import (FederatedSplit, device_batches, ridge_data,
+                                 split_dirichlet, split_iid, synthetic_mnist,
+                                 token_stream)
+from repro.optim.optimizers import (adamw, constant_schedule, cosine_schedule,
+                                    inverse_power_schedule, sgd)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestChannel:
+    def test_rayleigh_mean(self):
+        cfg = ChannelConfig(num_devices=200_000, channel_mean=1e-3)
+        h = draw_channel(KEY, cfg)
+        assert abs(float(jnp.mean(h)) - 1e-3) / 1e-3 < 0.02
+        assert float(jnp.min(h)) >= 0.0
+
+    def test_static_vs_block_fading(self):
+        static = ChannelConfig(num_devices=8, block_fading=False)
+        fading = ChannelConfig(num_devices=8, block_fading=True)
+        h1 = channel_for_round(KEY, static, 1)
+        h2 = channel_for_round(KEY, static, 2)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+        f1 = channel_for_round(KEY, fading, 1)
+        f2 = channel_for_round(KEY, fading, 2)
+        assert not np.allclose(np.asarray(f1), np.asarray(f2))
+
+
+class TestData:
+    def test_iid_split_partitions(self):
+        split = split_iid(KEY, 1000, 7)
+        all_idx = np.concatenate(split.indices)
+        assert len(all_idx) == 1000
+        assert len(np.unique(all_idx)) == 1000
+
+    def test_dirichlet_split_partitions_and_skews(self):
+        labels = np.asarray(jax.random.randint(KEY, (2000,), 0, 10))
+        split = split_dirichlet(jax.random.fold_in(KEY, 1), labels, 10,
+                                alpha=0.2)
+        all_idx = np.concatenate(split.indices)
+        assert len(np.unique(all_idx)) == 2000
+        assert all(len(i) > 0 for i in split.indices)
+        # low alpha => skewed label marginals on at least some devices
+        skews = []
+        for idx in split.indices:
+            counts = np.bincount(labels[idx], minlength=10) / len(idx)
+            skews.append(counts.max())
+        assert max(skews) > 0.3     # some device is label-dominated
+
+    def test_weights_sum_to_one(self):
+        split = split_dirichlet(KEY, np.asarray(
+            jax.random.randint(KEY, (500,), 0, 10)), 5, 0.5)
+        np.testing.assert_allclose(split.weights().sum(), 1.0)
+
+    def test_device_batches_deterministic(self):
+        split = split_iid(KEY, 400, 4)
+        b1 = device_batches(jax.random.PRNGKey(5), split, 16, round_idx=3)
+        b2 = device_batches(jax.random.PRNGKey(5), split, 16, round_idx=3)
+        np.testing.assert_array_equal(b1, b2)
+        b3 = device_batches(jax.random.PRNGKey(5), split, 16, round_idx=4)
+        assert not np.array_equal(b1, b3)
+        # every device samples from ITS shard only
+        for k in range(4):
+            assert np.isin(b1[k], split.indices[k]).all()
+
+    def test_synthetic_mnist_learnable_structure(self):
+        x, y = synthetic_mnist(KEY, 500)
+        assert x.shape == (500, 784)
+        # class-conditional means must differ (signal exists)
+        m0 = x[y == 0].mean(0)
+        m1 = x[y == 1].mean(0)
+        assert float(jnp.linalg.norm(m0 - m1)) > 1.0
+
+    def test_token_stream_in_vocab(self):
+        toks = token_stream(KEY, 4, 128, vocab=97)
+        assert toks.shape == (4, 128)
+        assert int(toks.min()) >= 0 and int(toks.max()) < 97
+
+
+class TestOptimizers:
+    def test_sgd_matches_manual(self):
+        opt = sgd(0.1)
+        p = {"w": jnp.ones((3,))}
+        s = opt.init(p)
+        g = {"w": jnp.full((3,), 2.0)}
+        p2, s2 = opt.update(g, s, p)
+        np.testing.assert_allclose(np.asarray(p2["w"]), 0.8, rtol=1e-6)
+        assert int(s2.step) == 1
+
+    def test_sgd_momentum(self):
+        opt = sgd(0.1, momentum=0.9)
+        p = {"w": jnp.zeros((1,))}
+        s = opt.init(p)
+        g = {"w": jnp.ones((1,))}
+        p, s = opt.update(g, s, p)
+        p, s = opt.update(g, s, p)
+        # m1 = 1, m2 = 1.9 -> w = -(0.1 + 0.19)
+        np.testing.assert_allclose(np.asarray(p["w"]), -0.29, rtol=1e-6)
+
+    def test_adamw_step_direction(self):
+        opt = adamw(1e-2, weight_decay=0.0)
+        p = {"w": jnp.zeros((4,))}
+        s = opt.init(p)
+        g = {"w": jnp.asarray([1.0, -1.0, 2.0, -0.5])}
+        p2, _ = opt.update(g, s, p)
+        assert np.all(np.sign(np.asarray(p2["w"])) == -np.sign(np.asarray(g["w"])))
+
+    def test_paper_schedule(self):
+        sched = inverse_power_schedule(0.75)
+        for t in (1, 2, 10, 100):
+            assert abs(float(sched(jnp.asarray(t))) - t ** -0.75) < 1e-6
+        with pytest.raises(ValueError):
+            inverse_power_schedule(0.4)
+
+    def test_cosine_schedule_shape(self):
+        sched = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+        assert float(sched(jnp.asarray(0))) == 0.0
+        assert abs(float(sched(jnp.asarray(10))) - 1.0) < 1e-5
+        assert abs(float(sched(jnp.asarray(100))) - 0.1) < 1e-5
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+                "t": (jnp.zeros((2,)), jnp.asarray(3, jnp.int32))}
+        path = str(tmp_path / "ck.msgpack")
+        store.save(path, tree, {"round": 7})
+        like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+        restored, meta = store.restore(path, like)
+        assert meta["round"] == 7
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_retention(self, tmp_path):
+        d = str(tmp_path)
+        for r in range(6):
+            store.save_round(d, r, {"w": jnp.zeros((1,))}, keep=3)
+        files = sorted(os.listdir(d))
+        assert len(files) == 3
+        assert store.latest_round(d).endswith("round_00000005.msgpack")
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "ck.msgpack")
+        store.save(path, {"w": jnp.zeros((3,))})
+        with pytest.raises(ValueError):
+            store.restore(path, {"w": jnp.zeros((4,))})
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(50, 500), k=st.integers(2, 10), seed=st.integers(0, 99))
+def test_property_split_is_partition(n, k, seed):
+    split = split_iid(jax.random.PRNGKey(seed), n, k)
+    all_idx = np.concatenate(split.indices)
+    assert len(all_idx) == n and len(np.unique(all_idx)) == n
