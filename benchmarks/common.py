@@ -31,6 +31,13 @@ K = 20
 CHANNEL_MEAN = 1e-3
 SEED = 0
 
+# Execution backend for the benchmark FLConfigs: the fused Pallas kernel
+# path by default (the registry refactor made every scheme run on it).
+# On non-TPU hosts the kernels execute under interpret=True, so us_per_call
+# measures the interpreter, not production speed — pass
+# `benchmarks.run --backend vmap` for representative CPU timings.
+DEFAULT_BACKEND = "kernels"
+
 
 def channel(num_devices: int = K) -> ChannelConfig:
     return ChannelConfig(num_devices=num_devices, channel_mean=CHANNEL_MEAN)
@@ -88,7 +95,8 @@ class CaseIExperiment:
         base = dict(num_devices=K, scheme=scheme, case="I", p=0.75,
                     channel=channel(), amplification=amplification,
                     grad_bound=self.calibrate_G(), smoothness_L=5.0,
-                    expected_loss_drop=2.0, seed=SEED)
+                    expected_loss_drop=2.0, seed=SEED,
+                    backend=DEFAULT_BACKEND)
         base.update(kw)
         return FLConfig(**base)
 
@@ -145,7 +153,8 @@ class CaseIIExperiment:
         base = dict(num_devices=K, scheme=scheme, case="II", eta=0.01,
                     channel=channel(), amplification=amplification,
                     grad_bound=self.calibrate_G(), smoothness_L=self.L,
-                    strong_convexity_M=self.M, s_target=s_target, seed=SEED)
+                    strong_convexity_M=self.M, s_target=s_target, seed=SEED,
+                    backend=DEFAULT_BACKEND)
         base.update(kw)
         return FLConfig(**base)
 

@@ -17,10 +17,17 @@ def main() -> None:
                     help="reduced round counts (smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--backend", default=None,
+                    choices=("vmap", "kernels", "mesh"),
+                    help="aggregation backend for the FL figure benchmarks "
+                         "(default: the fused Pallas kernel path)")
     args = ap.parse_args()
 
-    from benchmarks import figures
+    from benchmarks import common, figures
     from benchmarks.roofline_table import roofline_rows
+
+    if args.backend:
+        common.DEFAULT_BACKEND = args.backend
 
     r = (lambda full, quick: quick if args.quick else full)
     benches = [

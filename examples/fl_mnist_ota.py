@@ -30,7 +30,8 @@ def main() -> None:
                if args.scheme == "all" else [args.scheme])
     for scheme in schemes:
         cfg = exp.config(scheme=scheme)
-        state, hist = exp.run(cfg, args.rounds, eval_every=args.rounds // 10)
+        state, hist = exp.run(cfg, args.rounds,
+                              eval_every=max(1, args.rounds // 10))
         accs = ", ".join(f"{t}:{a:.3f}" for t, a in
                          zip(hist["eval_round"], hist["test_acc"]))
         print(f"[{scheme:12s}] test acc over rounds: {accs}")

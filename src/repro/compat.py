@@ -1,0 +1,103 @@
+"""Forward-compatibility shims: run the new-style jax mesh API on older jax.
+
+The codebase is written against the current jax surface — ``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``, ``jax.make_mesh(axis_types=...)``.
+Older jaxlibs (such as the 0.4.x pinned in this container) expose the same
+machinery under ``jax.experimental.shard_map`` with slightly different
+spellings (``check_rep``/``auto`` instead of ``check_vma``/``axis_names``,
+``Mesh`` as its own context manager instead of ``set_mesh``).  This module
+installs thin adapters onto the ``jax`` namespace when — and only when — the
+modern names are missing, so every other module can use one API.
+
+Imported for its side effects from ``repro.__init__``; it never touches
+device state (safe to import before XLA_FLAGS-dependent initialization).
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+if not hasattr(jax.sharding, "AxisType"):
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _make_mesh = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # old jax has no axis-type concept at mesh level; Auto is its default
+        return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        # Old jax lowers axis_index under a *partial*-auto shard_map to a
+        # PartitionId instruction the SPMD partitioner rejects; run fully
+        # manual instead.  Axes the caller left auto are then replicated
+        # (numerically identical, no tensor parallelism on old jax), and the
+        # with_sharding_constraint shim below drops the now-unsatisfiable
+        # auto-axis placement hints.
+        del axis_names
+        return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=bool(check_vma), auto=frozenset())
+
+    jax.shard_map = shard_map
+
+    _wsc = jax.lax.with_sharding_constraint
+
+    def _spec_axis_names(s):
+        entries = getattr(s, "spec", s)
+        names = set()
+        for e in entries or ():
+            if e is None:
+                continue
+            names.update(e if isinstance(e, (tuple, list)) else (e,))
+        return names
+
+    def with_sharding_constraint(x, shardings):
+        # Constraints naming an axis that is manual in the current trace (all
+        # mesh axes, under the fully-manual shard_map above) fail at lowering
+        # on old jax; they are placement hints, not semantics — drop them.
+        from jax._src import core as _core
+        from jax.sharding import PartitionSpec as _P
+        bound = set(_core.get_axis_env().axis_sizes)
+        if bound:
+            is_leaf = lambda s: isinstance(s, (_P, jax.sharding.Sharding))
+            referenced = set()
+            for s in jax.tree_util.tree_leaves(shardings, is_leaf=is_leaf):
+                referenced |= _spec_axis_names(s)
+            if referenced & bound:
+                return x
+        return _wsc(x, shardings)
+
+    jax.lax.with_sharding_constraint = with_sharding_constraint
+
+
+if not hasattr(jax.lax, "axis_size"):
+    def axis_size(axis_name):
+        # psum of the literal 1 is constant-folded to the axis size at trace
+        # time, which is exactly the old-jax idiom for this query
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+if not hasattr(jax, "set_mesh"):
+    def set_mesh(mesh):
+        # old Mesh objects are themselves context managers (resource env)
+        return mesh
+
+    jax.set_mesh = set_mesh

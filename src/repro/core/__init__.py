@@ -2,11 +2,21 @@
 from repro.core.channel import (ChannelConfig, draw_channel, channel_for_round,
                                 draw_noise, DEFAULT_B_MAX, DEFAULT_CHANNEL_MEAN,
                                 DEFAULT_NOISE_VAR, DEFAULT_THETA_TH)
-from repro.core.ota import (OTAConfig, SCHEMES, aggregate, apply_update,
-                            device_transform, superpose, server_post,
-                            per_device_norm, per_device_sq_norm,
+from repro.core.ota import (OTAConfig, BACKENDS, aggregate,
+                            apply_update, device_transform, superpose,
+                            server_post, per_device_norm, per_device_sq_norm,
                             per_device_mean_std, tree_num_elements,
-                            transmit_norms)
+                            transmit_norms, transmit_energy)
+from repro.core.schemes import (Scheme, DeviceStats, register as register_scheme,
+                                get as get_scheme)
+
+
+def __getattr__(name):
+    # live view of the registry (PEP 562) — see repro.core.ota.SCHEMES
+    if name == "SCHEMES":
+        from repro.core import schemes as _schemes
+        return _schemes.names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from repro.core.amplification import (Problem3Solution, solve_problem3,
                                       solve_problem6, problem3_objective,
                                       optimal_S, case1_receiver_gain,

@@ -143,9 +143,38 @@ def solve_problem6(r: float, h: np.ndarray, noise_var: float, n: int,
     for k in range(K):
         cons.append({"type": "ineq", "fun": (lambda x, k=k: b_max[k] + x[-1] - x[k])})
         cons.append({"type": "ineq", "fun": (lambda x, k=k: x[k])})
-    x0 = np.concatenate([b_max, [0.0]])
-    res = sopt.minimize(obj, x0, jac=obj_jac, constraints=cons, method="SLSQP",
-                        options={"maxiter": 500, "ftol": 1e-12})
+
+    def solve_from(x0):
+        return sopt.minimize(obj, x0, jac=obj_jac, constraints=cons,
+                             method="SLSQP",
+                             options={"maxiter": 500, "ftol": 1e-12})
+
+    def accepted(res):
+        return (res.success and cone(res.x) >= -1e-8
+                and float(np.min(res.x[:K])) >= -1e-10)
+
+    res = solve_from(np.concatenate([b_max, [0.0]]))
+    if not accepted(res):
+        # SLSQP can fail from the (cone-infeasible) b_max start.  The cone is
+        # satisfiable at *some* scale iff r > 2/sqrt(K) (best direction
+        # b ~ 1/h_k, which equalizes h_k b_k); if it is, retry from a
+        # strictly feasible interior point.  If it is not, the feasible set
+        # of Problem 6 is empty at ANY v and the min over it is +inf —
+        # report that instead of SLSQP's garbage iterate.
+        gap = r * r * K * K - 4.0 * K
+        if gap <= 1e-12 * max(1.0, c):
+            if c <= 0.0:
+                # noiseless edge: b = 0 meets the cone with equality, so the
+                # minimum is finite: v* = -min(b_max) at b = 0
+                return -float(np.min(b_max)), np.zeros(K)
+            return math.inf, np.asarray(res.x[:K])
+        t = 1.1 * math.sqrt(c / gap)
+        b0 = t / h
+        v0 = max(float(np.max(b0 - b_max)), 0.0) + 1e-6
+        res = solve_from(np.concatenate([b0, [v0]]))
+        if not accepted(res):
+            # conservative upper bound from the feasible start itself
+            return v0, b0
     return float(res.x[-1]), np.asarray(res.x[:K])
 
 

@@ -1,46 +1,55 @@
-"""Over-the-air gradient aggregation schemes (the paper's core, Sec. II).
+"""Over-the-air gradient aggregation (the paper's core, Sec. II): the single
+entry point over the scheme registry and the three execution backends.
 
-Every scheme is expressed as a *device-side transform* of the local gradient
-pytree plus a *server-side post-transform* of the superposed signal
+Every scheme is a device-side transform of the local gradient pytree plus a
+server-side post-transform of the superposed signal
 
     y = a * ( sum_k h_k b_k x_k + z ),      z ~ N(0, sigma^2 I)      (eq. 10)
 
-followed by the model update ``w <- w - eta * y`` (eq. 11).
+followed by the model update ``w <- w - eta * y`` (eq. 11).  The schemes
+themselves (normalized — eq. 12 —, benchmark1/2, onebit, clipped, ...) are
+defined ONCE in ``repro.core.schemes``; this module contains only
+backend-independent plumbing and the vmap backend's math.
 
-Schemes
--------
-``normalized``      x_k = g_k / ||g_k||                 (the paper, eq. 12)
-``raw``             x_k = g_k                            (no power discipline; diagnostic)
-``benchmark1``      x_k = g_k / G                        (raw gradient under the
-                    conservative max-norm assumption of [7] — the worst-case
-                    bound G is what keeps the transmit amplitude <= b_k^max)
-``benchmark2``      x_k = (g_k - mean_k) / std_k         ([13]; mean/std sent as
-                    error-free side info and folded back in at the server)
-``onebit``          x_k = sign(g_k)/sqrt(N)              ([12]; server takes the
-                    sign of the aggregate — over-the-air signSGD-MV.  The 1/sqrt(N)
-                    keeps ||x_k|| = 1 so the transmit power discipline matches.)
-``mean``            ideal noiseless FedSGD mean          (upper-bound reference)
+Backends (``OTAConfig.backend`` / ``FLConfig.backend``):
 
-All transforms act on *stacked* gradient pytrees whose leaves carry a leading
-device axis K (produced by ``jax.vmap`` over clients).  The mesh/shard_map
-variant, where each data shard is one device and the superposition is a single
-``psum``, lives in ``repro.distribution.ota_collectives``.
+``vmap``     transforms act on *stacked* pytrees whose leaves carry a leading
+             device axis K (``jax.vmap`` over clients); superposition is one
+             fused fp32 tensordot per leaf.  Implemented here.
+``kernels``  same stacked layout through the fused Pallas kernels — one
+             batched [K, N] moments kernel for the per-device statistics and
+             one fused superpose kernel with a per-device scale vector
+             (``repro.fed.kernel_path``).
+``mesh``     each data shard of a TPU mesh is one device; the superposition
+             is a single ``psum`` (``repro.distribution.ota_collectives``).
+
+All three consume the same ``Scheme`` objects, draw channel noise through the
+same per-leaf key schedule, and agree allclose on the update direction y for
+every registered scheme (tests/test_backends.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import schemes
+
 PyTree = Any
 
-SCHEMES = ("normalized", "normalized_per_tensor", "raw", "benchmark1",
-           "benchmark2", "onebit", "mean")
+BACKENDS = ("vmap", "kernels", "mesh")
 
-_EPS = 1e-12
+
+def __getattr__(name):
+    # SCHEMES stays live as the registry grows (PEP 562): schemes registered
+    # after import (repro.core.register_scheme) appear immediately
+    if name == "SCHEMES":
+        return schemes.names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+_EPS = schemes.EPS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,16 +60,17 @@ class OTAConfig:
     scheme: str = "normalized"
     a: float = 1.0                       # receiver gain (server side)
     noise_var: float = 0.0               # sigma^2 of the AWGN at the ES
-    grad_bound: Optional[float] = None   # G, required by benchmark1
+    grad_bound: Optional[float] = None   # G, required by benchmark1/clipped
     # When True the noise term is omitted (ideal channel); used by tests that
     # isolate the deterministic part of a scheme.
     noiseless: bool = False
+    # which execution backend aggregate() routes through
+    backend: str = "vmap"
 
     def __post_init__(self):
-        if self.scheme not in SCHEMES:
-            raise ValueError(f"unknown scheme {self.scheme!r}; one of {SCHEMES}")
-        if self.scheme == "benchmark1" and self.grad_bound is None:
-            raise ValueError("benchmark1 requires grad_bound (the max-norm G)")
+        schemes.validate_config(self.scheme, self.grad_bound)
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; one of {BACKENDS}")
 
 
 # ---------------------------------------------------------------------------
@@ -95,112 +105,64 @@ def per_device_mean_std(stacked: PyTree) -> Tuple[jax.Array, jax.Array]:
     return mean, jnp.sqrt(var)
 
 
-def _scale_per_device(stacked: PyTree, scale: jax.Array) -> PyTree:
-    """Multiply each device's slice by scale[k] (broadcast over trailing dims)."""
-    def one(l):
-        s = scale.astype(l.dtype).reshape((l.shape[0],) + (1,) * (l.ndim - 1))
-        return l * s
-    return jax.tree_util.tree_map(one, stacked)
-
-
-def _shift_per_device(stacked: PyTree, shift: jax.Array) -> PyTree:
-    def one(l):
-        s = shift.astype(l.dtype).reshape((l.shape[0],) + (1,) * (l.ndim - 1))
-        return l + s
-    return jax.tree_util.tree_map(one, stacked)
-
-
 # ---------------------------------------------------------------------------
-# device-side transforms
+# device-side transforms (registry-driven)
 
 
 def device_transform(scheme: str, stacked_grads: PyTree,
                      grad_bound: Optional[float] = None) -> Tuple[PyTree, dict]:
     """Apply a scheme's device-side transform.  Returns (x_k stack, side_info)."""
-    if scheme in ("mean", "raw"):
+    sch = schemes.get(scheme)
+    if sch.baseline:
         return stacked_grads, {}
-    if scheme == "normalized":
-        norms = per_device_norm(stacked_grads)
-        return _scale_per_device(stacked_grads, 1.0 / (norms + _EPS)), {}
-    if scheme == "normalized_per_tensor":
-        # beyond-paper variant (DESIGN.md §4): each tensor normalized by its
-        # own norm (LARS-flavoured), then scaled by 1/sqrt(#tensors) so the
-        # total transmit norm is 1 — useful for MoE where a cold expert's
-        # gradient would otherwise be drowned by the dense layers.
-        leaves = jax.tree_util.tree_leaves(stacked_grads)
-        n_t = len(leaves)
-        def one(l):
-            lf = l.astype(jnp.float32)
-            norm = jnp.sqrt(jnp.sum(jnp.square(lf.reshape(l.shape[0], -1)), axis=1))
-            scale = (1.0 / ((norm + _EPS) * jnp.sqrt(float(n_t))))
-            return lf * scale.reshape((l.shape[0],) + (1,) * (l.ndim - 1))
-        return jax.tree_util.tree_map(one, stacked_grads), {}
-    if scheme == "benchmark1":
-        g = jnp.asarray(grad_bound, jnp.float32)
-        leaves0 = jax.tree_util.tree_leaves(stacked_grads)
-        k = leaves0[0].shape[0]
-        return _scale_per_device(stacked_grads, jnp.full((k,), 1.0) / g), {}
-    if scheme == "benchmark2":
-        # Standardize, then scale by 1/sqrt(N) so the transmitted signal obeys
-        # the SAME per-round energy budget as the other schemes (||x|| = 1).
-        # The raw [13] operation leaves ||x|| = sqrt(N) — an unbounded
-        # amplitude, which is exactly the paper's critique; comparing at
-        # sqrt(N)x the transmit energy would be meaningless.  The server
-        # folds the sqrt(N) back in (it knows the model dimension).
-        mean, std = per_device_mean_std(stacked_grads)
-        n = tree_num_elements(stacked_grads)
-        centred = _shift_per_device(stacked_grads, -mean)
-        x = _scale_per_device(centred, 1.0 / ((std + _EPS) * jnp.sqrt(float(n))))
-        return x, {"mean": mean, "std": std, "sqrt_n": float(n) ** 0.5}
-    if scheme == "onebit":
-        n = tree_num_elements(stacked_grads)
-        inv_sqrt_n = 1.0 / jnp.sqrt(jnp.asarray(n, jnp.float32))
-        x = jax.tree_util.tree_map(lambda l: jnp.sign(l) * inv_sqrt_n, stacked_grads)
-        return x, {}
-    raise ValueError(scheme)
+    stats = schemes.compute_stats(stacked_grads, sch, batched=True)
+    x = schemes.transform(sch, stacked_grads, stats, grad_bound, batched=True)
+    side = sch.collect_side(stats) if sch.collect_side else {}
+    return x, side
 
 
 # ---------------------------------------------------------------------------
-# superposition + server-side post-transform
+# superposition + server-side post-transform (the vmap backend)
 
 
 def superpose(stacked_x: PyTree, h: jax.Array, b: jax.Array, a: float,
               key: Optional[jax.Array], noise_var: float) -> PyTree:
-    """The MAC channel: y = a (sum_k h_k b_k x_k + z).  One fused reduction."""
+    """The MAC channel: y = a (sum_k h_k b_k x_k + z), one fused reduction
+    per leaf.  Accumulates in fp32 regardless of the gradient dtype (bf16
+    gradients would otherwise lose mass in the K-way sum) — the same
+    ``reduce_dtype`` contract as the mesh path — and returns fp32 leaves."""
     hb = (h * b).astype(jnp.float32)
     summed = jax.tree_util.tree_map(
-        lambda l: jnp.tensordot(hb.astype(l.dtype), l, axes=(0, 0)), stacked_x)
+        lambda l: jnp.tensordot(hb, l.astype(jnp.float32), axes=(0, 0)), stacked_x)
     if key is not None and noise_var > 0.0:
-        flat, treedef = jax.tree_util.tree_flatten(summed)
-        keys = jax.random.split(key, len(flat))
-        flat = [l + jnp.sqrt(jnp.asarray(noise_var, l.dtype))
-                * jax.random.normal(k, l.shape, l.dtype) for l, k in zip(flat, keys)]
-        summed = jax.tree_util.tree_unflatten(treedef, flat)
+        summed = schemes.add_channel_noise(summed, key, noise_var)
     return jax.tree_util.tree_map(lambda l: jnp.asarray(a, l.dtype) * l, summed)
 
 
 def server_post(scheme: str, y: PyTree, side: dict, h: jax.Array,
                 b: jax.Array) -> PyTree:
     """Server-side reconstruction applied after the receiver gain."""
-    if scheme == "benchmark2":
-        hb = h * b
-        w = hb / (jnp.sum(hb) + _EPS)
-        std_bar = jnp.sum(w * side["std"]) * side["sqrt_n"]
-        mean_bar = jnp.sum(w * side["mean"])
-        return jax.tree_util.tree_map(lambda l: l * std_bar + mean_bar, y)
-    if scheme == "onebit":
-        return jax.tree_util.tree_map(jnp.sign, y)
-    return y
+    sch = schemes.get(scheme)
+    if sch.server_post is None:
+        return y
+    return sch.server_post(y, schemes.fold_side_stacked(side, h, b))
 
 
 def aggregate(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
               key: Optional[jax.Array] = None) -> PyTree:
-    """Full OTA aggregation: device transform -> superpose -> server post.
+    """Full OTA aggregation: device transform -> superpose -> server post,
+    on the backend selected by ``cfg.backend``.
 
     Returns the update direction ``y`` such that ``w <- w - eta * y``.
     """
-    if cfg.scheme == "mean":
-        k = jax.tree_util.tree_leaves(stacked_grads)[0].shape[0]
+    if cfg.backend == "kernels":
+        from repro.fed.kernel_path import aggregate_kernels
+        return aggregate_kernels(cfg, stacked_grads, h, b, key)
+    if cfg.backend == "mesh":
+        from repro.distribution.ota_collectives import aggregate_mesh
+        return aggregate_mesh(cfg, stacked_grads, h, b, key)
+
+    if schemes.get(cfg.scheme).baseline:
         return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), stacked_grads)
     x, side = device_transform(cfg.scheme, stacked_grads, cfg.grad_bound)
     noise_key = None if cfg.noiseless else key
@@ -214,6 +176,10 @@ def apply_update(params: PyTree, y: PyTree, eta) -> PyTree:
         lambda w, u: w - jnp.asarray(eta, w.dtype) * u.astype(w.dtype), params, y)
 
 
+# ---------------------------------------------------------------------------
+# power accounting
+
+
 def transmit_norms(scheme: str, stacked_grads: PyTree,
                    grad_bound: Optional[float] = None) -> jax.Array:
     """[K] transmit-signal norms ||x_k|| — the quantity the paper's power
@@ -222,3 +188,14 @@ def transmit_norms(scheme: str, stacked_grads: PyTree,
     headroom); for ``benchmark2`` it is sqrt(N) (unbounded per element)."""
     x, _ = device_transform(scheme, stacked_grads, grad_bound)
     return per_device_norm(x)
+
+
+def transmit_energy(scheme: str, stacked_grads: PyTree, b: jax.Array,
+                    grad_bound: Optional[float] = None) -> jax.Array:
+    """[K] per-round transmit energies b_k^2 ||x_k||^2 (the paper's eq. 8
+    power budget), via each scheme's analytic ``transmit_sq_norm`` — no
+    second pass over the gradients."""
+    sch = schemes.get(scheme)
+    stats = schemes.compute_stats(stacked_grads, sch, batched=True)
+    return (jnp.square(b.astype(jnp.float32))
+            * sch.transmit_sq_norm(stats, grad_bound))

@@ -1,0 +1,376 @@
+"""The scheme registry: every OTA aggregation scheme is defined exactly ONCE
+here and consumed unchanged by all three execution backends —
+
+* ``vmap``    (``repro.core.ota``)                  — leading device axis K
+* ``mesh``    (``repro.distribution.ota_collectives``) — one shard = one device
+* ``kernels`` (``repro.fed.kernel_path``)           — fused Pallas [K, N] path
+
+A scheme describes the paper's device-side transmit transform
+
+    x_k = ( pre(g_k) + shift_k ) * scale_k                       (per device)
+
+with ``pre`` an element-wise transform (identity, or sign for one-bit),
+``shift_k``/``scale_k`` per-device scalars derived from cheap per-device
+statistics (norm / moments), plus an optional server-side post-transform of
+the superposed signal and the error-free side information it needs.  Every
+scheme of this shape runs on the fused Pallas kernel path for free.
+
+What a scheme author implements (and NOTHING else — backends are generic):
+
+``device_scale(stats, grad_bound)``   per-device multiplicative scale.  Must
+    be written with element-wise jnp ops only: the same callable receives
+    ``[K]`` statistics arrays on the vmap/kernels backends and scalar
+    statistics on the mesh backend (each shard computes its own).
+``device_shift(stats, grad_bound)``   optional additive pre-scale shift
+    (benchmark2's ``-mean``).  Folds into a scalar post-kernel correction on
+    the kernels backend, so it costs nothing there.
+``pre``                               'identity' or 'sign'; applied in-register
+    inside the fused kernel.
+``tensor_scale(stats, grad_bound)``   for ``per_tensor=True`` schemes: one
+    scale per (device, tensor) instead of one per device.
+``collect_side(stats)`` / ``side_info`` the error-free side information the
+    server folds back in.  Backends reduce it with h_k b_k weights and hand
+    ``server_post(y, folded)`` the already-reduced values, so the same
+    post-transform works under both jnp-sum (vmap/kernels) and psum (mesh).
+``transmit_sq_norm(stats, grad_bound)`` per-device transmit energy
+    ``||x_k||^2`` — the quantity the paper's power constraint (eq. 8) bounds;
+    surfaced as the ``tx_energy`` diagnostic by the FL runtime.
+
+Registering here is the ONLY step: the registry drives ``SCHEMES``, config
+validation, and all three backends (demonstrated by the ``clipped`` scheme
+below, which exists in no other module yet runs on every backend — see
+tests/test_backends.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+EPS = 1e-12
+
+# element-wise pre-transforms the fused kernel knows how to apply in-register
+PRE_TRANSFORMS = {
+    "identity": lambda x: x,
+    "sign": jnp.sign,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceStats:
+    """Per-device gradient statistics, backend-layout agnostic.
+
+    Arrays are ``[K]`` in the stacked (vmap / kernels) layout and scalars in
+    the mesh (per-shard) layout; scheme callables must therefore use
+    element-wise jnp ops only.  ``count`` (= N, coordinates per device) is a
+    python int in both layouts.
+    """
+
+    count: int
+    sq_norm: jax.Array                                   # ||g_k||^2, global
+    total: Optional[jax.Array] = None                    # sum_j g_k[j]
+    tensor_sq_norms: Optional[Tuple[jax.Array, ...]] = None
+
+    @property
+    def norm(self) -> jax.Array:
+        return jnp.sqrt(self.sq_norm)
+
+    @property
+    def mean(self) -> jax.Array:
+        return self.total / self.count
+
+    @property
+    def var(self) -> jax.Array:
+        return jnp.maximum(self.sq_norm / self.count - jnp.square(self.mean), 0.0)
+
+    @property
+    def std(self) -> jax.Array:
+        return jnp.sqrt(self.var)
+
+
+ScaleFn = Callable[[DeviceStats, Optional[float]], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    """One OTA aggregation scheme (see module docstring for the contract)."""
+
+    name: str
+    doc: str = ""
+    pre: str = "identity"
+    per_tensor: bool = False
+    needs_moments: bool = False
+    requires_grad_bound: bool = False
+    # ideal (non-OTA) reference that bypasses the channel entirely — every
+    # backend aggregates it as a plain mean
+    baseline: bool = False
+    side_info: Tuple[str, ...] = ()
+    device_scale: Optional[ScaleFn] = None
+    device_shift: Optional[ScaleFn] = None
+    tensor_scale: Optional[Callable[[DeviceStats, Optional[float]],
+                                    Tuple[jax.Array, ...]]] = None
+    collect_side: Optional[Callable[[DeviceStats], Dict[str, Any]]] = None
+    server_post: Optional[Callable[[PyTree, Dict[str, Any]], PyTree]] = None
+    transmit_sq_norm: Optional[ScaleFn] = None
+
+    def __post_init__(self):
+        # the registration IS the whole extension step, so an incomplete
+        # scheme must fail HERE — not diverge silently between backends later
+        if self.pre not in PRE_TRANSFORMS:
+            raise ValueError(f"unknown pre-transform {self.pre!r}")
+        if self.transmit_sq_norm is None:
+            raise ValueError(f"scheme {self.name!r} needs transmit_sq_norm "
+                             "(eq. 8 energy accounting)")
+        if self.baseline:
+            return
+        if self.per_tensor:
+            if self.tensor_scale is None:
+                raise ValueError(
+                    f"per_tensor scheme {self.name!r} needs tensor_scale")
+            if self.device_shift is not None:
+                raise ValueError(
+                    f"per_tensor scheme {self.name!r} cannot use device_shift "
+                    "(unsupported by the backends)")
+        elif self.device_scale is None:
+            raise ValueError(f"scheme {self.name!r} needs device_scale "
+                             "(or per_tensor + tensor_scale, or baseline=True)")
+
+
+_REGISTRY: Dict[str, Scheme] = {}
+
+
+def register(scheme: Scheme) -> Scheme:
+    if scheme.name in _REGISTRY:
+        raise ValueError(f"scheme {scheme.name!r} already registered")
+    _REGISTRY[scheme.name] = scheme
+    return scheme
+
+
+def get(name: str) -> Scheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; one of {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def validate_config(name: str, grad_bound: Optional[float]) -> Scheme:
+    """Shared config validation: raised identically by ``OTAConfig`` and the
+    mesh path's ``ota_psum`` (which previously let ``grad_bound=None`` slip
+    through into NaNs)."""
+    sch = get(name)
+    if sch.requires_grad_bound and grad_bound is None:
+        raise ValueError(f"{name} requires grad_bound (the max-norm G)")
+    return sch
+
+
+# ---------------------------------------------------------------------------
+# backend-shared math
+
+
+def compute_stats(tree: PyTree, scheme: Scheme, *, batched: bool) -> DeviceStats:
+    """Per-device statistics; ``batched=True`` treats leaves' leading axis as
+    the device axis K, ``batched=False`` reduces the whole (per-shard) tree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if batched:
+        k = leaves[0].shape[0]
+        flat = [l.astype(jnp.float32).reshape(k, -1) for l in leaves]
+        axis = 1
+    else:
+        flat = [l.astype(jnp.float32).reshape(-1) for l in leaves]
+        axis = 0
+    count = sum(l.shape[axis] for l in flat)
+    tensor_sq = tuple(jnp.sum(jnp.square(l), axis=axis) for l in flat)
+    sq_norm = sum(tensor_sq)
+    total = (sum(jnp.sum(l, axis=axis) for l in flat)
+             if scheme.needs_moments else None)
+    return DeviceStats(count=count, sq_norm=sq_norm, total=total,
+                       tensor_sq_norms=tensor_sq if scheme.per_tensor else None)
+
+
+def _bcast(v, leaf, batched: bool):
+    v = jnp.asarray(v)
+    if batched:
+        return v.reshape((leaf.shape[0],) + (1,) * (leaf.ndim - 1))
+    return v
+
+
+def transform(scheme: Scheme, tree: PyTree, stats: DeviceStats,
+              grad_bound: Optional[float] = None, *, batched: bool,
+              extra_scale=None, out_dtype=None) -> PyTree:
+    """Apply ``x_k = (pre(g_k) + shift_k) * scale_k`` over a gradient pytree.
+
+    ``extra_scale`` is an additional per-device factor folded into the scale —
+    the mesh backend passes ``h_k b_k`` here so its single psum IS the
+    over-the-air superposition.  ``out_dtype=None`` keeps each leaf's dtype
+    (vmap path); the mesh path passes float32 (its ``reduce_dtype`` contract).
+    """
+    pre = PRE_TRANSFORMS[scheme.pre]
+    if scheme.per_tensor:
+        scales = scheme.tensor_scale(stats, grad_bound)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        for l, s in zip(leaves, scales):
+            if extra_scale is not None:
+                s = s * extra_scale
+            lf = pre(l.astype(jnp.float32))
+            out.append(lf * _bcast(s, l, batched))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    scale = scheme.device_scale(stats, grad_bound)
+    if extra_scale is not None:
+        scale = scale * extra_scale
+    shift = (scheme.device_shift(stats, grad_bound)
+             if scheme.device_shift is not None else None)
+
+    def one(l):
+        if out_dtype is not None:
+            l = l.astype(out_dtype)
+        x = pre(l)
+        if shift is not None:
+            x = x + _bcast(shift, l, batched).astype(l.dtype)
+        return x * _bcast(scale, l, batched).astype(l.dtype)
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def fold_side(side: Dict[str, Any], weighted_mean: Callable) -> Dict[str, Any]:
+    """Reduce per-device side info to the server's view.  ``weighted_mean``
+    is backend-supplied: an h_k b_k-weighted ``jnp.sum`` on the stacked
+    backends, an h_k b_k-weighted ``psum`` on the mesh backend.  Python
+    numbers (dimension constants like sqrt_n) pass through unreduced."""
+    return {k: (weighted_mean(v) if isinstance(v, jax.Array) else v)
+            for k, v in side.items()}
+
+
+def fold_side_stacked(side: Dict[str, Any], h: jax.Array,
+                      b: jax.Array) -> Dict[str, Any]:
+    """The stacked-layout ([K] side info) fold both the vmap and kernels
+    backends use — one definition, so their server post-transforms stay
+    bitwise identical (the noisy parity contract)."""
+    hb = (h * b).astype(jnp.float32)
+    w = hb / (jnp.sum(hb) + EPS)
+    return fold_side(side, lambda v: jnp.sum(w * v))
+
+
+def add_channel_noise(tree: PyTree, key: jax.Array, noise_var: float) -> PyTree:
+    """Add the ES receiver noise z ~ N(0, sigma^2 I), one subkey per leaf.
+
+    Every backend draws noise through this function with the SAME
+    single-device tree structure, so a shared key gives bitwise-identical
+    noise on vmap, mesh, and kernels — the property the three-way parity
+    tests rely on."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(flat))
+    std = jnp.sqrt(jnp.asarray(noise_var, jnp.float32))
+    flat = [l + std * jax.random.normal(k, l.shape, jnp.float32)
+            for l, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+# ---------------------------------------------------------------------------
+# the registered schemes
+
+
+def _ones(st: DeviceStats) -> jax.Array:
+    return jnp.ones_like(st.sq_norm)
+
+
+register(Scheme(
+    name="normalized",
+    doc="x_k = g_k / ||g_k||  (the paper, eq. 12)",
+    device_scale=lambda st, gb: 1.0 / (st.norm + EPS),
+    transmit_sq_norm=lambda st, gb: _ones(st),
+))
+
+register(Scheme(
+    name="normalized_per_tensor",
+    doc="beyond-paper LARS-flavoured variant: each tensor normalized by its "
+        "own norm, scaled 1/sqrt(#tensors) so the total transmit norm is 1 — "
+        "keeps a cold MoE expert's gradient from being drowned by the dense "
+        "layers",
+    per_tensor=True,
+    tensor_scale=lambda st, gb: tuple(
+        1.0 / ((jnp.sqrt(t) + EPS) * math.sqrt(len(st.tensor_sq_norms)))
+        for t in st.tensor_sq_norms),
+    transmit_sq_norm=lambda st, gb: _ones(st),
+))
+
+register(Scheme(
+    name="raw",
+    doc="x_k = g_k (no power discipline; diagnostic)",
+    device_scale=lambda st, gb: _ones(st),
+    transmit_sq_norm=lambda st, gb: st.sq_norm,
+))
+
+register(Scheme(
+    name="benchmark1",
+    doc="x_k = g_k / G — raw gradient under the conservative max-norm "
+        "assumption of [7]; the worst-case bound G keeps the transmit "
+        "amplitude <= b_k^max",
+    requires_grad_bound=True,
+    device_scale=lambda st, gb: _ones(st) / gb,
+    transmit_sq_norm=lambda st, gb: st.sq_norm / (gb * gb),
+))
+
+
+def _benchmark2_post(y: PyTree, folded: Dict[str, Any]) -> PyTree:
+    std_bar = folded["std"] * folded["sqrt_n"]
+    mean_bar = folded["mean"]
+    return jax.tree_util.tree_map(lambda l: l * std_bar + mean_bar, y)
+
+
+register(Scheme(
+    name="benchmark2",
+    doc="x_k = (g_k - mean_k) / (std_k sqrt(N)) — standardization of [13], "
+        "made energy-fair: the raw operation leaves ||x|| = sqrt(N) (the "
+        "paper's unboundedness critique), so we rescale to unit norm and the "
+        "server folds sqrt(N) back in (it knows the model dimension)",
+    needs_moments=True,
+    side_info=("mean", "std", "sqrt_n"),
+    device_scale=lambda st, gb: 1.0 / ((st.std + EPS) * math.sqrt(st.count)),
+    device_shift=lambda st, gb: -st.mean,
+    collect_side=lambda st: {"mean": st.mean, "std": st.std,
+                             "sqrt_n": math.sqrt(st.count)},
+    server_post=_benchmark2_post,
+    transmit_sq_norm=lambda st, gb: st.var / jnp.square(st.std + EPS),
+))
+
+register(Scheme(
+    name="onebit",
+    doc="x_k = sign(g_k)/sqrt(N) ([12]; over-the-air signSGD-MV — the server "
+        "takes the sign of the aggregate; 1/sqrt(N) keeps ||x_k|| = 1 so the "
+        "transmit power discipline matches)",
+    pre="sign",
+    device_scale=lambda st, gb: _ones(st) / math.sqrt(st.count),
+    server_post=lambda y, folded: jax.tree_util.tree_map(jnp.sign, y),
+    transmit_sq_norm=lambda st, gb: _ones(st),
+))
+
+register(Scheme(
+    name="mean",
+    doc="ideal noiseless FedSGD mean (upper-bound reference; bypasses the "
+        "channel entirely — every backend special-cases it)",
+    baseline=True,
+    transmit_sq_norm=lambda st, gb: st.sq_norm,
+))
+
+register(Scheme(
+    name="clipped",
+    doc="x_k = g_k / max(||g_k||, G) — truncated-norm transmit: small "
+        "gradients keep their magnitude information (like benchmark1) while "
+        "large ones are clipped to the unit ball (no benchmark1 headroom "
+        "waste).  Registered ONLY here, runs on all three backends — the "
+        "registry's one-module extension contract.",
+    requires_grad_bound=True,
+    device_scale=lambda st, gb: 1.0 / jnp.maximum(st.norm, gb),
+    transmit_sq_norm=lambda st, gb: jnp.minimum(st.sq_norm / (gb * gb), 1.0),
+))

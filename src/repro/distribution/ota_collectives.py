@@ -1,19 +1,29 @@
-"""The paper's aggregation as a first-class mesh collective: ``ota_psum``.
+"""The paper's aggregation as a first-class mesh collective: ``ota_psum`` —
+the *mesh backend* of ``repro.core.ota.aggregate``.
 
 Inside a ``jax.shard_map`` whose *manual* axes are the FL-client axes
 (('data',) on one pod; ('pod',) or ('pod','data') across pods), each shard
 plays one mobile device of the paper's system:
 
-    g_k  --normalize-->  x_k  --* h_k b_k-->  [psum over client axes]  --*a, +a z-->
+    g_k  --scheme transform-->  x_k * h_k b_k  --[psum over client axes]-->  *a, +a z
 
 The single ``psum`` *is* the over-the-air superposition (DESIGN.md §2): the
 paper's method costs exactly the same collective bytes as a standard
 data-parallel all-reduce, plus two scalar psums for the norm bookkeeping —
 which the roofline table in EXPERIMENTS.md confirms.
 
+Since the registry refactor this module contains NO scheme math: the
+device-side transform, side-info spec, and server post-transform all come
+from ``repro.core.schemes``, with ``h_k b_k`` folded into the per-device
+scale so the psum needs no second pass.  Adding a scheme to the registry
+makes it available here unchanged.
+
 The channel noise ``a*z`` is added *after* the psum from a key that is
 replicated across shards, so every client computes the identical server-side
-result (model replicas stay bitwise in sync, as Step 3 "Broadcast" requires).
+result (model replicas stay bitwise in sync, as Step 3 "Broadcast" requires);
+the per-leaf key schedule is shared with the other backends
+(``schemes.add_channel_noise``), which is what makes noisy three-way parity
+exact.
 """
 from __future__ import annotations
 
@@ -21,9 +31,12 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schemes
 
 PyTree = Any
-_EPS = 1e-12
+_EPS = schemes.EPS
 
 
 def client_index(axis_names: Sequence[str]) -> jax.Array:
@@ -39,12 +52,6 @@ def _tree_sq_norm(tree: PyTree) -> jax.Array:
                for l in jax.tree_util.tree_leaves(tree))
 
 
-def _tree_sum_count(tree: PyTree) -> Tuple[jax.Array, int]:
-    s = sum(jnp.sum(l.astype(jnp.float32)) for l in jax.tree_util.tree_leaves(tree))
-    n = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(tree))
-    return s, n
-
-
 def _psum_tree(tree: PyTree, axes) -> PyTree:
     return jax.tree_util.tree_map(lambda l: jax.lax.psum(l, axes), tree)
 
@@ -53,27 +60,45 @@ def _scale_tree(tree: PyTree, s) -> PyTree:
     return jax.tree_util.tree_map(lambda l: (l.astype(jnp.float32) * s), tree)
 
 
-def _add_noise(tree: PyTree, key, a: float, noise_var: float) -> PyTree:
-    flat, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(flat))
-    std = jnp.sqrt(jnp.asarray(noise_var, jnp.float32)) * a
-    flat = [l + std * jax.random.normal(k, l.shape, jnp.float32)
-            for l, k in zip(flat, keys)]
-    return jax.tree_util.tree_unflatten(treedef, flat)
+def _local_stats_kernels(grads: PyTree, sch) -> "schemes.DeviceStats":
+    """Per-shard statistics via the blocked Pallas reduction instead of plain
+    jnp — the HBM-bound part of each client's transform on the fused kernel
+    (``repro.kernels``); used when the mesh train step opts into
+    ``stats_impl='kernels'`` (the default in ``repro.launch.train``)."""
+    from repro.kernels import ops as kops
+    leaves = jax.tree_util.tree_leaves(grads)
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(1, -1) for l in leaves], axis=1)
+    sumsq, total = kops.batched_moments(flat)
+    tensor_sq = None
+    if sch.per_tensor:
+        tensor_sq = tuple(
+            kops.batched_moments(l.astype(jnp.float32).reshape(1, -1))[0][0]
+            for l in leaves)
+    return schemes.DeviceStats(
+        count=flat.shape[1], sq_norm=sumsq[0],
+        total=total[0] if sch.needs_moments else None,
+        tensor_sq_norms=tensor_sq)
 
 
 def ota_psum(grads: PyTree, *, scheme: str, axes: Tuple[str, ...],
              h: jax.Array, b: jax.Array, a: float, noise_var: float,
              key: Optional[jax.Array] = None,
              grad_bound: Optional[float] = None,
-             reduce_dtype=None) -> PyTree:
+             reduce_dtype=None, stats_impl: str = "jnp") -> PyTree:
     """Aggregate this shard's gradient with every other FL client's, over the
     air.  ``h``/``b`` are the full [K] per-client arrays (replicated); each
     shard selects its own coefficient by mesh position.
 
     Returns the server-side update direction y (identical on all clients).
     """
-    if scheme == "mean":
+    # same validation as OTAConfig.__post_init__ — a silent grad_bound=None
+    # here used to reach benchmark1's division and produce NaNs
+    sch = schemes.validate_config(scheme, grad_bound)
+    if stats_impl not in ("jnp", "kernels"):
+        raise ValueError(f"unknown stats_impl {stats_impl!r}")
+
+    if sch.baseline:
         k_total = 1
         for ax in axes:
             k_total *= jax.lax.axis_size(ax)
@@ -83,43 +108,11 @@ def ota_psum(grads: PyTree, *, scheme: str, axes: Tuple[str, ...],
     hk = h[me].astype(jnp.float32)
     bk = b[me].astype(jnp.float32)
 
-    if scheme == "normalized":
-        norm = jnp.sqrt(_tree_sq_norm(grads))
-        x = _scale_tree(grads, hk * bk / (norm + _EPS))
-        side = None
-    elif scheme == "normalized_per_tensor":
-        leaves = jax.tree_util.tree_leaves(grads)
-        n_t = float(len(leaves))
-        x = jax.tree_util.tree_map(
-            lambda l: l.astype(jnp.float32) * (hk * bk / (
-                (jnp.sqrt(jnp.sum(jnp.square(l.astype(jnp.float32)))) + _EPS)
-                * jnp.sqrt(n_t))), grads)
-        side = None
-    elif scheme == "raw":
-        x = _scale_tree(grads, hk * bk)
-        side = None
-    elif scheme == "benchmark1":
-        x = _scale_tree(grads, hk * bk / jnp.asarray(grad_bound, jnp.float32))
-        side = None
-    elif scheme == "benchmark2":
-        # energy-fair standardization (see repro.core.ota.device_transform)
-        s, n = _tree_sum_count(grads)
-        mean = s / n
-        var = jnp.maximum(_tree_sq_norm(grads) / n - mean * mean, 0.0)
-        std = jnp.sqrt(var)
-        sqrt_n = float(n) ** 0.5
-        x = jax.tree_util.tree_map(
-            lambda l: (l.astype(jnp.float32) - mean)
-            * (hk * bk / ((std + _EPS) * sqrt_n)), grads)
-        side = (mean, std, sqrt_n)
-    elif scheme == "onebit":
-        _, n = _tree_sum_count(grads)
-        x = jax.tree_util.tree_map(
-            lambda l: jnp.sign(l.astype(jnp.float32)) * (hk * bk / jnp.sqrt(float(n))),
-            grads)
-        side = None
-    else:
-        raise ValueError(f"unknown scheme {scheme!r}")
+    stats = (_local_stats_kernels(grads, sch) if stats_impl == "kernels"
+             else schemes.compute_stats(grads, sch, batched=False))
+    # h_k b_k folds into the per-device scale: the psum below IS eq. (10)
+    x = schemes.transform(sch, grads, stats, grad_bound, batched=False,
+                          extra_scale=hk * bk, out_dtype=jnp.float32)
 
     if reduce_dtype is not None:
         # beyond-paper §Perf lever: superpose in bf16 (halves the gradient
@@ -130,15 +123,51 @@ def ota_psum(grads: PyTree, *, scheme: str, axes: Tuple[str, ...],
     y = _psum_tree(x, axes)                       # <-- the over-the-air superposition
     y = jax.tree_util.tree_map(lambda l: l.astype(jnp.float32), y)
     if key is not None and noise_var > 0.0:
-        y = _add_noise(y, key, 1.0, noise_var)    # z added once, pre-gain
+        y = schemes.add_channel_noise(y, key, noise_var)  # z added once, pre-gain
     y = _scale_tree(y, jnp.asarray(a, jnp.float32))
 
-    if scheme == "benchmark2":
-        mean, std, sqrt_n = side
-        sum_hb = jax.lax.psum(hk * bk, axes)
-        std_bar = jax.lax.psum(hk * bk * std, axes) / (sum_hb + _EPS) * sqrt_n
-        mean_bar = jax.lax.psum(hk * bk * mean, axes) / (sum_hb + _EPS)
-        y = jax.tree_util.tree_map(lambda l: l * std_bar + mean_bar, y)
-    elif scheme == "onebit":
-        y = jax.tree_util.tree_map(jnp.sign, y)
+    if sch.server_post is not None:
+        folded = {}
+        if sch.collect_side is not None:
+            side = sch.collect_side(stats)
+            sum_hb = jax.lax.psum(hk * bk, axes)
+            folded = schemes.fold_side(
+                side, lambda v: jax.lax.psum(hk * bk * v, axes) / (sum_hb + _EPS))
+        y = sch.server_post(y, folded)
     return y
+
+
+def aggregate_mesh(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
+                   key: Optional[jax.Array] = None) -> PyTree:
+    """The mesh backend behind ``core.ota.aggregate``: scatter a *stacked*
+    [K, ...] gradient pytree over a 1-D mesh of local devices (one shard per
+    FL client) and run ``ota_psum``.
+
+    Needs >= K addressable devices (force them on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K``)."""
+    from jax.sharding import PartitionSpec as P
+
+    leaves = jax.tree_util.tree_leaves(stacked_grads)
+    k = leaves[0].shape[0]
+    devs = jax.devices()
+    if len(devs) < k:
+        raise ValueError(
+            f"mesh backend needs >= {k} local devices for {k} FL clients, "
+            f"have {len(devs)}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count or use the "
+            "'vmap'/'kernels' backend")
+    mesh = jax.sharding.Mesh(np.asarray(devs[:k]), ("ota_clients",))
+    use_noise = (key is not None and not cfg.noiseless and cfg.noise_var > 0.0)
+    key_arr = key if use_noise else jax.random.PRNGKey(0)
+
+    def per_client(stack_slice, nk):
+        g = jax.tree_util.tree_map(lambda l: l[0], stack_slice)  # drop K axis
+        return ota_psum(g, scheme=cfg.scheme, axes=("ota_clients",), h=h, b=b,
+                        a=cfg.a, noise_var=cfg.noise_var,
+                        key=(nk if use_noise else None),
+                        grad_bound=cfg.grad_bound)
+
+    f = jax.shard_map(per_client, mesh=mesh,
+                      in_specs=(P("ota_clients"), P()), out_specs=P(),
+                      axis_names={"ota_clients"}, check_vma=False)
+    return f(stacked_grads, key_arr)

@@ -1,12 +1,29 @@
-"""Kernel-accelerated aggregation path.
+"""Kernel-accelerated aggregation: the *kernels backend* of
+``repro.core.ota.aggregate`` (``cfg.backend == 'kernels'``).
 
-On TPU the per-round hot loop of the paper's method is: global L2 norm of
-every device's gradient (HBM-bound reduction) followed by the fused
-normalize-amplify-superpose (eq. 10 with eq. 12).  This module routes the
-``normalized`` scheme through the Pallas kernels
-(``repro.kernels.grad_norm`` / ``repro.kernels.ota_aggregate``); on CPU the
-kernels execute under interpret=True, so this path is also the kernels'
-system-level integration test (vs ``repro.core.ota.aggregate``).
+On TPU the per-round hot loop of the paper's method is: per-device statistics
+over every device's flat gradient (HBM-bound reduction) followed by the fused
+scale-amplify-superpose (eq. 10).  Since the registry refactor this path is
+scheme-generic and device-batched:
+
+1. ONE batched Pallas ``pallas_call`` over a (K, blocks) grid
+   (``ops.batched_moments``) yields every device's sum-of-squares and sum —
+   no Python loop over devices, and the moments schemes (benchmark2) get
+   mean/std from the same HBM pass.
+2. ONE fused superpose kernel (``ops.ota_superpose``) takes a per-device
+   composite scale vector ``h_k b_k * scheme.device_scale(stats)`` plus an
+   optional in-register pre-transform (``sign`` for onebit), so every
+   norm-scaling scheme in ``repro.core.schemes`` lowers to the same kernel.
+   A per-device shift (benchmark2's ``-mean``) folds into one scalar
+   correction after the kernel — zero extra memory traffic.
+   ``normalized_per_tensor`` runs its per-(device, tensor) norms through the
+   batched kernel leaf-by-leaf (a loop over *tensors*, never over devices).
+
+Noise is drawn with the backend-shared per-leaf key schedule
+(``schemes.add_channel_noise``) so a shared key reproduces the vmap/mesh
+backends bitwise.  ``mean`` is the ideal non-OTA baseline and falls back to a
+plain average.  On CPU the kernels execute under interpret=True, so this path
+doubles as the kernels' system-level integration test (vs the vmap backend).
 """
 from __future__ import annotations
 
@@ -16,36 +33,100 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro.core import schemes
 from repro.kernels import ops
 
 PyTree = Any
+
+
+def _template_unravel(stacked: PyTree):
+    """Single-device f32 template of a stacked pytree + its unravel fn."""
+    template = jax.tree_util.tree_map(lambda l: l[0].astype(jnp.float32),
+                                      stacked)
+    _, unravel = ravel_pytree(template)
+    return template, unravel
+
+
+def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
+                      key: Optional[jax.Array] = None, *,
+                      interpret: Optional[bool] = None) -> PyTree:
+    """Pallas-kernel implementation of ``aggregate`` for any registered
+    norm-scaling scheme.  stacked_grads: pytree with leading device axis K;
+    returns the update direction y with the single-device pytree structure.
+    """
+    sch = schemes.validate_config(cfg.scheme, cfg.grad_bound)
+    if sch.baseline:
+        return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0),
+                                      stacked_grads)
+
+    leaves = jax.tree_util.tree_leaves(stacked_grads)
+    k = leaves[0].shape[0]
+    flat2d = [l.astype(jnp.float32).reshape(k, -1) for l in leaves]
+    hb = (h * b).astype(jnp.float32)
+    template, unravel = _template_unravel(stacked_grads)
+
+    shift = None
+    kernel_pre = sch.pre
+    if sch.per_tensor:
+        # per-(device, tensor) scales via the scheme's OWN tensor_scale:
+        # batched-moments kernel per LEAF (#tensors launches, each covering
+        # all K devices), pre-transform + scaling fused into the flatten
+        # pass; the superpose kernel then sees scale = h_k b_k.  ``pre``
+        # must apply BEFORE the tensor scales (matching schemes.transform),
+        # so it cannot run in-kernel here.
+        pre_fn = schemes.PRE_TRANSFORMS[sch.pre]
+        kernel_pre = "identity"
+        tensor_sq = tuple(
+            ops.batched_moments(l2, interpret=interpret)[0] for l2 in flat2d)
+        stats = schemes.DeviceStats(
+            count=sum(l2.shape[1] for l2 in flat2d),
+            sq_norm=sum(tensor_sq), tensor_sq_norms=tensor_sq)
+        scales = sch.tensor_scale(stats, cfg.grad_bound)
+        flat = jnp.concatenate(
+            [pre_fn(l2) * s[:, None] for l2, s in zip(flat2d, scales)], axis=1)
+        scale = hb
+    else:
+        flat = jnp.concatenate(flat2d, axis=1)
+        sumsq, total = ops.batched_moments(flat, interpret=interpret)
+        stats = schemes.DeviceStats(
+            count=flat.shape[1], sq_norm=sumsq,
+            total=total if sch.needs_moments else None)
+        scale = sch.device_scale(stats, cfg.grad_bound)
+        if sch.device_shift is not None:
+            shift = sch.device_shift(stats, cfg.grad_bound)
+        scale = scale * hb
+
+    n = flat.shape[1]
+    if key is not None and not cfg.noiseless and cfg.noise_var > 0.0:
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, template)
+        noise, _ = ravel_pytree(
+            schemes.add_channel_noise(zeros, key, cfg.noise_var))
+    else:
+        noise = jnp.zeros((n,), jnp.float32)
+
+    y_flat = ops.ota_superpose(flat, scale, noise, cfg.a, pre=kernel_pre,
+                               interpret=interpret)
+    if shift is not None:
+        # sum_k scale_k (g_k + shift_k) = kernel result + a * sum_k scale_k shift_k
+        y_flat = y_flat + jnp.asarray(cfg.a, jnp.float32) * jnp.sum(scale * shift)
+
+    y = unravel(y_flat)
+    if sch.server_post is not None:
+        folded = {}
+        if sch.collect_side is not None:
+            folded = schemes.fold_side_stacked(sch.collect_side(stats), h, b)
+        y = sch.server_post(y, folded)
+    return y
 
 
 def aggregate_normalized_kernels(stacked_grads: PyTree, h: jax.Array,
                                  b: jax.Array, a: float,
                                  key: Optional[jax.Array], noise_var: float,
                                  interpret: Optional[bool] = None) -> PyTree:
-    """Pallas-kernel implementation of the ``normalized`` scheme.
-
-    stacked_grads: pytree with leading device axis K.  Returns the update
-    direction y with the single-device pytree structure.
-    """
-    leaves = jax.tree_util.tree_leaves(stacked_grads)
-    k = leaves[0].shape[0]
-    # flatten each device's gradient to one vector (shared unravel)
-    _, unravel = ravel_pytree(jax.tree_util.tree_map(lambda l: l[0], stacked_grads))
-    flat = jnp.stack([ravel_pytree(
-        jax.tree_util.tree_map(lambda l: l[i], stacked_grads))[0]
-        for i in range(k)])                                     # [K, N]
-
-    norms = jnp.stack([ops.grad_norm(flat[i], interpret=interpret)
-                       for i in range(k)])                      # [K]
-    n = flat.shape[1]
-    if key is not None and noise_var > 0.0:
-        noise = jnp.sqrt(jnp.asarray(noise_var, jnp.float32)) \
-            * jax.random.normal(key, (n,), jnp.float32)
-    else:
-        noise = jnp.zeros((n,), jnp.float32)
-    y_flat = ops.ota_aggregate(flat, (h * b).astype(jnp.float32), norms,
-                               noise, a, interpret=interpret)
-    return unravel(y_flat)
+    """Back-compat wrapper: the pre-registry entry point for the
+    ``normalized`` scheme only."""
+    from repro.core.ota import OTAConfig
+    cfg = OTAConfig(scheme="normalized", a=a, noise_var=noise_var,
+                    backend="kernels")
+    return aggregate_kernels(cfg, stacked_grads, h, b, key,
+                             interpret=interpret)

@@ -1,9 +1,12 @@
 """Federated-learning runtime (paper Sec. II, Steps 1-3, iterated).
 
-Single-host simulation path: the K devices are a ``jax.vmap`` axis; one round
-(local gradients -> OTA superposition -> server update -> broadcast) is a
-single jitted program.  The mesh path (devices = data shards of a TPU mesh)
-lives in ``repro.distribution.ota_collectives`` / ``repro.launch.train``.
+The K devices are a ``jax.vmap`` axis; one round (local gradients -> OTA
+superposition -> server update -> broadcast) is a single jitted program.
+``FLConfig.backend`` selects which execution backend the aggregation routes
+through — ``vmap`` (pure XLA), ``kernels`` (fused Pallas path; the default
+for benchmarks), or ``mesh`` (shard_map/psum over local devices; needs >= K
+of them).  The production mesh train-step builder (devices = data shards of
+a TPU mesh) lives in ``repro.launch.train``.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ import numpy as np
 from repro.core import amplification as amp
 from repro.core import channel as chan
 from repro.core import ota
+from repro.core import schemes
 from repro.core.convergence import variance_term
 
 PyTree = Any
@@ -29,6 +33,7 @@ GradFn = Callable[[PyTree, Any], PyTree]   # (params, device_batch) -> grads
 class FLConfig:
     num_devices: int = 20
     scheme: str = "normalized"
+    backend: str = "vmap"             # 'vmap' | 'kernels' | 'mesh' (see core.ota)
     case: str = "I"                   # 'I' (eta_t = 1/t^p) or 'II' (constant eta)
     p: float = 0.75                   # Case-I schedule exponent (paper: 0.75)
     eta: float = 0.01                 # Case-II constant learning rate (paper: 0.01)
@@ -51,6 +56,9 @@ class FLConfig:
         if self.channel is None:
             object.__setattr__(self, "channel",
                                chan.ChannelConfig(num_devices=self.num_devices))
+        if self.backend not in ota.BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"one of {ota.BACKENDS}")
 
 
 @dataclasses.dataclass
@@ -61,6 +69,9 @@ class FLState:
     a: float
     eta0: float                       # eta for case II; eta_t = eta0/t^p for case I
     round: int = 0
+    # the real model dimension N, recorded at setup() time so block-fading
+    # re-optimization solves Problem 3 with the true n (not a placeholder)
+    model_dim: int = 0
 
 
 def setup(cfg: FLConfig, params0: PyTree, model_dim: int) -> FLState:
@@ -85,17 +96,18 @@ def setup(cfg: FLConfig, params0: PyTree, model_dim: int) -> FLState:
                                     s=cfg.s_target, epsilon=cfg.epsilon_target)
             a_eta = c2.a_eta * float(np.sum(h * c2.b)) / float(np.sum(h * b))
             a, eta0 = a_eta / cfg.eta, cfg.eta
-        return FLState(params0, h, b, a, eta0)
+        return FLState(params0, h, b, a, eta0, model_dim=model_dim)
 
     if cfg.case == "I":
         c1 = amp.optimize_case1(h, cfg.channel.noise_var, model_dim, b_max,
                                 cfg.smoothness_L, cfg.p, cfg.expected_loss_drop)
-        return FLState(params0, h, c1.b, c1.a, 1.0)
+        return FLState(params0, h, c1.b, c1.a, 1.0, model_dim=model_dim)
     c2 = amp.optimize_case2(h, cfg.channel.noise_var, model_dim, b_max,
                             cfg.smoothness_L, cfg.strong_convexity_M,
                             cfg.grad_bound, cfg.theta_th,
                             s=cfg.s_target, epsilon=cfg.epsilon_target)
-    return FLState(params0, h, c2.b, c2.a_eta / cfg.eta, cfg.eta)
+    return FLState(params0, h, c2.b, c2.a_eta / cfg.eta, cfg.eta,
+                   model_dim=model_dim)
 
 
 def _eta_t(cfg: FLConfig, eta0: float, t: jax.Array) -> jax.Array:
@@ -112,7 +124,9 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
     device_batches: pytree with leading [K, ...] axis (per-device minibatches).
     """
     ota_cfg_base = dict(scheme=cfg.scheme, noise_var=cfg.channel.noise_var,
-                        grad_bound=cfg.grad_bound)
+                        grad_bound=cfg.grad_bound, backend=cfg.backend)
+
+    sch = schemes.get(cfg.scheme)
 
     @jax.jit
     def round_step(params, device_batches, h, b, a, eta0, t, key):
@@ -121,12 +135,18 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
         y = ota.aggregate(ocfg, stacked, h, b, jax.random.fold_in(key, t))
         eta = _eta_t(cfg, eta0, t)
         new_params = ota.apply_update(params, y, eta)
-        norms = ota.per_device_norm(stacked)
+        # one stats pass feeds BOTH diagnostics (grad norms and the eq. 8
+        # transmit-energy accounting) — no second reduction over the grads
+        stats = schemes.compute_stats(stacked, sch, batched=True)
         diag = {
-            "grad_norms": norms,
+            "grad_norms": jnp.sqrt(stats.sq_norm),
             "update_norm": jnp.sqrt(sum(jnp.sum(jnp.square(l))
                                         for l in jax.tree_util.tree_leaves(y))),
             "eta": eta,
+            # per-device transmit energy b_k^2 ||x_k||^2 (eq. 8 budget) via
+            # the scheme's analytic accounting
+            "tx_energy": (jnp.square(b.astype(jnp.float32))
+                          * sch.transmit_sq_norm(stats, cfg.grad_bound)),
         }
         return new_params, diag
 
@@ -151,6 +171,10 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     # is held at its optimized value.
     block_fading = cfg.channel.block_fading
     if block_fading:
+        if state.model_dim <= 0:
+            raise ValueError("block fading re-solves Problem 3 with the real "
+                             "model dimension; FLState.model_dim is unset — "
+                             "build the state via setup()")
         eff_gain = state.a * float(np.sum(state.h * state.b))
         chan_key = jax.random.PRNGKey(cfg.seed + 2)
     hist: Dict[str, List] = {"round": [], "grad_norm_mean": [], "grad_norm_min": [],
@@ -161,7 +185,8 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
                 jax.random.fold_in(chan_key, t), cfg.channel), np.float64)
             if cfg.amplification == "optimal":
                 sol = amp.solve_problem3(h_np, cfg.channel.noise_var,
-                                         1000, cfg.channel.b_max, tol=1e-8)
+                                         state.model_dim, cfg.channel.b_max,
+                                         tol=1e-8)
                 b_np = sol.b
             else:
                 b_np = np.full(cfg.num_devices, cfg.channel.b_max)

@@ -1,14 +1,26 @@
-"""Pallas TPU kernel: blocked global L2-norm reduction.
+"""Pallas TPU kernels: blocked global reductions over flat gradients.
 
-The paper's device-side transform needs ``||g_k||`` over the *entire* flat
-gradient (millions of elements) before any element can be scaled — an
-HBM-bandwidth-bound two-pass reduction.  The kernel streams the vector
-through VMEM in lane-aligned ``(8, 1024)``-shaped blocks and emits one
-partial sum-of-squares per grid step; the (tiny) final add + sqrt happens in
-the jitted wrapper (``ops.grad_norm``).
+The paper's device-side transforms need per-device statistics over the
+*entire* flat gradient (millions of elements) before any element can be
+scaled — HBM-bandwidth-bound reductions.  Two kernels:
+
+``blocked_sumsq``          single-device [R, C] -> per-block sum-of-squares
+                           partials (the original kernel, kept for the
+                           single-vector ``ops.grad_norm``).
+``batched_blocked_moments`` the registry-refactor kernel: ALL K devices in one
+                           ``pallas_call`` over a ``(K, blocks)`` grid on a
+                           [K, R, C] view of the stacked flat gradients,
+                           emitting per-(device, block) sum-of-squares AND sum
+                           partials.  One launch replaces the old Python loop
+                           of K ``grad_norm`` calls, and the sum output gives
+                           the moments schemes (benchmark2) their mean/std
+                           from the same HBM pass.
+
+The (tiny) final block-sum + sqrt happens in the jitted wrappers
+(``ops.batched_moments`` / ``ops.batched_grad_norms``).
 
 Target: TPU (MXU/VPU 8x128 tiling); validated on CPU via interpret=True
-against ``ref.grad_norm_ref``.
+against ``ref.grad_norm_ref`` / ``ref.batched_moments_ref``.
 """
 from __future__ import annotations
 
@@ -33,7 +45,7 @@ def blocked_sumsq(x: jax.Array, *, block_rows: int = 256,
     rows, cols = x.shape
     br = min(block_rows, rows)
     if rows % br != 0:
-        raise ValueError(f"rows {rows} must divide block_rows {br}")
+        raise ValueError(f"block_rows {br} must divide rows {rows}")
     grid = (rows // br,)
     out = pl.pallas_call(
         _sumsq_kernel,
@@ -44,3 +56,35 @@ def blocked_sumsq(x: jax.Array, *, block_rows: int = 256,
         interpret=interpret,
     )(x)
     return out[:, 0]
+
+
+def _moments_kernel(x_ref, sq_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)          # [br, cols] tile of device i
+    sq_ref[0, 0] = jnp.sum(x * x)
+    s_ref[0, 0] = jnp.sum(x)
+
+
+def batched_blocked_moments(x: jax.Array, *, block_rows: int = 256,
+                            interpret: bool = True):
+    """Per-(device, block) partial moments of stacked flat gradients.
+
+    x: [K, R, C] (C lane-aligned; zero padding is moment-neutral).  One
+    ``pallas_call`` over a (K, R // block_rows) grid.  Returns
+    ``(sumsq, sums)`` each [K, num_blocks] f32.
+    """
+    k, rows, cols = x.shape
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        raise ValueError(f"block_rows {br} must divide rows {rows}")
+    grid = (k, rows // br)
+    out_shape = jax.ShapeDtypeStruct((k, grid[1]), jnp.float32)
+    sumsq, sums = pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, br, cols), lambda i, j: (i, j, 0))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(x)
+    return sumsq, sums

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_blocked
-from repro.kernels.grad_norm import blocked_sumsq
+from repro.kernels.grad_norm import batched_blocked_moments, blocked_sumsq
 from repro.kernels.ota_aggregate import ota_aggregate_blocked
 
 
@@ -24,15 +24,22 @@ def _default_interpret() -> bool:
 LANES = 1024  # trailing-dim packing for flat-vector kernels (8x128-aligned)
 
 
-def _pack_flat(x: jax.Array, lanes: int = LANES):
-    """Flatten + zero-pad a vector to [rows, lanes] (padding is norm-neutral)."""
+def _pack_flat(x: jax.Array, lanes: int = LANES,
+               block_rows: Optional[int] = None):
+    """Flatten + zero-pad a vector to [rows, lanes] (padding is norm- and
+    moment-neutral).  With ``block_rows``, rows are further padded to a
+    multiple of ``min(block_rows, rows)`` so the blocked kernels keep full
+    tiles for ANY N (instead of degrading the block size to a divisor);
+    returns (packed, n, effective_block_rows)."""
     flat = x.reshape(-1)
     n = flat.shape[0]
-    rows = -(-n // lanes)
+    rows = max(1, -(-n // lanes))
+    br = rows if block_rows is None else min(block_rows, rows)
+    rows = -(-rows // br) * br
     pad = rows * lanes - n
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat.reshape(rows, lanes), n
+    return flat.reshape(rows, lanes), n, br
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -40,34 +47,81 @@ def grad_norm(x: jax.Array, *, block_rows: int = 256,
               interpret: Optional[bool] = None) -> jax.Array:
     """Global L2 norm of a gradient vector via the blocked Pallas reduction."""
     interpret = _default_interpret() if interpret is None else interpret
-    x2, _ = _pack_flat(x)
-    rows = x2.shape[0]
-    br = block_rows
-    while rows % br != 0:   # static: shapes are concrete under jit
-        br -= 1
+    x2, _, br = _pack_flat(x, block_rows=block_rows)
     partials = blocked_sumsq(x2, block_rows=br, interpret=interpret)
     return jnp.sqrt(jnp.sum(partials))
+
+
+def _pack_flat_batched(g: jax.Array, lanes: int = LANES,
+                       block_rows: int = 256):
+    """[K, N] -> zero-padded [K, rows, lanes] with rows a multiple of the
+    effective block size (padding is moment-neutral); returns
+    (packed, n, effective_block_rows)."""
+    k, n = g.shape
+    rows = max(1, -(-n // lanes))
+    br = min(block_rows, rows)
+    rows = -(-rows // br) * br
+    pad = rows * lanes - n
+    if pad:
+        g = jnp.concatenate([g, jnp.zeros((k, pad), g.dtype)], axis=1)
+    return g.reshape(k, rows, lanes), n, br
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def batched_moments(g: jax.Array, *, block_rows: int = 256,
+                    interpret: Optional[bool] = None):
+    """Per-device (sum of squares, sum) of stacked flat gradients.
+
+    g: [K, N].  One batched Pallas reduction over a (K, blocks) grid — this
+    replaces K separate ``grad_norm`` launches.  Returns ([K], [K]) f32.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    g3, _, br = _pack_flat_batched(g, block_rows=block_rows)
+    sumsq, sums = batched_blocked_moments(g3, block_rows=br, interpret=interpret)
+    return jnp.sum(sumsq, axis=1), jnp.sum(sums, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def batched_grad_norms(g: jax.Array, *, block_rows: int = 256,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """[K] global L2 norms of stacked flat gradients, one pallas_call."""
+    sumsq, _ = batched_moments(g, block_rows=block_rows, interpret=interpret)
+    return jnp.sqrt(sumsq)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "pre"))
+def ota_superpose(g: jax.Array, scale: jax.Array, noise: jax.Array, a, *,
+                  pre: str = "identity", block: int = LANES,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Fused superposition y = a (sum_k scale_k pre(g_k) + z) (paper eq. 10).
+
+    g: [K, N]; scale: [K] composite per-device scale (h_k b_k x scheme
+    scale); noise: [N]; a: scalar; pre: 'identity' | 'sign'.  Every
+    norm-scaling scheme in the registry lowers to this one kernel.
+    Returns y [N] f32.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    k, n = g.shape
+    pad_rows = -(-n // block) * block - n
+    if pad_rows:
+        g = jnp.concatenate([g, jnp.zeros((k, pad_rows), g.dtype)], axis=1)
+        noise = jnp.concatenate([noise, jnp.zeros((pad_rows,), noise.dtype)])
+    y = ota_aggregate_blocked(g, scale.astype(jnp.float32), noise,
+                              jnp.asarray(a, jnp.float32), block=block,
+                              interpret=interpret, pre=pre)
+    return y[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def ota_aggregate(g: jax.Array, hb: jax.Array, norms: jax.Array,
                   noise: jax.Array, a, *, block: int = LANES,
                   interpret: Optional[bool] = None) -> jax.Array:
-    """Fused normalize-amplify-superpose (paper eq. 10 with eq. 12).
-
-    g: [K, N] stacked device gradients; hb: [K] h_k*b_k; norms: [K] ||g_k||;
-    noise: [N]; a: scalar.  Returns y [N] f32.
+    """Fused normalize-amplify-superpose (eq. 10 with eq. 12) — the
+    ``normalized``-scheme specialization of ``ota_superpose``, kept for
+    callers that already hold per-device norms.
     """
-    interpret = _default_interpret() if interpret is None else interpret
-    k, n = g.shape
     scale = hb.astype(jnp.float32) / (norms.astype(jnp.float32) + 1e-12)
-    pad_rows = -(-n // block) * block - n
-    if pad_rows:
-        g = jnp.concatenate([g, jnp.zeros((k, pad_rows), g.dtype)], axis=1)
-        noise = jnp.concatenate([noise, jnp.zeros((pad_rows,), noise.dtype)])
-    y = ota_aggregate_blocked(g, scale, noise, jnp.asarray(a, jnp.float32),
-                              block=block, interpret=interpret)
-    return y[:n]
+    return ota_superpose(g, scale, noise, a, block=block, interpret=interpret)
 
 
 @functools.partial(jax.jit,

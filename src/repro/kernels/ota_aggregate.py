@@ -1,29 +1,42 @@
-"""Pallas TPU kernel: fused OTA superposition.
+"""Pallas TPU kernel: fused OTA superposition for every norm-scaling scheme.
 
 Computes, for a block of the flat gradient dimension,
 
-    y[j] = a * ( sum_k (h_k b_k / ||g_k||) * g[k, j] + z[j] )
+    y[j] = a * ( sum_k scale_k * pre(g[k, j]) + z[j] )
 
 in one HBM pass: the K stacked device gradients stream through VMEM
-``(K, block)`` tiles, the per-device scale (amplification x channel x inverse
-norm — precomputed by ``grad_norm``) is applied in-register, the K-way
-reduction happens in VMEM, and the channel noise + receiver gain fuse into
-the same tile before write-back.  An unfused implementation reads the K
-gradients once for the scale, once for the sum and touches y three times;
-this kernel is the paper's entire eq. (10) as a single memory-bound sweep.
+``(K, block)`` tiles, the optional element-wise pre-transform (``sign`` for
+the one-bit scheme) and the per-device scale vector are applied in-register,
+the K-way reduction happens in VMEM, and the channel noise + receiver gain
+fuse into the same tile before write-back.
+
+``scale`` is a free per-device vector — the caller composes it as
+``h_k * b_k * scheme.device_scale(stats)`` — so the SAME kernel serves
+``normalized`` (h b / ||g||), ``benchmark1`` (h b / G), ``clipped``
+(h b / max(||g||, G)), ``onebit`` (h b / sqrt(N), pre='sign'), and the
+per-tensor variant (pre-scaled leaves, scale = h b).  An unfused
+implementation reads the K gradients once for the scale, once for the sum and
+touches y three times; this kernel is the paper's entire eq. (10) as a single
+memory-bound sweep.
 
 Target: TPU VPU (8x128 lanes); validated on CPU via interpret=True against
-``ref.ota_aggregate_ref``.
+``ref.ota_superpose_ref``.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+PRE_KINDS = ("identity", "sign")
 
-def _ota_kernel(g_ref, scale_ref, noise_ref, a_ref, out_ref):
+
+def _ota_kernel(g_ref, scale_ref, noise_ref, a_ref, out_ref, *, pre):
     g = g_ref[...].astype(jnp.float32)              # [K, blk]
+    if pre == "sign":
+        g = jnp.sign(g)
     scale = scale_ref[...].astype(jnp.float32)      # [K, 1]
     acc = jnp.sum(g * scale, axis=0)                # superposition
     z = noise_ref[...].astype(jnp.float32)[0]       # [blk]
@@ -32,16 +45,21 @@ def _ota_kernel(g_ref, scale_ref, noise_ref, a_ref, out_ref):
 
 def ota_aggregate_blocked(g: jax.Array, scale: jax.Array, noise: jax.Array,
                           a: jax.Array, *, block: int = 2048,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool = True,
+                          pre: str = "identity") -> jax.Array:
     """g: [K, N] stacked flat device gradients; scale: [K] per-device
-    h_k*b_k/||g_k||; noise: [N]; a: scalar receiver gain.  Returns y [N]."""
+    composite scale (h_k b_k x scheme scale); noise: [N]; a: scalar receiver
+    gain; pre: element-wise pre-transform applied in-register.  Returns y [N].
+    """
+    if pre not in PRE_KINDS:
+        raise ValueError(f"unknown pre-transform {pre!r}; one of {PRE_KINDS}")
     k, n = g.shape
     blk = min(block, n)
     if n % blk != 0:
         raise ValueError(f"N={n} must be divisible by block={blk}")
     grid = (n // blk,)
     out = pl.pallas_call(
-        _ota_kernel,
+        functools.partial(_ota_kernel, pre=pre),
         grid=grid,
         in_specs=[
             pl.BlockSpec((k, blk), lambda i: (0, i)),

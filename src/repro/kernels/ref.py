@@ -28,6 +28,22 @@ def ota_aggregate_ref(g: jax.Array, scale: jax.Array, noise: jax.Array,
     return a * (acc + noise.astype(jnp.float32))
 
 
+def batched_moments_ref(g: jax.Array):
+    """Per-device (sum of squares, sum) of [K, N] stacked flat gradients."""
+    gf = g.astype(jnp.float32)
+    return jnp.sum(gf * gf, axis=1), jnp.sum(gf, axis=1)
+
+
+def ota_superpose_ref(g: jax.Array, scale: jax.Array, noise: jax.Array,
+                      a: jax.Array, pre: str = "identity") -> jax.Array:
+    """y = a * (sum_k scale_k pre(g_k) + z) with pre in {identity, sign}."""
+    gf = g.astype(jnp.float32)
+    if pre == "sign":
+        gf = jnp.sign(gf)
+    acc = jnp.einsum("k,kn->n", scale.astype(jnp.float32), gf)
+    return a * (acc + noise.astype(jnp.float32))
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: Optional[int] = None) -> jax.Array:
     """q/k/v: [B, H, S, d].  Plain softmax attention, fp32 math."""

@@ -46,7 +46,10 @@ def _selective_scan_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr,
         dbu = (dt[t] * u[t])[:, None] * bmat[t][None, :]       # [bd, N]
         h = da * h + dbu
         y_t = jnp.sum(h * cmat[t][None, :], axis=1)            # [bd]
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y_t[None, :])
+        # dslice(0, 1) instead of a bare 0: older pallas discharge rules
+        # reject scalar-int indices mixed with dynamic slices
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y_t[None, None, :])
         return h
 
     h = jax.lax.fori_loop(0, chunk, body, h_scr[...])

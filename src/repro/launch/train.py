@@ -9,7 +9,11 @@ Two paths:
   DESIGN.md §5).
 * OTA schemes — ``jax.shard_map`` with the FL-client axes *manual* and the
   ``model`` axis auto (GSPMD tensor parallelism inside each client), the
-  gradient collective being ``ota_psum``.
+  gradient collective being ``ota_psum``.  Any scheme registered in
+  ``repro.core.schemes`` works here unchanged, and the per-client gradient
+  statistics default to the blocked Pallas kernels
+  (``ota_stats_impl='kernels'``) — the kernel backend's HBM-bound reduction
+  inside the mesh backend's collective.
 """
 from __future__ import annotations
 
@@ -46,7 +50,8 @@ def build_train_step(cfg: ModelConfig, mesh, *, scheme: str = "normalized",
                      aggregation_axes: Optional[Sequence[str]] = None,
                      fsdp_axis: Optional[str] = None,
                      ota: Optional[OTARunParams] = None,
-                     optimizer: Optional[Optimizer] = None):
+                     optimizer: Optional[Optimizer] = None,
+                     ota_stats_impl: str = "kernels"):
     """Returns (train_step, in_shardings_fn).
 
     train_step(params, opt_state, batch, rng) -> (params, opt_state, metrics)
@@ -97,7 +102,8 @@ def build_train_step(cfg: ModelConfig, mesh, *, scheme: str = "normalized",
         y = oc.ota_psum(grads, scheme=scheme, axes=axes, h=h_arr, b=b_arr,
                         a=ota.a, noise_var=ota.noise_var, key=rng,
                         grad_bound=ota.grad_bound,
-                        reduce_dtype=ota.reduce_dtype)
+                        reduce_dtype=ota.reduce_dtype,
+                        stats_impl=ota_stats_impl)
         params, opt_state = opt.update(y, opt_state, params)
         k_total = 1
         for ax in axes:

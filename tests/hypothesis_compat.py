@@ -1,0 +1,40 @@
+"""Import hypothesis when installed; degrade @given tests to skips otherwise.
+
+A bare ``from hypothesis import ...`` fails *collection* for a whole test
+module when the package is absent, taking every non-property test in the file
+down with it (that was the seed's tier-1 failure mode).  Importing the same
+names from here keeps the property tests fully functional wherever
+``pip install hypothesis`` has happened (see requirements.txt) and turns only
+them into explicit skips where it hasn't.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for hypothesis.strategies: every strategy builder exists
+        and returns None (never drawn from — the test body is skipped)."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped(*a, **k):
+                pass  # pragma: no cover
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is optional: the compat module skips only @given tests
+# when it is missing instead of failing collection for the whole file
+from hypothesis_compat import given, settings, st
 
 from repro.core import (OTAConfig, aggregate, apply_update, device_transform,
                         per_device_norm, per_device_mean_std, superpose,
