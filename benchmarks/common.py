@@ -20,8 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channel import ChannelConfig
-from repro.data.datasets import (device_batches, ridge_data, split_dirichlet,
-                                 split_iid, synthetic_mnist)
+from repro.data.datasets import (device_batches, device_batches_many,
+                                 ridge_data, split_dirichlet, split_iid,
+                                 synthetic_mnist)
 from repro.fed.runtime import FLConfig, run, setup
 from repro.models.simple import (init_mlp_classifier, init_ridge,
                                  mlp_classifier_accuracy, mlp_classifier_loss,
@@ -32,11 +33,15 @@ CHANNEL_MEAN = 1e-3
 SEED = 0
 
 # Execution backend for the benchmark FLConfigs: the fused Pallas kernel
-# path by default (the registry refactor made every scheme run on it).
-# On non-TPU hosts the kernels execute under interpret=True, so us_per_call
-# measures the interpreter, not production speed — pass
-# `benchmarks.run --backend vmap` for representative CPU timings.
+# path by default (the registry refactor made every scheme run on it; on
+# non-TPU hosts the wrappers route to their XLA oracles, so CPU timings are
+# representative).  Override with `benchmarks.run --backend`.
 DEFAULT_BACKEND = "kernels"
+
+# Round-loop driver for the benchmark runs: the compiled lax.scan engine by
+# default; `benchmarks.run --driver python` times the host-loop fallback
+# (the `engine` benchmark reports both and their ratio).
+DEFAULT_DRIVER = "scan"
 
 
 def channel(num_devices: int = K) -> ChannelConfig:
@@ -71,6 +76,12 @@ class CaseIExperiment:
         idx = device_batches(jax.random.PRNGKey(3), self.split, batch_size, t)
         return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
 
+    def provider_chunk(self, ts, batch_size: int = 50):
+        """[T, K, ...] batches for a whole scan chunk: one gather + transfer."""
+        idx = device_batches_many(jax.random.PRNGKey(3), self.split,
+                                  batch_size, ts)
+        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
+
     def eval_fn(self, params) -> Dict[str, float]:
         return {
             "test_acc": float(mlp_classifier_accuracy(params, self.x_te, self.y_te)),
@@ -103,7 +114,8 @@ class CaseIExperiment:
     def run(self, cfg: FLConfig, rounds: int, eval_every: int = 10):
         state = setup(cfg, self.params0, self.dim)
         return run(cfg, state, self.grad_fn, self.provider, rounds,
-                   self.eval_fn, eval_every)
+                   self.eval_fn, eval_every, driver=DEFAULT_DRIVER,
+                   chunk_batch_provider=self.provider_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +142,12 @@ class CaseIIExperiment:
 
     def provider(self, t, batch_size: int = 50):
         idx = device_batches(jax.random.PRNGKey(3), self.split, batch_size, t)
+        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
+
+    def provider_chunk(self, ts, batch_size: int = 50):
+        """[T, K, ...] batches for a whole scan chunk: one gather + transfer."""
+        idx = device_batches_many(jax.random.PRNGKey(3), self.split,
+                                  batch_size, ts)
         return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
 
     def eval_fn(self, params) -> Dict[str, float]:
@@ -161,7 +179,8 @@ class CaseIIExperiment:
     def run(self, cfg: FLConfig, rounds: int, eval_every: int = 20):
         state = setup(cfg, self.params0, self.dim)
         return run(cfg, state, self.grad_fn, self.provider, rounds,
-                   self.eval_fn, eval_every)
+                   self.eval_fn, eval_every, driver=DEFAULT_DRIVER,
+                   chunk_batch_provider=self.provider_chunk)
 
 
 def timed_rounds(exp, cfg, rounds: int, eval_every: int = 50):

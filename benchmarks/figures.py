@@ -112,6 +112,56 @@ def fig3b_tradeoff(rounds: int = 600) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def engine_rounds_per_sec(rounds: int = 64,
+                          repeats: int = 3) -> List[Tuple[str, float, str]]:
+    """Compiled-engine headline: rounds/sec of the ``lax.scan`` driver vs the
+    per-round Python-loop driver (K=20, noiseless channel, ``kernels``
+    backend) on both benchmark tasks — the Case-I MLP (compute-bound rounds:
+    the engine's win is the removed host round-trips) and the Case-II ridge
+    model (driver-overhead-bound rounds: the engine's win is the round rate
+    itself).  The runtime caches compiled round/chunk executables across
+    ``run`` calls, so one warm-up run per driver removes jit compile from the
+    timed runs; the reported rate is the best of ``repeats`` full runs."""
+    import time
+
+    from repro.core.channel import ChannelConfig
+    from repro.fed.runtime import run, setup
+    from benchmarks.common import (CHANNEL_MEAN, CaseIExperiment,
+                                   CaseIIExperiment, K)
+
+    rows, dump = [], {}
+    for task, exp in (("mlp", CaseIExperiment()), ("ridge", CaseIIExperiment())):
+        n = rounds if task == "mlp" else rounds * 8   # tiny model: longer run
+        cfg = exp.config(scheme="normalized", backend="kernels",
+                         channel=ChannelConfig(num_devices=K,
+                                               channel_mean=CHANNEL_MEAN,
+                                               noise_var=0.0))
+        rps = {}
+        for driver in ("python", "scan"):
+            # compute-bound MLP rounds prefer small chunks (batch-buffer
+            # locality); overhead-bound ridge rounds prefer one maximal chunk
+            kw = dict(driver=driver,
+                      chunk_size=8 if task == "mlp" else n,
+                      chunk_batch_provider=exp.provider_chunk)
+            state = setup(cfg, exp.params0, exp.dim)
+            run(cfg, state, exp.grad_fn, exp.provider, n, **kw)   # warm-up
+            dt = float("inf")
+            for _ in range(repeats):
+                state = setup(cfg, exp.params0, exp.dim)
+                t0 = time.perf_counter()
+                run(cfg, state, exp.grad_fn, exp.provider, n, **kw)
+                dt = min(dt, time.perf_counter() - t0)
+            rps[driver] = n / dt
+            rows.append((f"engine/{task}/{driver}", dt / n * 1e6,
+                         f"rounds_per_sec={rps[driver]:.2f}"))
+        speedup = rps["scan"] / rps["python"]
+        rows.append((f"engine/{task}/speedup", 0.0,
+                     f"scan_over_python={speedup:.2f}x"))
+        dump[task] = {"rounds_per_sec": rps, "speedup": speedup, "rounds": n}
+    _dump("engine", dump)
+    return rows
+
+
 def grad_norm_fluctuation(rounds: int = 200) -> List[Tuple[str, float, str]]:
     """Sec. I motivating claim: the local gradient norm fluctuates over
     iterations (so provisioning b_k for the max norm G wastes headroom).

@@ -21,6 +21,9 @@ def main() -> None:
                     choices=("vmap", "kernels", "mesh"),
                     help="aggregation backend for the FL figure benchmarks "
                          "(default: the fused Pallas kernel path)")
+    ap.add_argument("--driver", default=None, choices=("scan", "python"),
+                    help="FL round-loop driver (default: the compiled "
+                         "lax.scan engine)")
     args = ap.parse_args()
 
     from benchmarks import common, figures
@@ -28,6 +31,8 @@ def main() -> None:
 
     if args.backend:
         common.DEFAULT_BACKEND = args.backend
+    if args.driver:
+        common.DEFAULT_DRIVER = args.driver
 
     r = (lambda full, quick: quick if args.quick else full)
     benches = [
@@ -38,6 +43,7 @@ def main() -> None:
         ("fig3a", lambda: figures.fig3a_case1_vs_case2(r(400, 80))),
         ("fig3b", lambda: figures.fig3b_tradeoff(r(600, 120))),
         ("grad_norm", lambda: figures.grad_norm_fluctuation(r(200, 50))),
+        ("engine", lambda: figures.engine_rounds_per_sec(r(48, 16))),
         ("roofline", roofline_rows),
     ]
     if args.only:

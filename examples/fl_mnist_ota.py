@@ -1,6 +1,7 @@
 """End-to-end driver (paper Case I): federated 10-digit classification with
 over-the-air normalized-gradient aggregation — a few hundred rounds, all
-aggregation schemes, with checkpointing.
+aggregation schemes, with checkpointing.  Rounds run on the compiled
+``lax.scan`` engine by default (``--driver python`` for the host loop).
 
     PYTHONPATH=src python examples/fl_mnist_ota.py [--rounds 300] [--scheme all]
 """
@@ -19,9 +20,14 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=300)
     ap.add_argument("--scheme", default="all",
                     help="normalized|benchmark1|benchmark2|onebit|mean|all")
+    ap.add_argument("--driver", default="scan", choices=("scan", "python"),
+                    help="round-loop driver: the compiled lax.scan engine "
+                         "(default) or the per-round host loop")
     ap.add_argument("--ckpt-dir", default="results/ckpt_mnist")
     args = ap.parse_args()
 
+    from benchmarks import common
+    common.DEFAULT_DRIVER = args.driver
     exp = CaseIExperiment()
     print(f"K=20 devices, non-IID Dirichlet split, model dim {exp.dim}, "
           f"calibrated G = {exp.calibrate_G():.2f}")

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import case2_bound, solve_problem3
+from repro.core import case2_bound, solve_problem3, solve_problem3_jax
 from repro.core.channel import ChannelConfig
 from repro.data.datasets import device_batches, ridge_data, split_iid
 from repro.fed.runtime import FLConfig, run, setup
@@ -38,6 +38,10 @@ def main() -> None:
     sol = solve_problem3(state.h, chan.noise_var, DIM, chan.b_max)
     print(f"Problem 3: Z = {sol.Z:.4f}  (optimal b in "
           f"[{sol.b.min():.3f}, {sol.b.max():.3f}], {sol.iterations} bisection steps)")
+    sol_jax = solve_problem3_jax(jnp.asarray(state.h, jnp.float32),
+                                 chan.noise_var, DIM, chan.b_max)
+    print(f"jax-native Algorithm 1 (runs inside the compiled round loop): "
+          f"Z = {float(sol_jax.Z):.4f}, {int(sol_jax.iterations)} bisection steps")
     print(f"receiver gain a*eta = {state.a * state.eta0:.4f}, "
           f"contraction q_max = {cfg.s_target}")
 

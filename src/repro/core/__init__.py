@@ -17,7 +17,8 @@ def __getattr__(name):
         from repro.core import schemes as _schemes
         return _schemes.names()
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
-from repro.core.amplification import (Problem3Solution, solve_problem3,
+from repro.core.amplification import (Problem3Solution, Problem3SolutionJax,
+                                      solve_problem3, solve_problem3_jax,
                                       solve_problem6, problem3_objective,
                                       optimal_S, case1_receiver_gain,
                                       optimize_case1, optimize_case2,

@@ -19,13 +19,26 @@ solve, matching the paper's ``O(log2(eps_b) (K+1)^3)`` claim.
 
 After Problem 3, Case I picks ``S*`` by eq. (26) and ``a = 1/(S sum h_k b_k)``;
 Case II picks ``a * eta`` from eq. (30) given a target contraction ``s=q_max``.
+
+Two interchangeable Problem-3 solvers live here:
+
+``solve_problem3``      float64 NumPy+SciPy (bisection + L-BFGS-B inner convex
+                        program) — the host-side reference, used at ``setup()``
+                        time and as the cross-check oracle in tests.
+``solve_problem3_jax``  pure-JAX ``lax.while_loop`` bisection whose inner
+                        feasibility program is solved in CLOSED FORM (see its
+                        docstring) — jit/scan-safe, so block-fading FL rounds
+                        re-run Algorithm 1 *inside* the compiled round loop
+                        (``repro.fed.runtime``) with no host callback.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 from scipy import optimize as sopt
 
@@ -92,6 +105,10 @@ def solve_problem3(
     if not np.any(h * b_max > 0):
         raise ValueError("sum h_k b_k^max must be positive for feasibility")
     c = float(n) * float(noise_var)
+    # Noiseless edge (c = 0): Problem 3 becomes scale-invariant and b = 0
+    # degenerates the objective to 0/0.  A vanishing floor keeps the bisection
+    # well-posed without moving the optimum of any noisy instance.
+    c = max(c, 1e-12 * float(np.sum(4.0 * h * h * b_max * b_max)))
 
     # r is feasible iff min_b phi_r(b) <= 0.  r at the upper corner is always
     # feasible, giving the initial hi; lo = 0 is infeasible (c > 0).
@@ -113,6 +130,105 @@ def solve_problem3(
     # Polish: evaluate the true Problem-3 objective at the feasibility argmin.
     Z = problem3_objective(b_best, h, noise_var, n)
     return Problem3Solution(b=b_best, Z=Z, r_star=math.sqrt(Z), iterations=iters)
+
+
+# ---------------------------------------------------------------------------
+# jax-native Algorithm 1 (jit/scan-safe; runs inside the compiled FL engine)
+
+
+class Problem3SolutionJax(NamedTuple):
+    """Pytree-compatible twin of ``Problem3Solution`` (all fields jax arrays)."""
+
+    b: jax.Array           # [K] optimal per-device amplification factors
+    Z: jax.Array           # optimal objective of Problem 3
+    r_star: jax.Array      # sqrt(Z)
+    iterations: jax.Array  # bisection iterations used
+
+
+EPS_DENOM = 1e-20
+
+
+def _phi_min_waterfill(r, u_max: jax.Array, c):
+    """Closed-form inner feasibility program: min over the box of
+    ``phi_r(u) = sqrt(4||u||^2 + c) - r 1'u`` in received-signal coordinates
+    ``u_k = h_k b_k`` (caps ``u_max_k = h_k b_k^max``).
+
+    phi_r increases with ``||u||^2`` at fixed ``1'u``, and the minimum-norm
+    box point with a given coordinate sum is the water-filling profile
+    ``u_k(t) = min(t, u_max_k)`` — so the K-dimensional convex program
+    collapses to a line search over t.  Between consecutive sorted caps u(t)
+    is affine in t, phi_r is convex there (norm of an affine map minus a
+    linear term) and its stationary point solves
+    ``16 t^2 = r^2 (4 m t^2 + 4 D + c)`` in closed form (m = #uncapped
+    coordinates, D = sum of capped caps squared).  Evaluating phi_r at every
+    clamped per-segment stationary point is exact — no iterative inner solve.
+
+    Returns ``(min phi_r, argmin t)``.
+    """
+    q = jnp.sort(u_max)                              # segment breakpoints
+    k = q.shape[0]
+    lo = jnp.concatenate([jnp.zeros((1,), q.dtype), q[:-1]])
+    # capped mass below each segment: first j sorted caps
+    csq = jnp.cumsum(q * q)
+    d_cap = jnp.concatenate([jnp.zeros((1,), q.dtype), csq[:-1]])
+    m = (k - jnp.arange(k)).astype(q.dtype)          # coords still growing
+    denom = 16.0 - 4.0 * m * r * r
+    t_star = r * jnp.sqrt((4.0 * d_cap + c) / jnp.maximum(denom, EPS_DENOM))
+    # denom <= 0: phi_r decreases over the whole segment -> right endpoint
+    t_star = jnp.where(denom > 0.0, t_star, q[-1])
+    cand = jnp.concatenate([jnp.clip(t_star, lo, q), q[-1:]])
+    u = jnp.minimum(cand[:, None], u_max[None, :])   # [K+1, K] path points
+    vals = (jnp.sqrt(4.0 * jnp.sum(u * u, axis=1) + c)
+            - r * jnp.sum(u, axis=1))
+    i = jnp.argmin(vals)
+    return vals[i], cand[i]
+
+
+def solve_problem3_jax(h: jax.Array, noise_var, n: int, b_max,
+                       tol: float = 1e-6,
+                       max_iters: int = 100) -> Problem3SolutionJax:
+    """Algorithm 1 Part I as a pure-JAX program: ``lax.while_loop`` bisection
+    on r with the closed-form water-filling feasibility check.
+
+    Matches ``solve_problem3`` (the float64 SciPy reference) to solver
+    tolerance — see tests/test_engine.py — while being jit-, vmap- and
+    scan-safe, so block-fading rounds re-optimize ``b_t`` on device.
+    ``n`` is static (the model dimension); ``tol`` is relative on r.
+    """
+    h = jnp.asarray(h)
+    h = h.astype(jnp.promote_types(h.dtype, jnp.float32))
+    b_max = jnp.broadcast_to(jnp.asarray(b_max, h.dtype), h.shape)
+    u_max = h * b_max
+    c = jnp.asarray(n, h.dtype) * jnp.asarray(noise_var, h.dtype)
+    # same vanishing noise floor as the SciPy solver (noiseless edge)
+    c = jnp.maximum(c, 1e-12 * jnp.sum(4.0 * u_max * u_max))
+
+    sum_u = jnp.sum(u_max)
+    r_hi0 = jnp.sqrt(4.0 * jnp.sum(u_max * u_max) + c) / sum_u
+    t0 = jnp.max(u_max)                  # upper corner: feasible at r_hi0
+
+    def cond(s):
+        r_lo, r_hi, _, it = s
+        return jnp.logical_and(
+            (r_hi - r_lo) > tol * jnp.maximum(1.0, r_hi), it < max_iters)
+
+    def body(s):
+        r_lo, r_hi, t_best, it = s
+        r_mid = 0.5 * (r_lo + r_hi)
+        val, t_arg = _phi_min_waterfill(r_mid, u_max, c)
+        feas = val <= 0.0
+        return (jnp.where(feas, r_lo, r_mid),
+                jnp.where(feas, r_mid, r_hi),
+                jnp.where(feas, t_arg, t_best),
+                it + 1)
+
+    init = (jnp.zeros((), h.dtype), r_hi0, t0, jnp.zeros((), jnp.int32))
+    _, _, t_best, it = jax.lax.while_loop(cond, body, init)
+    u = jnp.minimum(t_best, u_max)
+    b = jnp.where(h > 0, u / jnp.where(h > 0, h, 1.0), 0.0)
+    # polish exactly like the SciPy solver: true objective at the argmin
+    Z = (4.0 * jnp.sum(u * u) + c) / jnp.square(jnp.sum(u))
+    return Problem3SolutionJax(b=b, Z=Z, r_star=jnp.sqrt(Z), iterations=it)
 
 
 def solve_problem6(r: float, h: np.ndarray, noise_var: float, n: int,

@@ -56,7 +56,12 @@ def draw_channel(key: jax.Array, cfg: ChannelConfig) -> jax.Array:
 
 
 def channel_for_round(key: jax.Array, cfg: ChannelConfig, round_idx) -> jax.Array:
-    """Channel draw for a given round honouring the block-fading switch."""
+    """Channel draw for a given round honouring the block-fading switch.
+
+    ``round_idx`` may be a traced int32 scalar: the fold_in/draw pair is
+    jit- and scan-safe, which is how the compiled FL engine
+    (``repro.fed.runtime``) redraws ``h_t`` inside its ``lax.scan`` body
+    with no host callback."""
     if cfg.block_fading:
         return draw_channel(jax.random.fold_in(key, round_idx), cfg)
     return draw_channel(key, cfg)

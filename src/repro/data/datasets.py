@@ -9,6 +9,7 @@ on ridge regression where the constants are computable.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Tuple
 
 import jax
@@ -111,13 +112,42 @@ def split_dirichlet(key, labels: np.ndarray, num_devices: int,
     return FederatedSplit(tuple(np.sort(np.array(d, dtype=np.int64)) for d in dev_idx))
 
 
+@functools.partial(jax.jit, static_argnames=("batch_size", "num_devices"))
+def _round_choices(key, round_idx, sizes, batch_size: int, num_devices: int):
+    """[K, batch_size] per-device draws in [0, size_k) — the K-device sampling
+    of one round as ONE dispatch (the per-device fold_in/randint loop used to
+    cost ~4K host round-trips per round, which dominated the FL round loop)."""
+    base = jax.random.fold_in(key, round_idx)
+    keys = jax.vmap(lambda d: jax.random.fold_in(base, d))(
+        jnp.arange(num_devices))
+    return jax.vmap(
+        lambda kk, n: jax.random.randint(kk, (batch_size,), 0, n))(keys, sizes)
+
+
 def device_batches(key, split: FederatedSplit, batch_size: int, round_idx: int
                    ) -> np.ndarray:
     """[K, batch_size] example indices for one round (per-device sampling
-    with replacement when a shard is smaller than the batch)."""
-    out = []
-    for k, idx in enumerate(split.indices):
-        sub = jax.random.fold_in(jax.random.fold_in(key, round_idx), k)
-        choice = jax.random.randint(sub, (batch_size,), 0, len(idx))
-        out.append(idx[np.asarray(choice)])
-    return np.stack(out)
+    with replacement when a shard is smaller than the batch).
+
+    Bit-identical to the historical per-device loop
+    ``randint(fold_in(fold_in(key, round), k), (B,), 0, len(idx_k))`` but
+    batched over devices into a single jitted call."""
+    k = len(split.indices)
+    choices = np.asarray(_round_choices(
+        key, round_idx, jnp.asarray(split.sizes), batch_size, k))
+    return np.stack([idx[choices[d]] for d, idx in enumerate(split.indices)])
+
+
+def device_batches_many(key, split: FederatedSplit, batch_size: int,
+                        rounds) -> np.ndarray:
+    """[T, K, batch_size] example indices for a whole chunk of rounds in one
+    jitted dispatch — the scan engine's data path (``device_batches`` for
+    each round of ``rounds``, bit-identical, without T separate host
+    round-trips)."""
+    rounds = jnp.asarray(rounds, jnp.int32)
+    k = len(split.indices)
+    choices = np.asarray(jax.vmap(
+        lambda t: _round_choices(key, t, jnp.asarray(split.sizes),
+                                 batch_size, k))(rounds))
+    return np.stack([idx[choices[:, d]] for d, idx in
+                     enumerate(split.indices)], axis=1)

@@ -47,9 +47,17 @@ def client_index(axis_names: Sequence[str]) -> jax.Array:
     return idx
 
 
-def _tree_sq_norm(tree: PyTree) -> jax.Array:
+def tree_sq_norm(tree: PyTree) -> jax.Array:
+    """Squared global L2 norm of a (per-shard) gradient pytree, fp32
+    accumulation.  Public: the mesh train step's grad-norm metric
+    (``repro.launch.train``) and any shard-local diagnostics reduce through
+    this one helper."""
     return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                for l in jax.tree_util.tree_leaves(tree))
+
+
+# back-compat alias for pre-promotion callers
+_tree_sq_norm = tree_sq_norm
 
 
 def _psum_tree(tree: PyTree, axes) -> PyTree:

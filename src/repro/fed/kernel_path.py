@@ -22,8 +22,10 @@ scheme-generic and device-batched:
 Noise is drawn with the backend-shared per-leaf key schedule
 (``schemes.add_channel_noise``) so a shared key reproduces the vmap/mesh
 backends bitwise.  ``mean`` is the ideal non-OTA baseline and falls back to a
-plain average.  On CPU the kernels execute under interpret=True, so this path
-doubles as the kernels' system-level integration test (vs the vmap backend).
+plain average.  On hosts without a TPU the default ``interpret=None`` routes
+the kernel wrappers to their XLA oracles (full speed — the compiled FL engine
+runs this path); passing ``interpret=True`` forces the Pallas interpreter, the
+correctness path the kernel/backend test suites pin explicitly.
 """
 from __future__ import annotations
 

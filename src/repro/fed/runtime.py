@@ -1,19 +1,35 @@
 """Federated-learning runtime (paper Sec. II, Steps 1-3, iterated).
 
 The K devices are a ``jax.vmap`` axis; one round (local gradients -> OTA
-superposition -> server update -> broadcast) is a single jitted program.
+superposition -> server update -> broadcast) is a single jittable program.
 ``FLConfig.backend`` selects which execution backend the aggregation routes
 through — ``vmap`` (pure XLA), ``kernels`` (fused Pallas path; the default
 for benchmarks), or ``mesh`` (shard_map/psum over local devices; needs >= K
 of them).  The production mesh train-step builder (devices = data shards of
 a TPU mesh) lives in ``repro.launch.train``.
+
+Two round-loop drivers (``run(..., driver=...)``):
+
+``scan``   (default) the compiled multi-round engine: ``jax.lax.scan`` over
+           rounds, dispatched in chunks whose param buffers are donated and
+           whose per-round history lands in on-device arrays transferred
+           once per chunk.  Under block fading the channel redraw
+           (``core.channel.channel_for_round``) AND the Problem-3
+           re-optimization (``core.amplification.solve_problem3_jax``, a
+           ``lax.while_loop`` bisection) run *inside* the scan — the whole
+           trajectory is one XLA program per chunk, no host callbacks.
+``python`` the host-loop fallback: one jitted round per dispatch, history
+           appended eagerly.  Use it when an ``eval_fn`` must observe every
+           round or for step-debugging; it computes the identical numbers
+           (tests/test_engine.py holds the two drivers to fp32 parity on
+           every backend, fixed and block-fading).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
+import functools
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,10 +39,15 @@ from repro.core import amplification as amp
 from repro.core import channel as chan
 from repro.core import ota
 from repro.core import schemes
-from repro.core.convergence import variance_term
 
 PyTree = Any
 GradFn = Callable[[PyTree, Any], PyTree]   # (params, device_batch) -> grads
+
+DRIVERS = ("scan", "python")
+# per-round scalar diagnostics recorded by BOTH drivers (same device-side
+# math, so the drivers' histories agree exactly)
+DIAG_KEYS = ("grad_norm_mean", "grad_norm_min", "grad_norm_max", "eta",
+             "update_norm", "tx_energy")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,102 +131,239 @@ def setup(cfg: FLConfig, params0: PyTree, model_dim: int) -> FLState:
                    model_dim=model_dim)
 
 
-def _eta_t(cfg: FLConfig, eta0: float, t: jax.Array) -> jax.Array:
+def _eta_t(cfg: FLConfig, eta0, t: jax.Array) -> jax.Array:
     if cfg.case == "I":
         return eta0 / jnp.maximum(t.astype(jnp.float32), 1.0) ** cfg.p
     return jnp.asarray(eta0, jnp.float32)
 
 
+def _round_math(cfg: FLConfig, sch, grad_fn: GradFn, params, batch,
+                h, b, a, eta0, t, key):
+    """One FL round (local grads -> OTA aggregate -> update) plus the scalar
+    diagnostics of ``DIAG_KEYS``.  Pure; traced identically by both drivers."""
+    stacked = jax.vmap(lambda db: grad_fn(params, db))(batch)
+    ocfg = ota.OTAConfig(scheme=cfg.scheme, a=a,
+                         noise_var=cfg.channel.noise_var,
+                         grad_bound=cfg.grad_bound, backend=cfg.backend)
+    y = ota.aggregate(ocfg, stacked, h, b, jax.random.fold_in(key, t))
+    eta = _eta_t(cfg, eta0, t)
+    new_params = ota.apply_update(params, y, eta)
+    # one stats pass feeds BOTH diagnostics (grad norms and the eq. 8
+    # transmit-energy accounting); the aggregate above keeps its own internal
+    # stats — folding the two would need aggregate() to return them
+    stats = schemes.compute_stats(stacked, sch, batched=True)
+    norms = jnp.sqrt(stats.sq_norm)
+    tx = (jnp.square(b.astype(jnp.float32))
+          * sch.transmit_sq_norm(stats, cfg.grad_bound))
+    diag = {
+        "grad_norm_mean": jnp.mean(norms),
+        "grad_norm_min": jnp.min(norms),
+        "grad_norm_max": jnp.max(norms),
+        "eta": eta,
+        "update_norm": jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                                    for l in jax.tree_util.tree_leaves(y))),
+        # total transmit energy sum_k b_k^2 ||x_k||^2 (eq. 8 budget) via the
+        # scheme's analytic accounting
+        "tx_energy": jnp.sum(tx),
+    }
+    return new_params, diag
+
+
+def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t):
+    """Block fading (beyond the paper, which holds h_k fixed): redraw the
+    round-t channel and RE-RUN the Problem-3 optimization, entirely in JAX —
+    Algorithm 1 is cheap (O(log(1/eps)(K+1)^3)) relative to a round of local
+    training, and ``solve_problem3_jax`` makes it scan-safe.  The effective
+    receiver-side gain a*sum(h_k b_k) (what the bounds see) is held at its
+    optimized value."""
+    h = chan.channel_for_round(chan_key, cfg.channel, t).astype(jnp.float32)
+    if cfg.amplification == "optimal":
+        sol = amp.solve_problem3_jax(h, cfg.channel.noise_var, model_dim,
+                                     cfg.channel.b_max)
+        b = sol.b.astype(jnp.float32)
+    else:
+        b = jnp.full(h.shape, cfg.channel.b_max, jnp.float32)
+    a = (eff_gain / jnp.sum(h * b)).astype(jnp.float32)
+    return h, b, a
+
+
+@functools.lru_cache(maxsize=32)
+def _make_fading_refresh(cfg: FLConfig, model_dim: int):
+    """Jitted per-round channel/Problem-3 refresh for the python driver
+    (the scan driver inlines ``_fading_refresh`` in its scan body)."""
+    return jax.jit(partial(_fading_refresh, cfg, model_dim))
+
+
+@functools.lru_cache(maxsize=32)
 def make_round_step(cfg: FLConfig, grad_fn: GradFn):
-    """Builds the jitted one-round function.
+    """Builds the jitted one-round function (the ``python`` driver's unit).
 
     round_step(params, device_batches, h, b, a, eta0, t, key)
         -> (new_params, diagnostics)
     device_batches: pytree with leading [K, ...] axis (per-device minibatches).
-    """
-    ota_cfg_base = dict(scheme=cfg.scheme, noise_var=cfg.channel.noise_var,
-                        grad_bound=cfg.grad_bound, backend=cfg.backend)
 
+    Cached on (cfg, grad_fn) — ``FLConfig`` is a frozen dataclass and
+    functions/bound methods hash stably — so repeated ``run`` calls (resume,
+    benchmark sweeps) reuse the compiled executable instead of re-tracing.
+    """
     sch = schemes.get(cfg.scheme)
 
     @jax.jit
     def round_step(params, device_batches, h, b, a, eta0, t, key):
-        stacked = jax.vmap(lambda db: grad_fn(params, db))(device_batches)
-        ocfg = ota.OTAConfig(a=a, **ota_cfg_base)
-        y = ota.aggregate(ocfg, stacked, h, b, jax.random.fold_in(key, t))
-        eta = _eta_t(cfg, eta0, t)
-        new_params = ota.apply_update(params, y, eta)
-        # one stats pass feeds BOTH diagnostics (grad norms and the eq. 8
-        # transmit-energy accounting) — no second reduction over the grads
-        stats = schemes.compute_stats(stacked, sch, batched=True)
-        diag = {
-            "grad_norms": jnp.sqrt(stats.sq_norm),
-            "update_norm": jnp.sqrt(sum(jnp.sum(jnp.square(l))
-                                        for l in jax.tree_util.tree_leaves(y))),
-            "eta": eta,
-            # per-device transmit energy b_k^2 ||x_k||^2 (eq. 8 budget) via
-            # the scheme's analytic accounting
-            "tx_energy": (jnp.square(b.astype(jnp.float32))
-                          * sch.transmit_sq_norm(stats, cfg.grad_bound)),
-        }
-        return new_params, diag
+        return _round_math(cfg, sch, grad_fn, params, device_batches,
+                           h, b, a, eta0, t, key)
 
     return round_step
+
+
+@functools.lru_cache(maxsize=32)
+def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
+    """Builds the compiled multi-round engine: one ``lax.scan`` over a chunk
+    of rounds.  Param buffers are donated (in-place across chunks) and the
+    per-round diagnostics come back as [chunk] device arrays — one host
+    transfer per chunk, not one per round.  Cached like ``make_round_step``.
+    """
+    sch = schemes.get(cfg.scheme)
+    block_fading = cfg.channel.block_fading
+
+    def run_chunk(params, h, b, a, eta0, key, chan_key, eff_gain, ts, batches):
+        def body(carry, xs):
+            params, h, b, a = carry
+            t, batch = xs
+            if block_fading:
+                h, b, a = _fading_refresh(cfg, model_dim, eff_gain,
+                                          chan_key, t)
+            params, diag = _round_math(cfg, sch, grad_fn, params, batch,
+                                       h, b, a, eta0, t, key)
+            return (params, h, b, a), diag
+
+        (params, h, b, a), hist = jax.lax.scan(body, (params, h, b, a),
+                                               (ts, batches))
+        return params, h, b, a, hist
+
+    return jax.jit(run_chunk, donate_argnums=(0,))
+
+
+def _plan_chunks(t0: int, num_rounds: int, eval_every: Optional[int],
+                 chunk_size: int) -> List[List[int]]:
+    """Group rounds ``t0+1 .. t0+num_rounds`` into scan chunks.  Every round
+    the python driver would eval on (t == 1 or t % eval_every == 0) ends a
+    chunk, so the scan driver observes params at identical rounds."""
+    chunks: List[List[int]] = []
+    cur: List[int] = []
+    for t in range(t0 + 1, t0 + num_rounds + 1):
+        cur.append(t)
+        if (len(cur) >= chunk_size
+                or (eval_every is not None
+                    and (t == 1 or t % eval_every == 0))):
+            chunks.append(cur)
+            cur = []
+    if cur:
+        chunks.append(cur)
+    return chunks
+
+
+def _stack_batches(batch_provider, ts: Sequence[int]) -> PyTree:
+    """One [chunk, K, ...] stacked batch pytree per chunk (a single host ->
+    device transfer feeds the whole scan)."""
+    per_round = [batch_provider(t) for t in ts]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_round)
 
 
 def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         batch_provider: Callable[[int], Any], num_rounds: int,
         eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
-        eval_every: int = 10) -> Tuple[FLState, Dict[str, List]]:
-    """Run ``num_rounds`` FL rounds.  ``batch_provider(t)`` returns the
-    per-device minibatch pytree (leading K axis) for round t."""
-    round_step = make_round_step(cfg, grad_fn)
+        eval_every: int = 10, *, driver: str = "scan",
+        chunk_size: int = 16,
+        chunk_batch_provider: Optional[Callable[[Sequence[int]], Any]] = None,
+        ) -> Tuple[FLState, Dict[str, List]]:
+    """Run ``num_rounds`` FL rounds on the selected driver.
+
+    ``batch_provider(t)`` returns the per-device minibatch pytree (leading K
+    axis) for round t.  ``driver='scan'`` (default) runs the compiled chunked
+    engine; ``driver='python'`` the per-round host loop (see module
+    docstring).  Both evaluate ``eval_fn`` at t == 1 and every
+    ``eval_every``-th round, produce the same history keys, and persist the
+    final channel state (h, b, a under block fading) plus the round counter
+    back into ``state`` so a second ``run`` resumes seamlessly.
+
+    ``chunk_batch_provider(ts)``, when given, supplies a whole chunk's
+    batches as one [T, K, ...] pytree (a single gather + transfer), replacing
+    the scan driver's default of stacking T ``batch_provider`` calls.
+    """
+    if driver not in DRIVERS:
+        raise ValueError(f"unknown driver {driver!r}; one of {DRIVERS}")
     key = jax.random.PRNGKey(cfg.seed + 1)
     h = jnp.asarray(state.h, jnp.float32)
     b = jnp.asarray(state.b, jnp.float32)
-    a = state.a
-    # Block fading (beyond the paper, which holds h_k fixed): redraw the
-    # channel every round and RE-RUN the Problem-3 optimization — Algorithm 1
-    # is cheap (O(log(1/eps)(K+1)^3)) relative to a round of local training.
-    # The effective receiver-side gain a*sum(h_k b_k) (what the bounds see)
-    # is held at its optimized value.
+    a = jnp.asarray(state.a, jnp.float32)
+    eta0 = jnp.asarray(state.eta0, jnp.float32)
     block_fading = cfg.channel.block_fading
+    chan_key = jax.random.PRNGKey(cfg.seed + 2)
+    eff_gain = jnp.zeros((), jnp.float32)
     if block_fading:
         if state.model_dim <= 0:
             raise ValueError("block fading re-solves Problem 3 with the real "
                              "model dimension; FLState.model_dim is unset — "
                              "build the state via setup()")
-        eff_gain = state.a * float(np.sum(state.h * state.b))
-        chan_key = jax.random.PRNGKey(cfg.seed + 2)
-    hist: Dict[str, List] = {"round": [], "grad_norm_mean": [], "grad_norm_min": [],
-                             "grad_norm_max": [], "eta": [], "eval_round": []}
-    for t in range(state.round + 1, state.round + num_rounds + 1):
-        if block_fading:
-            h_np = np.asarray(chan.draw_channel(
-                jax.random.fold_in(chan_key, t), cfg.channel), np.float64)
-            if cfg.amplification == "optimal":
-                sol = amp.solve_problem3(h_np, cfg.channel.noise_var,
-                                         state.model_dim, cfg.channel.b_max,
-                                         tol=1e-8)
-                b_np = sol.b
-            else:
-                b_np = np.full(cfg.num_devices, cfg.channel.b_max)
-            a = eff_gain / float(np.sum(h_np * b_np))
-            h = jnp.asarray(h_np, jnp.float32)
-            b = jnp.asarray(b_np, jnp.float32)
-        batches = batch_provider(t)
-        state.params, diag = round_step(state.params, batches, h, b,
-                                        a, state.eta0, jnp.asarray(t), key)
-        hist["round"].append(t)
-        norms = np.asarray(diag["grad_norms"])
-        hist["grad_norm_mean"].append(float(norms.mean()))
-        hist["grad_norm_min"].append(float(norms.min()))
-        hist["grad_norm_max"].append(float(norms.max()))
-        hist["eta"].append(float(diag["eta"]))
-        if eval_fn is not None and (t % eval_every == 0 or t == 1):
-            metrics = eval_fn(state.params)
-            for k, v in metrics.items():
-                hist.setdefault(k, []).append(v)
-            hist["eval_round"].append(t)
+        eff_gain = jnp.asarray(
+            state.a * float(np.sum(np.asarray(state.h, np.float64)
+                                   * np.asarray(state.b, np.float64))),
+            jnp.float32)
+
+    hist: Dict[str, List] = {"round": [], "eval_round": []}
+    for k in DIAG_KEYS:
+        hist[k] = []
+
+    def record_eval(params, t):
+        metrics = eval_fn(params)
+        for mk, v in metrics.items():
+            hist.setdefault(mk, []).append(v)
+        hist["eval_round"].append(t)
+
+    t0 = state.round
+    if driver == "python":
+        round_step = make_round_step(cfg, grad_fn)
+        fading_refresh = _make_fading_refresh(cfg, state.model_dim)
+        params = state.params
+        for t in range(t0 + 1, t0 + num_rounds + 1):
+            if block_fading:
+                h, b, a = fading_refresh(eff_gain, chan_key, jnp.asarray(t))
+            batch = batch_provider(t)
+            params, diag = round_step(params, batch, h, b, a, eta0,
+                                      jnp.asarray(t), key)
+            hist["round"].append(t)
+            for k in DIAG_KEYS:
+                hist[k].append(float(diag[k]))
+            if eval_fn is not None and (t % eval_every == 0 or t == 1):
+                record_eval(params, t)
+    else:
+        run_chunk = _make_run_chunk(cfg, grad_fn, state.model_dim)
+        # params are donated chunk-to-chunk; copy once so the CALLER's pytree
+        # (often reused across runs, e.g. the benchmark experiments) survives
+        params = jax.tree_util.tree_map(jnp.copy, state.params)
+        for ts in _plan_chunks(t0, num_rounds,
+                               eval_every if eval_fn is not None else None,
+                               chunk_size):
+            batches = (chunk_batch_provider(ts) if chunk_batch_provider
+                       else _stack_batches(batch_provider, ts))
+            params, h, b, a, chunk_hist = run_chunk(
+                params, h, b, a, eta0, key, chan_key, eff_gain,
+                jnp.asarray(ts, jnp.int32), batches)
+            chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
+            hist["round"].extend(ts)
+            for k in DIAG_KEYS:
+                hist[k].extend(np.asarray(chunk_hist[k]).astype(float).tolist())
+            t_end = ts[-1]
+            if eval_fn is not None and (t_end % eval_every == 0 or t_end == 1):
+                record_eval(params, t_end)
+
+    state.params = params
+    if block_fading:
+        # persist the final channel/gain so a second run(cfg, state, ...)
+        # resumes from round t0+num_rounds, not the stale round-0 draw
+        state.h = np.asarray(jax.device_get(h), np.float64)
+        state.b = np.asarray(jax.device_get(b), np.float64)
+        state.a = float(a)
     state.round += num_rounds
     return state, hist

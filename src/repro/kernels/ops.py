@@ -1,17 +1,30 @@
 """Jitted public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True when no TPU is present (this container), so the
-same call sites compile to real Mosaic kernels on TPU and to the Python
-interpreter on CPU (the correctness-validation path).
+``interpret`` semantics (the flat-reduction/OTA kernels):
+
+* ``None`` (default) — Mosaic on TPU; on hosts without a TPU the wrapper
+  routes to the mathematically-identical XLA oracle in ``repro.kernels.ref``.
+  The Pallas *interpreter* costs ~1 ms per grid step on CPU, which made the
+  kernels FL backend ~10x slower than vmap for no extra coverage; the oracle
+  keeps non-TPU callers (the compiled FL engine, benchmarks on this
+  container) at full XLA speed.
+* ``True`` — force the Pallas interpreter: the correctness-validation path
+  every kernel test pins explicitly (tests/test_kernels.py,
+  tests/test_backends.py).
+* ``False`` — force Mosaic compilation.
+
+``flash_attention`` / ``selective_scan`` keep the old behaviour (interpreter
+when no TPU): their CPU call sites are numerics-validation only.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_blocked
 from repro.kernels.grad_norm import batched_blocked_moments, blocked_sumsq
 from repro.kernels.ota_aggregate import ota_aggregate_blocked
@@ -19,6 +32,14 @@ from repro.kernels.ota_aggregate import ota_aggregate_blocked
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> Union[bool, str]:
+    """None -> Mosaic on TPU, 'ref' (XLA oracle) elsewhere; explicit bools
+    force the Pallas path (True = interpreter, False = Mosaic)."""
+    if interpret is None:
+        return False if jax.default_backend() == "tpu" else "ref"
+    return interpret
 
 
 LANES = 1024  # trailing-dim packing for flat-vector kernels (8x128-aligned)
@@ -46,7 +67,9 @@ def _pack_flat(x: jax.Array, lanes: int = LANES,
 def grad_norm(x: jax.Array, *, block_rows: int = 256,
               interpret: Optional[bool] = None) -> jax.Array:
     """Global L2 norm of a gradient vector via the blocked Pallas reduction."""
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
+    if interpret == "ref":
+        return ref.grad_norm_ref(x)
     x2, _, br = _pack_flat(x, block_rows=block_rows)
     partials = blocked_sumsq(x2, block_rows=br, interpret=interpret)
     return jnp.sqrt(jnp.sum(partials))
@@ -75,7 +98,9 @@ def batched_moments(g: jax.Array, *, block_rows: int = 256,
     g: [K, N].  One batched Pallas reduction over a (K, blocks) grid — this
     replaces K separate ``grad_norm`` launches.  Returns ([K], [K]) f32.
     """
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
+    if interpret == "ref":
+        return ref.batched_moments_ref(g)
     g3, _, br = _pack_flat_batched(g, block_rows=block_rows)
     sumsq, sums = batched_blocked_moments(g3, block_rows=br, interpret=interpret)
     return jnp.sum(sumsq, axis=1), jnp.sum(sums, axis=1)
@@ -100,7 +125,10 @@ def ota_superpose(g: jax.Array, scale: jax.Array, noise: jax.Array, a, *,
     norm-scaling scheme in the registry lowers to this one kernel.
     Returns y [N] f32.
     """
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
+    if interpret == "ref":
+        return ref.ota_superpose_ref(g, scale, noise,
+                                     jnp.asarray(a, jnp.float32), pre=pre)
     k, n = g.shape
     pad_rows = -(-n // block) * block - n
     if pad_rows:

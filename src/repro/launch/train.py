@@ -109,7 +109,7 @@ def build_train_step(cfg: ModelConfig, mesh, *, scheme: str = "normalized",
         for ax in axes:
             k_total *= jax.lax.axis_size(ax)
         metrics = dict(metrics, loss=jax.lax.psum(loss, axes) / k_total,
-                       grad_norm=jnp.sqrt(oc._tree_sq_norm(grads)))
+                       grad_norm=jnp.sqrt(oc.tree_sq_norm(grads)))
         return params, opt_state, metrics
 
     def train_step(params, opt_state, batch, rng):
@@ -136,7 +136,24 @@ def build_train_step(cfg: ModelConfig, mesh, *, scheme: str = "normalized",
 
 
 def make_batch_from_specs(specs, cfg: ModelConfig):
-    """Turn input_specs into a loss-ready batch dict (labels defaulting to
-    tokens for LM-style next-token training when absent)."""
+    """Turn concrete model inputs (``configs.registry.input_specs`` layout)
+    into a loss-ready batch dict.
+
+    When ``labels`` are absent they default to the shifted-token convention
+    ``forward_loss`` expects for LM-style next-token training: position i
+    predicts token i+1, and the final position (which has no target) is
+    excluded via ``loss_mask``.  A caller-provided ``loss_mask`` is combined
+    with the shift mask rather than overwritten.
+    """
     batch = dict(specs)
+    if "labels" not in batch and "tokens" in batch:
+        tokens = jnp.asarray(batch["tokens"])
+        batch["labels"] = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        shift_mask = jnp.concatenate(
+            [jnp.ones(tokens[:, 1:].shape, jnp.float32),
+             jnp.zeros(tokens[:, :1].shape, jnp.float32)], axis=1)
+        prior = batch.get("loss_mask")
+        batch["loss_mask"] = (shift_mask if prior is None
+                              else shift_mask * jnp.asarray(prior, jnp.float32))
     return batch

@@ -45,6 +45,16 @@ class TestProblem3:
         sol = solve_problem3(h, 1e-3, 100000, b_max=2.0)
         np.testing.assert_allclose(sol.b, 2.0, rtol=1e-3)
 
+    def test_noiseless_channel_well_posed(self):
+        """sigma^2 = 0 (the benchmark's noiseless configs): the vanishing
+        noise floor keeps the bisection away from the degenerate b = 0 point
+        and the solution keeps the noise-free equalizing structure."""
+        h = rayleigh(10, 6)
+        sol = solve_problem3(h, 0.0, 1000, 2.0)
+        assert np.isfinite(sol.Z) and sol.Z > 0
+        hb = h * sol.b
+        assert np.std(hb) / np.mean(hb) < 0.05
+
     def test_z_positive_and_consistent(self):
         h = rayleigh(3, 8)
         sol = solve_problem3(h, 1e-7, 500, 2.0)

@@ -150,3 +150,55 @@ class TestRooflineParser:
         assert rl.model_flops_for(None, TRAIN_4K, n) == 6.0 * n * 256 * 4096
         assert rl.model_flops_for(None, PREFILL_32K, n) == 2.0 * n * 32 * 32768
         assert rl.model_flops_for(None, DECODE_32K, n) == 2.0 * n * 128
+
+
+class TestMakeBatchFromSpecs:
+    """Satellite: the loss-ready batch builder must actually implement its
+    promised default — shifted next-token labels (+ final-position mask) when
+    ``labels`` are absent — in the convention ``forward_loss`` consumes."""
+
+    def _inputs(self):
+        from repro.configs.base import InputShape
+        from repro.configs.registry import make_dummy_inputs
+        cfg = reduce_config(get_config("qwen2-7b"))
+        shape = InputShape("smoke_train", 64, 2, "train")
+        return cfg, make_dummy_inputs(cfg, shape)
+
+    def test_labels_passthrough_when_present(self):
+        from repro.launch.train import make_batch_from_specs
+        cfg, inputs = self._inputs()
+        batch = make_batch_from_specs(inputs, cfg)
+        assert batch["labels"] is inputs["labels"]
+        assert "loss_mask" not in batch
+
+    def test_labels_default_to_shifted_tokens(self):
+        import numpy as np
+        from repro.launch.train import make_batch_from_specs
+        cfg, inputs = self._inputs()
+        del inputs["labels"]
+        batch = make_batch_from_specs(inputs, cfg)
+        toks = np.asarray(batch["tokens"])
+        labels = np.asarray(batch["labels"])
+        mask = np.asarray(batch["loss_mask"])
+        np.testing.assert_array_equal(labels[:, :-1], toks[:, 1:])
+        # the final position has no next token: masked out of the loss
+        np.testing.assert_array_equal(mask[:, -1], 0.0)
+        np.testing.assert_array_equal(mask[:, :-1], 1.0)
+
+    def test_default_batch_is_loss_ready(self):
+        """forward_loss runs on the defaulted batch and the masked nll equals
+        an explicit shifted-label nll."""
+        import numpy as np
+        from repro.launch.train import make_batch_from_specs
+        from repro.models import transformer as T
+        cfg, inputs = self._inputs()
+        del inputs["labels"]
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        batch = make_batch_from_specs(inputs, cfg)
+        loss, metrics = T.forward_loss(params, cfg, batch)
+        assert np.isfinite(float(loss))
+        explicit = dict(batch)
+        explicit["labels"] = jnp.concatenate(
+            [batch["tokens"][:, 1:], batch["tokens"][:, :1]], axis=1)
+        loss2, _ = T.forward_loss(params, cfg, explicit)   # same masked nll
+        np.testing.assert_allclose(float(loss), float(loss2), rtol=1e-6)

@@ -29,6 +29,26 @@ def run_sub(code: str, timeout=400):
                               os.path.abspath(__file__))))
 
 
+class TestTreeSqNorm:
+    """Satellite: ``tree_sq_norm`` is the public helper (the mesh train step
+    used to reach into a private ``oc._tree_sq_norm``)."""
+
+    def test_matches_flat_norm(self):
+        from repro.distribution.ota_collectives import tree_sq_norm
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": (jnp.ones((4,), jnp.bfloat16), -2.0 * jnp.ones((2, 2)))}
+        flat = np.concatenate([np.asarray(l, np.float32).ravel() for l in
+                               jax.tree_util.tree_leaves(tree)])
+        np.testing.assert_allclose(float(tree_sq_norm(tree)),
+                                   float(np.sum(flat * flat)), rtol=1e-6)
+
+    def test_train_step_uses_public_name(self):
+        import inspect
+
+        from repro.launch import train as lt
+        assert "_tree_sq_norm" not in inspect.getsource(lt)
+
+
 class TestParamSpecs:
     def test_rules_cover_all_archs(self):
         """Every parameter leaf of every architecture gets a valid spec whose

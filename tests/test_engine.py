@@ -1,0 +1,255 @@
+"""Compiled FL-engine tests: the ``scan`` driver must reproduce the
+``python`` host-loop driver exactly (params AND history) on every backend,
+fixed-channel and block-fading, and the jax-native Problem-3 solver must
+match the float64 SciPy reference."""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import amplification as amp
+from repro.core.channel import ChannelConfig
+from repro.data.datasets import (device_batches, device_batches_many,
+                                 split_dirichlet, synthetic_mnist)
+from repro.fed import runtime as rt
+from repro.fed.runtime import FLConfig, run, setup
+from repro.models.simple import init_mlp_classifier, mlp_classifier_loss
+
+K = 6
+ROUNDS = 10
+
+
+@pytest.fixture(scope="module")
+def task():
+    key = jax.random.PRNGKey(0)
+    x, y = synthetic_mnist(key, 600)
+    split = split_dirichlet(jax.random.fold_in(key, 1), np.asarray(y), K, 1.0)
+    params0 = init_mlp_classifier(jax.random.fold_in(key, 2), hidden=16)
+    dim = sum(int(np.prod(np.asarray(l).shape))
+              for l in jax.tree_util.tree_leaves(params0))
+    xnp, ynp = np.asarray(x), np.asarray(y)
+
+    def grad_fn(params, batch):
+        xb, yb = batch
+        return jax.grad(lambda p: mlp_classifier_loss(p, xb, yb))(params)
+
+    def provider(t):
+        idx = device_batches(jax.random.PRNGKey(3), split, 16, t)
+        return (jnp.asarray(xnp[idx]), jnp.asarray(ynp[idx]))
+
+    def provider_chunk(ts):
+        idx = device_batches_many(jax.random.PRNGKey(3), split, 16, ts)
+        return (jnp.asarray(xnp[idx]), jnp.asarray(ynp[idx]))
+
+    return dict(params0=params0, dim=dim, grad_fn=grad_fn, provider=provider,
+                provider_chunk=provider_chunk, split=split, x=xnp, y=ynp)
+
+
+def _cfg(task, backend="vmap", fading=False, **kw):
+    chan = ChannelConfig(num_devices=K, channel_mean=1e-3,
+                         block_fading=fading)
+    base = dict(num_devices=K, scheme="normalized", case="I", p=0.75,
+                channel=chan, grad_bound=10.0, smoothness_L=5.0,
+                expected_loss_drop=2.0, seed=0, backend=backend)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _run_driver(task, cfg, driver, rounds=ROUNDS, **kw):
+    state = setup(cfg, task["params0"], task["dim"])
+    return run(cfg, state, task["grad_fn"], task["provider"], rounds,
+               driver=driver, chunk_size=4, **kw)
+
+
+def assert_params_equal(got, want, **tol):
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), **tol)
+
+
+class TestDriverParity:
+    """scan vs python: identical params and history under a shared seed, for
+    every backend x {fixed, block-fading}.  (fp32 tolerance per the
+    acceptance criteria; on CPU the two drivers are in fact bitwise equal.)"""
+
+    @pytest.mark.parametrize("backend", ["vmap", "kernels"])
+    @pytest.mark.parametrize("fading", [False, True])
+    def test_params_and_history(self, task, backend, fading):
+        cfg = _cfg(task, backend=backend, fading=fading)
+        s_py, h_py = _run_driver(task, cfg, "python")
+        s_sc, h_sc = _run_driver(task, cfg, "scan")
+        assert_params_equal(s_sc.params, s_py.params, rtol=2e-6, atol=1e-7)
+        assert h_sc["round"] == h_py["round"] == list(range(1, ROUNDS + 1))
+        for k in rt.DIAG_KEYS:
+            np.testing.assert_allclose(h_sc[k], h_py[k], rtol=2e-6,
+                                       atol=1e-9, err_msg=k)
+        if fading:
+            # persisted channel state agrees between drivers too
+            np.testing.assert_allclose(s_sc.h, s_py.h, rtol=2e-6)
+            np.testing.assert_allclose(s_sc.b, s_py.b, rtol=2e-6)
+
+    def test_eval_rounds_align(self, task):
+        """The scan driver chunks so eval lands at exactly the python
+        driver's rounds (t == 1 and every eval_every-th)."""
+        cfg = _cfg(task)
+
+        def ev(params):
+            return {"probe": float(sum(jnp.sum(l) for l in
+                                       jax.tree_util.tree_leaves(params)))}
+
+        _, h_py = _run_driver(task, cfg, "python", rounds=9, eval_fn=ev,
+                              eval_every=4)
+        _, h_sc = _run_driver(task, cfg, "scan", rounds=9, eval_fn=ev,
+                              eval_every=4)
+        assert h_py["eval_round"] == [1, 4, 8]
+        assert h_sc["eval_round"] == h_py["eval_round"]
+        np.testing.assert_allclose(h_sc["probe"], h_py["probe"], rtol=1e-6)
+
+    def test_chunk_batch_provider_matches_stacking(self, task):
+        cfg = _cfg(task, fading=True)
+        _, h_stack = _run_driver(task, cfg, "scan")
+        s2 = setup(cfg, task["params0"], task["dim"])
+        _, h_chunk = run(cfg, s2, task["grad_fn"], task["provider"], ROUNDS,
+                         driver="scan", chunk_size=4,
+                         chunk_batch_provider=task["provider_chunk"])
+        for k in rt.DIAG_KEYS:
+            np.testing.assert_allclose(h_chunk[k], h_stack[k], rtol=1e-6,
+                                       err_msg=k)
+
+    def test_caller_params_survive_donation(self, task):
+        """The scan engine donates param buffers chunk-to-chunk; the caller's
+        original pytree must stay readable (benchmarks reuse params0)."""
+        cfg = _cfg(task)
+        before = [np.asarray(l).copy() for l in
+                  jax.tree_util.tree_leaves(task["params0"])]
+        _run_driver(task, cfg, "scan")
+        for l, want in zip(jax.tree_util.tree_leaves(task["params0"]), before):
+            np.testing.assert_array_equal(np.asarray(l), want)
+
+
+class TestChunkPlan:
+    def test_eval_rounds_end_chunks(self):
+        chunks = rt._plan_chunks(0, 10, eval_every=4, chunk_size=100)
+        assert chunks == [[1], [2, 3, 4], [5, 6, 7, 8], [9, 10]]
+
+    def test_chunk_size_cap(self):
+        chunks = rt._plan_chunks(0, 7, eval_every=None, chunk_size=3)
+        assert chunks == [[1, 2, 3], [4, 5, 6], [7]]
+
+    def test_resume_offset(self):
+        chunks = rt._plan_chunks(12, 6, eval_every=8, chunk_size=100)
+        assert chunks == [[13, 14, 15, 16], [17, 18]]
+
+
+class TestJaxSolverVsScipy:
+    """jax-native Algorithm 1 (lax.while_loop bisection + closed-form
+    water-filling inner program) vs the float64 SciPy reference."""
+
+    def rayleigh(self, seed, k, mean=1e-3):
+        rng = np.random.default_rng(seed)
+        return rng.rayleigh(mean / math.sqrt(math.pi / 2), k)
+
+    @pytest.mark.parametrize("seed,k,n", [(0, 20, 1000), (1, 3, 50),
+                                          (2, 8, 100000), (3, 12, 10)])
+    def test_matches_scipy(self, seed, k, n):
+        h = self.rayleigh(seed, k)
+        ref = amp.solve_problem3(h, 1e-7, n, math.sqrt(5))
+        got = amp.solve_problem3_jax(jnp.asarray(h, jnp.float32), 1e-7, n,
+                                     math.sqrt(5))
+        np.testing.assert_allclose(float(got.Z), ref.Z, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(got.b), ref.b, atol=5e-3)
+
+    def test_jittable_and_feasible(self):
+        h = jnp.asarray(self.rayleigh(5, 9), jnp.float32)
+        sol = jax.jit(lambda hh: amp.solve_problem3_jax(hh, 1e-7, 500, 2.0))(h)
+        b = np.asarray(sol.b)
+        assert (b >= -1e-7).all() and (b <= 2.0 + 1e-6).all()
+        assert float(sol.Z) > 0
+
+    def test_noiseless_edge_equalizes(self):
+        """c -> 0: the optimum equalizes h_k b_k (same structure the SciPy
+        solver is tested for) instead of degenerating to b = 0."""
+        h = jnp.asarray([1.0, 2.0, 4.0])
+        sol = amp.solve_problem3_jax(h, 0.0, 1, 10.0)
+        hb = np.asarray(h) * np.asarray(sol.b)
+        assert np.std(hb) / np.mean(hb) < 0.05
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(2, 16),
+           log_noise=st.floats(-9, -4), n=st.integers(1, 200_000))
+    def test_property_matches_scipy(self, seed, k, log_noise, n):
+        """Satellite acceptance: jax solver matches SciPy to tol on random
+        channels, property-style over K and N."""
+        h = self.rayleigh(seed, k)
+        noise = 10.0 ** log_noise
+        ref = amp.solve_problem3(h, noise, n, 2.0)
+        got = amp.solve_problem3_jax(jnp.asarray(h, jnp.float32), noise, n,
+                                     2.0)
+        np.testing.assert_allclose(float(got.Z), ref.Z, rtol=2e-4)
+
+
+@pytest.mark.slow
+class TestMeshDriverParity:
+    """Mesh backend needs >= K local devices -> subprocess with forced host
+    devices; the scan engine must wrap shard_map rounds unchanged."""
+
+    def test_scan_vs_python(self):
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.channel import ChannelConfig
+        from repro.data.datasets import device_batches, split_dirichlet, \\
+            synthetic_mnist
+        from repro.fed.runtime import FLConfig, run, setup
+        from repro.models.simple import init_mlp_classifier, \\
+            mlp_classifier_loss
+
+        K = 4
+        key = jax.random.PRNGKey(0)
+        x, y = synthetic_mnist(key, 300)
+        split = split_dirichlet(jax.random.fold_in(key, 1), np.asarray(y),
+                                K, 1.0)
+        params0 = init_mlp_classifier(jax.random.fold_in(key, 2), hidden=8)
+        dim = sum(int(np.prod(np.asarray(l).shape))
+                  for l in jax.tree_util.tree_leaves(params0))
+        xnp, ynp = np.asarray(x), np.asarray(y)
+
+        def grad_fn(params, batch):
+            xb, yb = batch
+            return jax.grad(lambda p: mlp_classifier_loss(p, xb, yb))(params)
+
+        def provider(t):
+            idx = device_batches(jax.random.PRNGKey(3), split, 8, t)
+            return (jnp.asarray(xnp[idx]), jnp.asarray(ynp[idx]))
+
+        chan = ChannelConfig(num_devices=K, channel_mean=1e-3,
+                             block_fading=True)
+        cfg = FLConfig(num_devices=K, scheme="normalized", channel=chan,
+                       grad_bound=10.0, smoothness_L=5.0,
+                       expected_loss_drop=2.0, seed=0, backend="mesh")
+        out = {}
+        for driver in ("python", "scan"):
+            state = setup(cfg, params0, dim)
+            state, hist = run(cfg, state, grad_fn, provider, 6,
+                              driver=driver, chunk_size=3)
+            out[driver] = state.params
+        for g, w in zip(jax.tree_util.tree_leaves(out["scan"]),
+                        jax.tree_util.tree_leaves(out["python"])):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-6, atol=1e-7)
+        print("MESH_ENGINE_PARITY_OK")
+        """
+        env = dict(os.environ, PYTHONPATH="src")
+        r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                           capture_output=True, text=True, env=env,
+                           timeout=600, cwd=os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))))
+        assert "MESH_ENGINE_PARITY_OK" in r.stdout, r.stderr[-2500:]

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.channel import ChannelConfig
 from repro.data.datasets import device_batches, split_dirichlet, synthetic_mnist
-from repro.fed.runtime import FLConfig, run, setup
+from repro.fed.runtime import DIAG_KEYS, FLConfig, run, setup
 from repro.models.simple import (init_mlp_classifier, mlp_classifier_accuracy,
                                  mlp_classifier_loss)
 
@@ -83,3 +83,69 @@ class TestCaseIEndToEnd:
         for scheme in ("onebit", "benchmark2"):
             _, hist = _run(mnist_task, _cfg(scheme), rounds=60)
             assert hist["acc"][-1] > 0.3, scheme
+
+
+class TestHistoryAccounting:
+    """Satellite: update_norm and tx_energy were computed every round but
+    never recorded — every per-round history key must grow by num_rounds,
+    on both drivers."""
+
+    @pytest.mark.parametrize("driver", ["python", "scan"])
+    def test_every_key_grows_by_num_rounds(self, mnist_task, driver):
+        rounds = 7
+        cfg = _cfg("normalized")
+        state = setup(cfg, mnist_task["params0"], mnist_task["dim"])
+        _, hist = run(cfg, state, mnist_task["grad_fn"],
+                      mnist_task["provider"], rounds, driver=driver)
+        assert "update_norm" in DIAG_KEYS and "tx_energy" in DIAG_KEYS
+        for key in ("round",) + DIAG_KEYS:
+            assert len(hist[key]) == rounds, key
+        # normalized scheme: ||x_k|| = 1, so tx energy is sum_k b_k^2 exactly
+        want = float(np.sum(np.square(state.b)))
+        np.testing.assert_allclose(hist["tx_energy"], want, rtol=1e-4)
+        assert all(v > 0 for v in hist["update_norm"])
+
+
+class TestBlockFadingStatePersistence:
+    """Satellite: run() used to mutate local h/b/a and drop them — a second
+    run resumed from the stale round-0 channel.  The final values must be
+    written back to FLState and resume must continue the trajectory."""
+
+    def _fading_cfg(self):
+        chan = ChannelConfig(num_devices=K, channel_mean=1e-3,
+                             block_fading=True)
+        return _cfg("normalized", channel=chan)
+
+    @pytest.mark.parametrize("driver", ["python", "scan"])
+    def test_final_channel_persisted(self, mnist_task, driver):
+        cfg = self._fading_cfg()
+        state = setup(cfg, mnist_task["params0"], mnist_task["dim"])
+        h0, b0, a0 = state.h.copy(), state.b.copy(), state.a
+        state, _ = run(cfg, state, mnist_task["grad_fn"],
+                       mnist_task["provider"], 5, driver=driver)
+        assert state.round == 5
+        assert not np.allclose(state.h, h0)   # round-5 draw, not round-0
+        assert state.a != a0
+        # the optimized effective gain a*sum(h b) is preserved by re-solving
+        np.testing.assert_allclose(state.a * np.sum(state.h * state.b),
+                                   a0 * np.sum(h0 * b0), rtol=1e-5)
+
+    @pytest.mark.parametrize("driver", ["python", "scan"])
+    def test_resume_matches_single_run(self, mnist_task, driver):
+        cfg = self._fading_cfg()
+        one = setup(cfg, mnist_task["params0"], mnist_task["dim"])
+        one, hist_one = run(cfg, one, mnist_task["grad_fn"],
+                            mnist_task["provider"], 10, driver=driver)
+        two = setup(cfg, mnist_task["params0"], mnist_task["dim"])
+        two, _ = run(cfg, two, mnist_task["grad_fn"],
+                     mnist_task["provider"], 5, driver=driver)
+        two, hist_two = run(cfg, two, mnist_task["grad_fn"],
+                            mnist_task["provider"], 5, driver=driver)
+        assert two.round == 10
+        assert hist_two["round"] == list(range(6, 11))
+        for a, b in zip(jax.tree_util.tree_leaves(one.params),
+                        jax.tree_util.tree_leaves(two.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(hist_one["grad_norm_mean"][5:],
+                                   hist_two["grad_norm_mean"], rtol=1e-4)

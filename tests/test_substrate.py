@@ -12,7 +12,8 @@ from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import store
 from repro.core.channel import ChannelConfig, channel_for_round, draw_channel
-from repro.data.datasets import (FederatedSplit, device_batches, ridge_data,
+from repro.data.datasets import (FederatedSplit, device_batches,
+                                 device_batches_many, ridge_data,
                                  split_dirichlet, split_iid, synthetic_mnist,
                                  token_stream)
 from repro.optim.optimizers import (adamw, constant_schedule, cosine_schedule,
@@ -75,6 +76,31 @@ class TestData:
         # every device samples from ITS shard only
         for k in range(4):
             assert np.isin(b1[k], split.indices[k]).all()
+
+    def test_device_batches_matches_per_device_reference(self):
+        """The vectorized single-dispatch sampler must be bit-identical to
+        the historical per-device fold_in/randint loop."""
+        split = split_dirichlet(KEY, np.asarray(
+            jax.random.randint(KEY, (700,), 0, 10)), 5, 0.7)
+        for t in (1, 9, 250):
+            got = device_batches(jax.random.PRNGKey(5), split, 12, t)
+            want = np.stack([
+                idx[np.asarray(jax.random.randint(
+                    jax.random.fold_in(jax.random.fold_in(
+                        jax.random.PRNGKey(5), t), k),
+                    (12,), 0, len(idx)))]
+                for k, idx in enumerate(split.indices)])
+            np.testing.assert_array_equal(got, want)
+
+    def test_device_batches_many_matches_per_round(self):
+        """[T, K, B] chunk sampling (the scan engine's data path) stacks the
+        exact per-round draws."""
+        split = split_iid(KEY, 400, 4)
+        ts = [3, 4, 11]
+        got = device_batches_many(jax.random.PRNGKey(5), split, 16, ts)
+        want = np.stack([device_batches(jax.random.PRNGKey(5), split, 16, t)
+                         for t in ts])
+        np.testing.assert_array_equal(got, want)
 
     def test_synthetic_mnist_learnable_structure(self):
         x, y = synthetic_mnist(KEY, 500)
