@@ -1,4 +1,5 @@
-"""Shared experiment setup for the paper-figure benchmarks.
+"""Shared experiment setup for the paper-figure benchmarks, on the
+declarative ``repro.fl`` facade.
 
 Two tasks, exactly as in paper Sec. V:
  * Case I — 10-class classification with the 3-FC-layer ReLU classifier
@@ -9,24 +10,20 @@ K = 20 devices, b_k^max = sqrt(5), theta_th = pi/3.  The channel keeps the
 paper's Rayleigh/noise *model*; the mean is scaled so the post-aggregation
 SNR is in the trainable regime the paper's figures imply (EXPERIMENTS.md
 §Faithfulness discusses the paper's literal 1e-5 / 1e-7 constants).
+
+The historical hand-wired plumbing (grad_fn + providers + eval_fn + split
+per experiment class) lives in ``repro.fl.tasks`` now; these classes only
+build ``FLConfig``s/``ExperimentSpec``s and run them.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Optional
 
 from repro.core.channel import ChannelConfig
-from repro.data.datasets import (device_batches, device_batches_many,
-                                 ridge_data, split_dirichlet, split_iid,
-                                 synthetic_mnist)
-from repro.fed.runtime import FLConfig, run, setup
-from repro.models.simple import (init_mlp_classifier, init_ridge,
-                                 mlp_classifier_accuracy, mlp_classifier_loss,
-                                 ridge_constants, ridge_loss, ridge_optimum)
+from repro.fed.runtime import FLConfig
+from repro.fl import (DataSpec, EvalSpec, Experiment, ExperimentSpec,
+                      ModelSpec, build_task)
 
 K = 20
 CHANNEL_MEAN = 1e-3
@@ -48,139 +45,120 @@ def channel(num_devices: int = K) -> ChannelConfig:
     return ChannelConfig(num_devices=num_devices, channel_mean=CHANNEL_MEAN)
 
 
-# ---------------------------------------------------------------------------
-# Case I: synthetic-MNIST MLP classification
+class _SpecExperiment:
+    """Spec-building base: subclasses declare data/model specs and the
+    FLConfig defaults; the task (and its compiled executables) is shared
+    across every config built here via the ``repro.fl.tasks`` cache."""
 
+    data: DataSpec
+    model: ModelSpec
 
-class CaseIExperiment:
-    def __init__(self, num_train: int = 4000, num_test: int = 1000,
-                 hidden: int = 64, non_iid_alpha: float = 1.0):
-        key = jax.random.PRNGKey(SEED)
-        x, y = synthetic_mnist(key, num_train + num_test)
-        self.x_tr, self.y_tr = x[:num_train], y[:num_train]
-        self.x_te, self.y_te = x[num_train:], y[num_train:]
-        self.split = split_dirichlet(jax.random.fold_in(key, 1),
-                                     np.asarray(self.y_tr), K, non_iid_alpha)
-        self.hidden = hidden
-        self.params0 = init_mlp_classifier(jax.random.fold_in(key, 2),
-                                           hidden=hidden)
-        self.dim = sum(int(np.prod(np.asarray(l).shape))
-                       for l in jax.tree_util.tree_leaves(self.params0))
-        self._xnp, self._ynp = np.asarray(self.x_tr), np.asarray(self.y_tr)
+    def __init__(self):
+        self._task = build_task(self.data, self.model, K)
+        self._G: Optional[float] = None
 
-    def grad_fn(self, params, batch):
-        xb, yb = batch
-        return jax.grad(lambda p: mlp_classifier_loss(p, xb, yb))(params)
+    # task constants the figures/examples read
+    @property
+    def params0(self):
+        return self._task.params0
 
-    def provider(self, t, batch_size: int = 50):
-        idx = device_batches(jax.random.PRNGKey(3), self.split, batch_size, t)
-        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
+    @property
+    def dim(self) -> int:
+        return self._task.model_dim
 
-    def provider_chunk(self, ts, batch_size: int = 50):
-        """[T, K, ...] batches for a whole scan chunk: one gather + transfer."""
-        idx = device_batches_many(jax.random.PRNGKey(3), self.split,
-                                  batch_size, ts)
-        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
+    @property
+    def constants(self):
+        return self._task.constants
 
-    def eval_fn(self, params) -> Dict[str, float]:
-        return {
-            "test_acc": float(mlp_classifier_accuracy(params, self.x_te, self.y_te)),
-            "train_loss": float(mlp_classifier_loss(params, self.x_tr, self.y_tr)),
-        }
+    def _base_config(self) -> dict:
+        raise NotImplementedError
+
+    def _calibration_config(self) -> FLConfig:
+        """The noiseless mean-aggregation config G is calibrated on — the
+        same constants as ``_base_config`` so the two can never drift."""
+        return FLConfig(**{**self._base_config(),
+                           "scheme": "mean", "grad_bound": 1.0})
 
     def calibrate_G(self, rounds: int = 30) -> float:
         """Empirical max-norm bound G (the conservative constant Benchmark I
         provisions for): max per-device gradient norm over a noiseless
         mean-aggregation calibration run, x1.2 headroom."""
-        if not hasattr(self, "_G"):
-            cfg = FLConfig(num_devices=K, scheme="mean", case="I", p=0.75,
-                           channel=channel(), seed=SEED, grad_bound=1.0,
-                           smoothness_L=5.0, expected_loss_drop=2.0)
-            state = setup(cfg, self.params0, self.dim)
-            _, hist = run(cfg, state, self.grad_fn, self.provider, rounds)
+        if self._G is None:
+            e = Experiment(self.spec(self._calibration_config(),
+                                     evaluate=False))
+            hist = e.run(rounds)
             self._G = 1.2 * max(hist["grad_norm_max"])
         return self._G
 
-    def config(self, scheme: str = "normalized", amplification: str = "optimal",
-               **kw) -> FLConfig:
-        base = dict(num_devices=K, scheme=scheme, case="I", p=0.75,
-                    channel=channel(), amplification=amplification,
-                    grad_bound=self.calibrate_G(), smoothness_L=5.0,
-                    expected_loss_drop=2.0, seed=SEED,
-                    backend=DEFAULT_BACKEND)
+    def config(self, scheme: str = "normalized",
+               amplification: str = "optimal", **kw) -> FLConfig:
+        base = self._base_config()
+        base.update(scheme=scheme, amplification=amplification,
+                    grad_bound=self.calibrate_G(), backend=DEFAULT_BACKEND)
         base.update(kw)
         return FLConfig(**base)
 
+    def spec(self, cfg: FLConfig, eval_every: int = 10,
+             evaluate: bool = True) -> ExperimentSpec:
+        return ExperimentSpec(fl=cfg, data=self.data, model=self.model,
+                              eval=EvalSpec(every=eval_every,
+                                            enabled=evaluate),
+                              driver=DEFAULT_DRIVER)
+
+    def experiment(self, cfg: FLConfig, eval_every: int = 10) -> Experiment:
+        return Experiment(self.spec(cfg, eval_every))
+
     def run(self, cfg: FLConfig, rounds: int, eval_every: int = 10):
-        state = setup(cfg, self.params0, self.dim)
-        return run(cfg, state, self.grad_fn, self.provider, rounds,
-                   self.eval_fn, eval_every, driver=DEFAULT_DRIVER,
-                   chunk_batch_provider=self.provider_chunk)
+        e = self.experiment(cfg, eval_every)
+        hist = e.run(rounds)
+        return e.state, hist
+
+
+# ---------------------------------------------------------------------------
+# Case I: synthetic-MNIST MLP classification
+
+
+class CaseIExperiment(_SpecExperiment):
+    def __init__(self, num_train: int = 4000, num_test: int = 1000,
+                 hidden: int = 64, non_iid_alpha: float = 1.0):
+        self.data = DataSpec(dataset="synthetic_mnist", split="dirichlet",
+                             alpha=non_iid_alpha, batch_size=50,
+                             num_train=num_train, num_test=num_test,
+                             seed=SEED)
+        self.model = ModelSpec(kind="mlp", hidden=hidden)
+        super().__init__()
+
+    def _base_config(self) -> dict:
+        return dict(num_devices=K, case="I", p=0.75, channel=channel(),
+                    smoothness_L=5.0, expected_loss_drop=2.0, seed=SEED)
 
 
 # ---------------------------------------------------------------------------
 # Case II: ridge regression
 
 
-class CaseIIExperiment:
+class CaseIIExperiment(_SpecExperiment):
     def __init__(self, dim: int = 30, num_examples: int = 2000,
                  lam: float = 0.1):
-        key = jax.random.PRNGKey(SEED + 10)
-        self.x, self.y, _ = ridge_data(key, num_examples, dim)
+        self.data = DataSpec(dataset="ridge", split="iid", batch_size=50,
+                             num_train=num_examples, dim=dim, seed=SEED + 10)
+        self.model = ModelSpec(kind="ridge", lam=lam)
+        super().__init__()
+        c = self.constants
+        self.L, self.M = c["smoothness_L"], c["strong_convexity_M"]
+        self.f_star = c["f_star"]
         self.lam = lam
-        self.L, self.M, _ = ridge_constants(self.x, lam)
-        w_star = ridge_optimum(self.x, self.y, lam)
-        self.f_star = float(ridge_loss({"w": w_star}, self.x, self.y, lam))
-        self.split = split_iid(jax.random.fold_in(key, 1), num_examples, K)
-        self.params0 = init_ridge(jax.random.fold_in(key, 2), dim)
-        self.dim = dim
-        self._xnp, self._ynp = np.asarray(self.x), np.asarray(self.y)
 
-    def grad_fn(self, params, batch):
-        xb, yb = batch
-        return jax.grad(lambda p: ridge_loss(p, xb, yb, self.lam))(params)
+    def _base_config(self) -> dict:
+        return dict(num_devices=K, case="II", eta=0.01, channel=channel(),
+                    smoothness_L=self.L, strong_convexity_M=self.M,
+                    s_target=0.995, seed=SEED)
 
-    def provider(self, t, batch_size: int = 50):
-        idx = device_batches(jax.random.PRNGKey(3), self.split, batch_size, t)
-        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
-
-    def provider_chunk(self, ts, batch_size: int = 50):
-        """[T, K, ...] batches for a whole scan chunk: one gather + transfer."""
-        idx = device_batches_many(jax.random.PRNGKey(3), self.split,
-                                  batch_size, ts)
-        return (jnp.asarray(self._xnp[idx]), jnp.asarray(self._ynp[idx]))
-
-    def eval_fn(self, params) -> Dict[str, float]:
-        return {"loss": float(ridge_loss(params, self.x, self.y, self.lam)),
-                "gap": float(ridge_loss(params, self.x, self.y, self.lam))
-                - self.f_star}
-
-    def calibrate_G(self, rounds: int = 30) -> float:
-        if not hasattr(self, "_G"):
-            cfg = FLConfig(num_devices=K, scheme="mean", case="II", eta=0.01,
-                           channel=channel(), seed=SEED, grad_bound=1.0,
-                           smoothness_L=self.L, strong_convexity_M=self.M,
-                           s_target=0.995)
-            state = setup(cfg, self.params0, self.dim)
-            _, hist = run(cfg, state, self.grad_fn, self.provider, rounds)
-            self._G = 1.2 * max(hist["grad_norm_max"])
-        return self._G
-
-    def config(self, scheme: str = "normalized", amplification: str = "optimal",
-               s_target: float = 0.995, **kw) -> FLConfig:
-        base = dict(num_devices=K, scheme=scheme, case="II", eta=0.01,
-                    channel=channel(), amplification=amplification,
-                    grad_bound=self.calibrate_G(), smoothness_L=self.L,
-                    strong_convexity_M=self.M, s_target=s_target, seed=SEED,
-                    backend=DEFAULT_BACKEND)
-        base.update(kw)
-        return FLConfig(**base)
-
-    def run(self, cfg: FLConfig, rounds: int, eval_every: int = 20):
-        state = setup(cfg, self.params0, self.dim)
-        return run(cfg, state, self.grad_fn, self.provider, rounds,
-                   self.eval_fn, eval_every, driver=DEFAULT_DRIVER,
-                   chunk_batch_provider=self.provider_chunk)
+    def config(self, scheme: str = "normalized",
+               amplification: str = "optimal", s_target: float = 0.995,
+               **kw) -> FLConfig:
+        return super().config(scheme=scheme, amplification=amplification,
+                              s_target=s_target, **kw)
 
 
 def timed_rounds(exp, cfg, rounds: int, eval_every: int = 50):

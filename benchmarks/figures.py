@@ -119,13 +119,15 @@ def engine_rounds_per_sec(rounds: int = 64,
     backend) on both benchmark tasks — the Case-I MLP (compute-bound rounds:
     the engine's win is the removed host round-trips) and the Case-II ridge
     model (driver-overhead-bound rounds: the engine's win is the round rate
-    itself).  The runtime caches compiled round/chunk executables across
-    ``run`` calls, so one warm-up run per driver removes jit compile from the
-    timed runs; the reported rate is the best of ``repeats`` full runs."""
+    itself).  The facade's task cache keeps one ``grad_fn`` identity per
+    experiment, so the runtime's compiled executables persist across the
+    ``Experiment`` resets; one warm-up run per driver removes jit compile
+    from the timed runs, and the reported rate is the best of ``repeats``
+    full runs."""
     import time
 
     from repro.core.channel import ChannelConfig
-    from repro.fed.runtime import run, setup
+    from repro.fl import Experiment
     from benchmarks.common import (CHANNEL_MEAN, CaseIExperiment,
                                    CaseIIExperiment, K)
 
@@ -136,20 +138,19 @@ def engine_rounds_per_sec(rounds: int = 64,
                          channel=ChannelConfig(num_devices=K,
                                                channel_mean=CHANNEL_MEAN,
                                                noise_var=0.0))
+        e = Experiment(exp.spec(cfg, evaluate=False))
         rps = {}
         for driver in ("python", "scan"):
             # compute-bound MLP rounds prefer small chunks (batch-buffer
             # locality); overhead-bound ridge rounds prefer one maximal chunk
-            kw = dict(driver=driver,
-                      chunk_size=8 if task == "mlp" else n,
-                      chunk_batch_provider=exp.provider_chunk)
-            state = setup(cfg, exp.params0, exp.dim)
-            run(cfg, state, exp.grad_fn, exp.provider, n, **kw)   # warm-up
+            kw = dict(driver=driver, chunk_size=8 if task == "mlp" else n)
+            e.reset()
+            e.run(n, **kw)                                       # warm-up
             dt = float("inf")
             for _ in range(repeats):
-                state = setup(cfg, exp.params0, exp.dim)
+                e.reset()
                 t0 = time.perf_counter()
-                run(cfg, state, exp.grad_fn, exp.provider, n, **kw)
+                e.run(n, **kw)
                 dt = min(dt, time.perf_counter() - t0)
             rps[driver] = n / dt
             rows.append((f"engine/{task}/{driver}", dt / n * 1e6,
@@ -159,6 +160,50 @@ def engine_rounds_per_sec(rounds: int = 64,
                      f"scan_over_python={speedup:.2f}x"))
         dump[task] = {"rounds_per_sec": rps, "speedup": speedup, "rounds": n}
     _dump("engine", dump)
+    return rows
+
+
+def scenario_axes(rounds: int = 120) -> List[Tuple[str, float, str]]:
+    """The new spec axes on the Case-I task, each a one-field change to the
+    baseline ``ExperimentSpec`` (the point of the declarative redesign):
+    adamw server optimizer, H = 4 local steps, and 50% Bernoulli
+    participation — reported as final accuracy plus the measured eq.-8
+    transmit-energy total, which partial participation cuts roughly in
+    half."""
+    import dataclasses
+    import time
+
+    import numpy as np
+
+    from repro.fl import Experiment
+    from benchmarks.common import CaseIExperiment
+
+    exp = CaseIExperiment()
+    base_spec = exp.spec(exp.config(scheme="normalized"),
+                         eval_every=max(rounds // 4, 5))
+    variants = {
+        "baseline": base_spec,
+        "adamw": dataclasses.replace(base_spec, server_opt="adamw"),
+        "local_steps4": dataclasses.replace(base_spec, local_steps=4,
+                                            local_lr=0.05),
+        "participation50": dataclasses.replace(base_spec, participation=0.5),
+    }
+    rows, dump = [], {}
+    for name, spec in variants.items():
+        e = Experiment(spec)
+        t0 = time.perf_counter()
+        e.run(rounds)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        acc = e.history["test_acc"][-1]
+        energy = float(np.sum(e.history["tx_energy"]))
+        parts = float(np.mean(e.history["num_participants"]))
+        dump[name] = {"round": e.history["eval_round"],
+                      "acc": e.history["test_acc"],
+                      "total_tx_energy": energy,
+                      "mean_participants": parts}
+        rows.append((f"scenario/{name}", us,
+                     f"final_acc={acc:.4f};total_tx_energy={energy:.1f}"))
+    _dump("scenarios", dump)
     return rows
 
 

@@ -44,6 +44,9 @@ def main() -> None:
         ("fig3b", lambda: figures.fig3b_tradeoff(r(600, 120))),
         ("grad_norm", lambda: figures.grad_norm_fluctuation(r(200, 50))),
         ("engine", lambda: figures.engine_rounds_per_sec(r(48, 16))),
+        # the declarative spec axes: server optimizer / local steps /
+        # partial participation, each one field on the baseline spec
+        ("scenarios", lambda: figures.scenario_axes(r(120, 30))),
         ("roofline", roofline_rows),
     ]
     if args.only:

@@ -1,7 +1,8 @@
 """End-to-end driver (paper Case I): federated 10-digit classification with
 over-the-air normalized-gradient aggregation — a few hundred rounds, all
-aggregation schemes, with checkpointing.  Rounds run on the compiled
-``lax.scan`` engine by default (``--driver python`` for the host loop).
+aggregation schemes, with resumable ``Experiment`` checkpoints.  Rounds run
+on the compiled ``lax.scan`` engine by default (``--driver python`` for the
+host loop).
 
     PYTHONPATH=src python examples/fl_mnist_ota.py [--rounds 300] [--scheme all]
 """
@@ -11,8 +12,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import CaseIExperiment
-from repro.checkpoint import store
+from repro.fl import Experiment
 
 
 def main() -> None:
@@ -27,6 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import common
+    from benchmarks.common import CaseIExperiment
     common.DEFAULT_DRIVER = args.driver
     exp = CaseIExperiment()
     print(f"K=20 devices, non-IID Dirichlet split, model dim {exp.dim}, "
@@ -36,17 +37,19 @@ def main() -> None:
                if args.scheme == "all" else [args.scheme])
     for scheme in schemes:
         cfg = exp.config(scheme=scheme)
-        state, hist = exp.run(cfg, args.rounds,
-                              eval_every=max(1, args.rounds // 10))
+        e = exp.experiment(cfg, eval_every=max(1, args.rounds // 10))
+        e.run(args.rounds)
+        hist = e.history
         accs = ", ".join(f"{t}:{a:.3f}" for t, a in
                          zip(hist["eval_round"], hist["test_acc"]))
         print(f"[{scheme:12s}] test acc over rounds: {accs}")
-        path = store.save_round(os.path.join(args.ckpt_dir, scheme),
-                                args.rounds, state.params,
-                                {"scheme": scheme,
-                                 "final_acc": hist["test_acc"][-1]})
-        restored, meta = store.restore(path, state.params)
-        print(f"             checkpoint -> {path} (acc {meta['final_acc']:.3f})")
+        # full resumable checkpoint: params + server-opt state + channel/round
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        path = e.save(os.path.join(args.ckpt_dir, f"{scheme}.msgpack"))
+        resumed = Experiment(e.spec).load(path)
+        assert resumed.round == args.rounds
+        print(f"             checkpoint -> {path} "
+              f"(resumes at round {resumed.round})")
 
 
 if __name__ == "__main__":

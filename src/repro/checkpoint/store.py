@@ -52,7 +52,13 @@ def save(path: str, tree: PyTree, metadata: Optional[Dict] = None) -> None:
 
 
 def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict]:
-    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    """Restore into the structure of ``like`` (shape/dtype checked).
+
+    A ``like`` leaf that is a *numpy* array round-trips as numpy with its own
+    dtype — float64 host-side state (e.g. the FL channel draw) must not be
+    silently truncated to fp32 by passing through jnp, which is the fate of
+    every jax-array leaf (device arrays follow jax's default precision).
+    """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     leaves_like, treedef = _flatten_with_paths(like)
@@ -62,9 +68,12 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict]:
         if k not in stored:
             raise KeyError(f"checkpoint missing leaf {k}")
         arr = _decode_array(stored[k])
-        ref_dtype = jnp.asarray(ref).dtype if hasattr(ref, "dtype") else None
         if tuple(arr.shape) != tuple(np.shape(ref)):
             raise ValueError(f"shape mismatch at {k}: {arr.shape} vs {np.shape(ref)}")
+        if isinstance(ref, np.ndarray) and not isinstance(ref, jax.Array):
+            out[k] = arr.astype(ref.dtype)
+            continue
+        ref_dtype = jnp.asarray(ref).dtype if hasattr(ref, "dtype") else None
         out[k] = jnp.asarray(arr).astype(ref_dtype)
     flat = [out[jax.tree_util.keystr(p)] for p, _ in
             jax.tree_util.tree_flatten_with_path(like)[0]]

@@ -6,7 +6,8 @@ from repro.core.ota import (OTAConfig, BACKENDS, aggregate,
                             apply_update, device_transform, superpose,
                             server_post, per_device_norm, per_device_sq_norm,
                             per_device_mean_std, tree_num_elements,
-                            transmit_norms, transmit_energy)
+                            transmit_norms, transmit_energy,
+                            participation_fold)
 from repro.core.schemes import (Scheme, DeviceStats, register as register_scheme,
                                 get as get_scheme)
 

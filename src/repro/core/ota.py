@@ -177,6 +177,34 @@ def apply_update(params: PyTree, y: PyTree, eta) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# partial participation
+
+
+def participation_fold(h: jax.Array, b: jax.Array, a,
+                       mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fold a per-round 0/1 participation mask into the channel parameters.
+
+    A non-participating device transmits nothing, which on every backend is
+    exactly ``b_k = 0`` (zero superposition weight, zero side-info weight,
+    zero eq.-8 energy).  The server schedules the round, so it knows the
+    participant set and rescales its receiver gain to hold the *effective*
+    gain ``a * sum_k h_k b_k`` at the full-cohort design value — the quantity
+    the paper's convergence bounds see.  If nobody participates the gain is
+    zeroed: the server applies no update rather than amplifying pure noise.
+
+    Returns ``(b_eff, a_eff)``.
+    """
+    mask = mask.astype(jnp.float32)
+    b_eff = b * mask
+    hb_full = jnp.sum(h * b)
+    hb_eff = jnp.sum(h * b_eff)
+    a_eff = jnp.where(hb_eff > _EPS * jnp.maximum(hb_full, 1.0),
+                      a * hb_full / jnp.maximum(hb_eff, _EPS),
+                      0.0).astype(jnp.float32)
+    return b_eff, a_eff
+
+
+# ---------------------------------------------------------------------------
 # power accounting
 
 
@@ -191,11 +219,12 @@ def transmit_norms(scheme: str, stacked_grads: PyTree,
 
 
 def transmit_energy(scheme: str, stacked_grads: PyTree, b: jax.Array,
-                    grad_bound: Optional[float] = None) -> jax.Array:
+                    grad_bound: Optional[float] = None,
+                    mask: Optional[jax.Array] = None) -> jax.Array:
     """[K] per-round transmit energies b_k^2 ||x_k||^2 (the paper's eq. 8
     power budget), via each scheme's analytic ``transmit_sq_norm`` — no
-    second pass over the gradients."""
+    second pass over the gradients.  ``mask`` zeroes the energy of devices
+    that sat the round out (see ``participation_fold``)."""
     sch = schemes.get(scheme)
     stats = schemes.compute_stats(stacked_grads, sch, batched=True)
-    return (jnp.square(b.astype(jnp.float32))
-            * sch.transmit_sq_norm(stats, grad_bound))
+    return schemes.transmit_energy(sch, stats, b, grad_bound, mask)

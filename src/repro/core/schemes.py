@@ -261,6 +261,23 @@ def fold_side_stacked(side: Dict[str, Any], h: jax.Array,
     return fold_side(side, lambda v: jnp.sum(w * v))
 
 
+def transmit_energy(scheme: Scheme, stats: DeviceStats, b: jax.Array,
+                    grad_bound: Optional[float] = None,
+                    mask: Optional[jax.Array] = None) -> jax.Array:
+    """Per-device transmit energies ``b_k^2 ||x_k||^2`` — the paper's eq. 8
+    power budget — via the scheme's analytic ``transmit_sq_norm`` (no second
+    pass over the gradients).  ``mask`` is an optional 0/1 per-device
+    participation vector: a masked device transmits NOTHING that round, so
+    its energy is exactly zero (not merely a zeroed superposition weight) —
+    the accounting every backend and the FL runtime's ``tx_energy``
+    diagnostic share."""
+    e = (jnp.square(b.astype(jnp.float32))
+         * scheme.transmit_sq_norm(stats, grad_bound))
+    if mask is not None:
+        e = e * mask.astype(jnp.float32)
+    return e
+
+
 def add_channel_noise(tree: PyTree, key: jax.Array, noise_var: float) -> PyTree:
     """Add the ES receiver noise z ~ N(0, sigma^2 I), one subkey per leaf.
 

@@ -1,12 +1,32 @@
 """Federated-learning runtime (paper Sec. II, Steps 1-3, iterated).
 
-The K devices are a ``jax.vmap`` axis; one round (local gradients -> OTA
+The K devices are a ``jax.vmap`` axis; one round (local computation -> OTA
 superposition -> server update -> broadcast) is a single jittable program.
 ``FLConfig.backend`` selects which execution backend the aggregation routes
 through — ``vmap`` (pure XLA), ``kernels`` (fused Pallas path; the default
 for benchmarks), or ``mesh`` (shard_map/psum over local devices; needs >= K
 of them).  The production mesh train-step builder (devices = data shards of
 a TPU mesh) lives in ``repro.launch.train``.
+
+Beyond the paper's eq. 10-11 round, the round math carries three scenario
+axes, all spec fields (no new positional arguments — the declarative
+``repro.fl.ExperimentSpec`` facade is the intended front door):
+
+``server_opt``      the server applies a pluggable ``optim.Optimizer`` to
+                    the OTA-aggregated direction, its state threaded through
+                    the scan carry (donated buffers).  ``'sgd'`` (default,
+                    momentum 0) IS eq. 11, ``w <- w - eta_t y``, exactly.
+``local_steps``     H > 1: each client takes H local SGD steps (FedAvg-style,
+                    arXiv:2310.10089) and transmits the accumulated model
+                    delta ``(w - w_k^H) / (H * local_lr)`` — an average local
+                    gradient — through the unchanged scheme registry (the
+                    ``normalized`` scheme then aggregates the *normalized*
+                    accumulated delta).
+``participation``   per-round Bernoulli or fixed-fraction device masks
+                    (arXiv:2409.07822-style partial client participation),
+                    folded into the superposition weights AND the eq.-8
+                    energy accounting via ``ota.participation_fold`` — a
+                    masked device transmits nothing and spends nothing.
 
 Two round-loop drivers (``run(..., driver=...)``):
 
@@ -39,15 +59,21 @@ from repro.core import amplification as amp
 from repro.core import channel as chan
 from repro.core import ota
 from repro.core import schemes
+from repro.optim import optimizers as optim
 
 PyTree = Any
 GradFn = Callable[[PyTree, Any], PyTree]   # (params, device_batch) -> grads
 
 DRIVERS = ("scan", "python")
+SERVER_OPTS = ("sgd", "adamw")
+PARTICIPATION_MODES = ("bernoulli", "fixed")
 # per-round scalar diagnostics recorded by BOTH drivers (same device-side
 # math, so the drivers' histories agree exactly)
 DIAG_KEYS = ("grad_norm_mean", "grad_norm_min", "grad_norm_max", "eta",
-             "update_norm", "tx_energy")
+             "update_norm", "tx_energy", "num_participants")
+# key-derivation salt separating the participation draw from the channel
+# noise (both are folded from the same per-run key at the same round t)
+_MASK_SALT = 0x5EED
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +98,23 @@ class FLConfig:
     smoothness_L: float = 1.0
     strong_convexity_M: float = 1.0
     expected_loss_drop: float = 1.0
+    # --- scenario axes (defaults reproduce the paper's round exactly) ------
+    # server-side optimizer applied to the OTA-aggregated direction:
+    # 'sgd' (momentum 0 == eq. 11) or 'adamw'
+    server_opt: str = "sgd"
+    server_momentum: float = 0.0
+    server_b1: float = 0.9
+    server_b2: float = 0.95
+    server_eps: float = 1e-8
+    server_weight_decay: float = 0.0
+    # H local SGD steps per client per round; the transmitted quantity for
+    # H > 1 is the accumulated model delta (w - w_k^H) / (H * local_lr)
+    local_steps: int = 1
+    local_lr: float = 0.01
+    # expected participating fraction per round; 'bernoulli' masks each
+    # device independently, 'fixed' schedules exactly round(p*K) devices
+    participation: float = 1.0
+    participation_mode: str = "bernoulli"
 
     def __post_init__(self):
         if self.channel is None:
@@ -80,6 +123,24 @@ class FLConfig:
         if self.backend not in ota.BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"one of {ota.BACKENDS}")
+        schemes.get(self.scheme)   # raises ValueError naming the registry
+        if self.case not in ("I", "II"):
+            raise ValueError(f"unknown case {self.case!r}; one of ('I', 'II')")
+        if self.amplification not in ("optimal", "bmax"):
+            raise ValueError(f"unknown amplification {self.amplification!r}; "
+                             "one of ('optimal', 'bmax')")
+        if self.server_opt not in SERVER_OPTS:
+            raise ValueError(f"unknown server_opt {self.server_opt!r}; "
+                             f"one of {SERVER_OPTS}")
+        if self.local_steps < 1:
+            raise ValueError(f"local_steps must be >= 1, got {self.local_steps}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must lie in (0, 1], got "
+                             f"{self.participation}")
+        if self.participation_mode not in PARTICIPATION_MODES:
+            raise ValueError(
+                f"unknown participation_mode {self.participation_mode!r}; "
+                f"one of {PARTICIPATION_MODES}")
 
 
 @dataclasses.dataclass
@@ -93,6 +154,21 @@ class FLState:
     # the real model dimension N, recorded at setup() time so block-fading
     # re-optimization solves Problem 3 with the true n (not a placeholder)
     model_dim: int = 0
+    # server-side optimizer state (initialized lazily by run() for states
+    # built before the server_opt axis existed); step counts rounds, so
+    # Adam bias correction stays consistent across resumed runs
+    opt_state: Optional[optim.OptState] = None
+
+
+def server_optimizer(cfg: FLConfig) -> optim.Optimizer:
+    """The pluggable server-side optimizer of ``cfg.server_opt``.  The
+    learning rate is always passed per-call (the paper's eta_t schedules live
+    in ``_eta_t``), so the constructor lr is a placeholder."""
+    if cfg.server_opt == "adamw":
+        return optim.adamw(0.0, b1=cfg.server_b1, b2=cfg.server_b2,
+                           eps=cfg.server_eps,
+                           weight_decay=cfg.server_weight_decay)
+    return optim.sgd(0.0, momentum=cfg.server_momentum)
 
 
 def setup(cfg: FLConfig, params0: PyTree, model_dim: int) -> FLState:
@@ -137,24 +213,95 @@ def _eta_t(cfg: FLConfig, eta0, t: jax.Array) -> jax.Array:
     return jnp.asarray(eta0, jnp.float32)
 
 
-def _round_math(cfg: FLConfig, sch, grad_fn: GradFn, params, batch,
-                h, b, a, eta0, t, key):
-    """One FL round (local grads -> OTA aggregate -> update) plus the scalar
-    diagnostics of ``DIAG_KEYS``.  Pure; traced identically by both drivers."""
-    stacked = jax.vmap(lambda db: grad_fn(params, db))(batch)
-    ocfg = ota.OTAConfig(scheme=cfg.scheme, a=a,
-                         noise_var=cfg.channel.noise_var,
-                         grad_bound=cfg.grad_bound, backend=cfg.backend)
-    y = ota.aggregate(ocfg, stacked, h, b, jax.random.fold_in(key, t))
+def _participation_mask(cfg: FLConfig, key, t) -> jax.Array:
+    """[K] 0/1 per-round participation draw.  ``bernoulli`` masks each device
+    independently with probability p; ``fixed`` schedules exactly
+    ``round(p * K)`` devices uniformly at random."""
+    mk = jax.random.fold_in(jax.random.fold_in(key, t), _MASK_SALT)
+    k = cfg.num_devices
+    if cfg.participation_mode == "bernoulli":
+        return jax.random.bernoulli(mk, cfg.participation, (k,)).astype(
+            jnp.float32)
+    m = max(1, int(round(cfg.participation * k)))
+    perm = jax.random.permutation(mk, k)
+    return jnp.zeros((k,), jnp.float32).at[perm[:m]].set(1.0)
+
+
+def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch) -> PyTree:
+    """The quantity each device hands to the scheme's transform: its local
+    gradient for ``local_steps == 1`` (the paper), else the accumulated model
+    delta of H local SGD steps, ``(w - w_k^H) / (H * local_lr)`` — the average
+    local gradient along the trajectory, so its magnitude is comparable to a
+    single gradient and ``grad_bound``-based schemes stay calibrated."""
+    if cfg.local_steps == 1:
+        return jax.vmap(lambda db: grad_fn(params, db))(batch)
+
+    def one_device(db):
+        def step(p, _):
+            g = grad_fn(p, db)
+            return jax.tree_util.tree_map(
+                lambda w, gg: w - jnp.asarray(cfg.local_lr, w.dtype)
+                * gg.astype(w.dtype), p, g), None
+
+        p_h, _ = jax.lax.scan(step, params, None, length=cfg.local_steps)
+        inv = 1.0 / (cfg.local_steps * cfg.local_lr)
+        return jax.tree_util.tree_map(
+            lambda w0, wh: (w0 - wh) * jnp.asarray(inv, w0.dtype), params, p_h)
+
+    return jax.vmap(one_device)(batch)
+
+
+def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
+                batch, h, b, a, eta0, t, key):
+    """One FL round (local computation -> OTA aggregate -> server optimizer
+    step) plus the scalar diagnostics of ``DIAG_KEYS``.  Pure; traced
+    identically by both drivers."""
+    stacked = _local_transmit(cfg, grad_fn, params, batch)
+    if cfg.participation < 1.0:
+        mask = _participation_mask(cfg, key, t)
+        b_eff, a_eff = ota.participation_fold(h, b, a, mask)
+    else:
+        mask = None
+        b_eff, a_eff = b, a
+    if mask is not None and sch.baseline:
+        # baseline schemes bypass the channel (plain mean on every backend),
+        # so the mask cannot reach them through b_eff — average over the
+        # participants only, or the ideal reference would silently use all K
+        # devices while the diagnostics report a partial cohort
+        w = mask / jnp.maximum(jnp.sum(mask), 1.0)
+        y = jax.tree_util.tree_map(
+            lambda l: jnp.tensordot(w, l.astype(jnp.float32), axes=(0, 0)),
+            stacked)
+    else:
+        ocfg = ota.OTAConfig(scheme=cfg.scheme, a=a_eff,
+                             noise_var=cfg.channel.noise_var,
+                             grad_bound=cfg.grad_bound, backend=cfg.backend)
+        y = ota.aggregate(ocfg, stacked, h, b_eff,
+                          jax.random.fold_in(key, t))
+    if mask is not None:
+        # an empty round (possible under bernoulli draws) applies no update:
+        # participation_fold zeroed the gain, but server_post schemes can
+        # re-shift y, so the update direction is gated too
+        any_part = (jnp.sum(mask) > 0).astype(jnp.float32)
+        y = jax.tree_util.tree_map(
+            lambda l: l * any_part.astype(l.dtype), y)
     eta = _eta_t(cfg, eta0, t)
-    new_params = ota.apply_update(params, y, eta)
+    new_params, new_opt_state = opt.update(y, opt_state, params, lr=eta)
+    if mask is not None:
+        # ...and so is the state transition itself: a stateful server
+        # optimizer (momentum / adam moments, even weight decay) must not
+        # move the model or its moments on a round nobody transmitted in
+        keep = jnp.sum(mask) > 0
+        new_params = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(keep, n, o), new_params, params)
+        new_opt_state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(keep, n, o), new_opt_state, opt_state)
     # one stats pass feeds BOTH diagnostics (grad norms and the eq. 8
     # transmit-energy accounting); the aggregate above keeps its own internal
     # stats — folding the two would need aggregate() to return them
     stats = schemes.compute_stats(stacked, sch, batched=True)
     norms = jnp.sqrt(stats.sq_norm)
-    tx = (jnp.square(b.astype(jnp.float32))
-          * sch.transmit_sq_norm(stats, cfg.grad_bound))
+    tx = schemes.transmit_energy(sch, stats, b_eff, cfg.grad_bound, mask)
     diag = {
         "grad_norm_mean": jnp.mean(norms),
         "grad_norm_min": jnp.min(norms),
@@ -163,10 +310,13 @@ def _round_math(cfg: FLConfig, sch, grad_fn: GradFn, params, batch,
         "update_norm": jnp.sqrt(sum(jnp.sum(jnp.square(l))
                                     for l in jax.tree_util.tree_leaves(y))),
         # total transmit energy sum_k b_k^2 ||x_k||^2 (eq. 8 budget) via the
-        # scheme's analytic accounting
+        # scheme's analytic accounting; masked-out devices spend nothing
         "tx_energy": jnp.sum(tx),
+        "num_participants": (jnp.sum(mask) if mask is not None
+                             else jnp.asarray(float(cfg.num_devices),
+                                              jnp.float32)),
     }
-    return new_params, diag
+    return new_params, new_opt_state, diag
 
 
 def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t):
@@ -198,8 +348,8 @@ def _make_fading_refresh(cfg: FLConfig, model_dim: int):
 def make_round_step(cfg: FLConfig, grad_fn: GradFn):
     """Builds the jitted one-round function (the ``python`` driver's unit).
 
-    round_step(params, device_batches, h, b, a, eta0, t, key)
-        -> (new_params, diagnostics)
+    round_step(params, opt_state, device_batches, h, b, a, eta0, t, key)
+        -> (new_params, new_opt_state, diagnostics)
     device_batches: pytree with leading [K, ...] axis (per-device minibatches).
 
     Cached on (cfg, grad_fn) — ``FLConfig`` is a frozen dataclass and
@@ -207,11 +357,12 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
     benchmark sweeps) reuse the compiled executable instead of re-tracing.
     """
     sch = schemes.get(cfg.scheme)
+    opt = server_optimizer(cfg)
 
     @jax.jit
-    def round_step(params, device_batches, h, b, a, eta0, t, key):
-        return _round_math(cfg, sch, grad_fn, params, device_batches,
-                           h, b, a, eta0, t, key)
+    def round_step(params, opt_state, device_batches, h, b, a, eta0, t, key):
+        return _round_math(cfg, sch, opt, grad_fn, params, opt_state,
+                           device_batches, h, b, a, eta0, t, key)
 
     return round_step
 
@@ -219,29 +370,33 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
 @functools.lru_cache(maxsize=32)
 def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
     """Builds the compiled multi-round engine: one ``lax.scan`` over a chunk
-    of rounds.  Param buffers are donated (in-place across chunks) and the
-    per-round diagnostics come back as [chunk] device arrays — one host
-    transfer per chunk, not one per round.  Cached like ``make_round_step``.
+    of rounds.  Param and server-optimizer buffers are donated (in-place
+    across chunks) and the per-round diagnostics come back as [chunk] device
+    arrays — one host transfer per chunk, not one per round.  Cached like
+    ``make_round_step``.
     """
     sch = schemes.get(cfg.scheme)
+    opt = server_optimizer(cfg)
     block_fading = cfg.channel.block_fading
 
-    def run_chunk(params, h, b, a, eta0, key, chan_key, eff_gain, ts, batches):
+    def run_chunk(params, opt_state, h, b, a, eta0, key, chan_key, eff_gain,
+                  ts, batches):
         def body(carry, xs):
-            params, h, b, a = carry
+            params, opt_state, h, b, a = carry
             t, batch = xs
             if block_fading:
                 h, b, a = _fading_refresh(cfg, model_dim, eff_gain,
                                           chan_key, t)
-            params, diag = _round_math(cfg, sch, grad_fn, params, batch,
-                                       h, b, a, eta0, t, key)
-            return (params, h, b, a), diag
+            params, opt_state, diag = _round_math(
+                cfg, sch, opt, grad_fn, params, opt_state, batch,
+                h, b, a, eta0, t, key)
+            return (params, opt_state, h, b, a), diag
 
-        (params, h, b, a), hist = jax.lax.scan(body, (params, h, b, a),
-                                               (ts, batches))
-        return params, h, b, a, hist
+        (params, opt_state, h, b, a), hist = jax.lax.scan(
+            body, (params, opt_state, h, b, a), (ts, batches))
+        return params, opt_state, h, b, a, hist
 
-    return jax.jit(run_chunk, donate_argnums=(0,))
+    return jax.jit(run_chunk, donate_argnums=(0, 1))
 
 
 def _plan_chunks(t0: int, num_rounds: int, eval_every: Optional[int],
@@ -290,9 +445,22 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     ``chunk_batch_provider(ts)``, when given, supplies a whole chunk's
     batches as one [T, K, ...] pytree (a single gather + transfer), replacing
     the scan driver's default of stacking T ``batch_provider`` calls.
+
+    This signature is the stable compatibility surface; new scenario axes
+    (server optimizer, local steps, participation) are ``FLConfig`` fields,
+    and ``repro.fl.Experiment`` is the declarative front door that builds
+    cfg/state/providers from one spec and calls here.
     """
     if driver not in DRIVERS:
         raise ValueError(f"unknown driver {driver!r}; one of {DRIVERS}")
+    opt = server_optimizer(cfg)
+    if state.opt_state is None:
+        # states built before the server-optimizer axis (or restored from
+        # old checkpoints): initialize, with step = rounds already taken so
+        # Adam bias correction matches an unbroken run
+        state.opt_state = opt.init(state.params)._replace(
+            step=jnp.asarray(state.round, jnp.int32))
+    opt_state = state.opt_state
     key = jax.random.PRNGKey(cfg.seed + 1)
     h = jnp.asarray(state.h, jnp.float32)
     b = jnp.asarray(state.b, jnp.float32)
@@ -315,10 +483,27 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     for k in DIAG_KEYS:
         hist[k] = []
 
+    # the metric key set is LOCKED on the first eval: an eval_fn that returns
+    # a key only on some rounds would otherwise silently misalign that
+    # metric's list with hist["eval_round"] (every metric list must stay the
+    # same length as eval_round)
+    eval_keys: Optional[Tuple[str, ...]] = None
+
     def record_eval(params, t):
+        nonlocal eval_keys
         metrics = eval_fn(params)
-        for mk, v in metrics.items():
-            hist.setdefault(mk, []).append(v)
+        if eval_keys is None:
+            eval_keys = tuple(metrics)
+            for mk in eval_keys:
+                hist.setdefault(mk, [])
+        elif set(metrics) != set(eval_keys):
+            raise ValueError(
+                "eval_fn returned metric keys "
+                f"{sorted(metrics)} at round {t}, but the history locked "
+                f"{sorted(eval_keys)} on the first eval — per-round metric "
+                "lists must stay aligned with hist['eval_round']")
+        for mk in eval_keys:
+            hist[mk].append(metrics[mk])
         hist["eval_round"].append(t)
 
     t0 = state.round
@@ -330,8 +515,9 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
             if block_fading:
                 h, b, a = fading_refresh(eff_gain, chan_key, jnp.asarray(t))
             batch = batch_provider(t)
-            params, diag = round_step(params, batch, h, b, a, eta0,
-                                      jnp.asarray(t), key)
+            params, opt_state, diag = round_step(params, opt_state, batch,
+                                                 h, b, a, eta0,
+                                                 jnp.asarray(t), key)
             hist["round"].append(t)
             for k in DIAG_KEYS:
                 hist[k].append(float(diag[k]))
@@ -339,16 +525,18 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
                 record_eval(params, t)
     else:
         run_chunk = _make_run_chunk(cfg, grad_fn, state.model_dim)
-        # params are donated chunk-to-chunk; copy once so the CALLER's pytree
-        # (often reused across runs, e.g. the benchmark experiments) survives
+        # params and optimizer state are donated chunk-to-chunk; copy once so
+        # the CALLER's pytrees (often reused across runs, e.g. the benchmark
+        # experiments) survive
         params = jax.tree_util.tree_map(jnp.copy, state.params)
+        opt_state = jax.tree_util.tree_map(jnp.copy, opt_state)
         for ts in _plan_chunks(t0, num_rounds,
                                eval_every if eval_fn is not None else None,
                                chunk_size):
             batches = (chunk_batch_provider(ts) if chunk_batch_provider
                        else _stack_batches(batch_provider, ts))
-            params, h, b, a, chunk_hist = run_chunk(
-                params, h, b, a, eta0, key, chan_key, eff_gain,
+            params, opt_state, h, b, a, chunk_hist = run_chunk(
+                params, opt_state, h, b, a, eta0, key, chan_key, eff_gain,
                 jnp.asarray(ts, jnp.int32), batches)
             chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
             hist["round"].extend(ts)
@@ -359,6 +547,7 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
                 record_eval(params, t_end)
 
     state.params = params
+    state.opt_state = opt_state
     if block_fading:
         # persist the final channel/gain so a second run(cfg, state, ...)
         # resumes from round t0+num_rounds, not the stale round-0 draw

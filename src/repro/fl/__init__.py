@@ -1,0 +1,19 @@
+"""The declarative experiment-facing API: spec -> compiled run.
+
+    from repro.fl import DataSpec, Experiment, ExperimentSpec, FLConfig
+
+    spec = ExperimentSpec(fl=FLConfig(scheme="normalized", case="II"),
+                          data=DataSpec(dataset="ridge"))
+    Experiment(spec).run(300)
+
+See ``repro.fl.spec`` for the spec fields and ``repro.fl.experiment`` for
+the runnable object; ``repro.fed.runtime`` stays the underlying engine (and
+its ``run()`` the stable compatibility wrapper for hand-wired callers).
+"""
+from repro.fed.runtime import FLConfig
+from repro.fl.experiment import Experiment
+from repro.fl.spec import DataSpec, EvalSpec, ExperimentSpec, ModelSpec
+from repro.fl.tasks import Task, build_task
+
+__all__ = ["DataSpec", "EvalSpec", "Experiment", "ExperimentSpec",
+           "FLConfig", "ModelSpec", "Task", "build_task"]

@@ -1,0 +1,156 @@
+"""``Experiment``: compile an ``ExperimentSpec`` into a runnable object.
+
+    spec = ExperimentSpec(fl=FLConfig(scheme="normalized", case="II"),
+                          data=DataSpec(dataset="ridge"))
+    e = Experiment(spec)
+    e.run(300)                      # setup() is implicit on first run
+    e.history["gap"]                # accumulated across run() calls
+    e.save("ckpt.msgpack")          # params + server-opt state + channel
+    ...
+    e2 = Experiment(spec); e2.load("ckpt.msgpack"); e2.run(300)  # resumes
+
+One object drives both runtime drivers (``scan``/``python``) and all three
+execution backends; with the default axes (``server_opt='sgd'``,
+``local_steps=1``, ``participation=1.0``) the produced history is exactly
+``repro.fed.runtime.run``'s (bitwise on CPU) — the facade adds declaration,
+not new math.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.fed import runtime
+from repro.fl.spec import ExperimentSpec
+from repro.fl.tasks import Task, build_task
+
+PyTree = Any
+
+
+class Experiment:
+    """A declarative OTA-FL experiment: spec -> setup() -> run(num_rounds).
+
+    ``history`` accumulates every per-round diagnostic and eval metric across
+    ``run()`` calls; ``save()``/``load()`` checkpoint the full resumable
+    state (model params, server-optimizer state, channel/round) through
+    ``repro.checkpoint.store``.
+    """
+
+    def __init__(self, spec: ExperimentSpec):
+        self.spec = spec
+        self.cfg = spec.fl_config()
+        self.task: Optional[Task] = None
+        self.state: Optional[runtime.FLState] = None
+        self.history: Dict[str, List] = {}
+
+    # ------------------------------------------------------------------ setup
+
+    def setup(self) -> "Experiment":
+        """Build (or fetch the cached) task, draw the channel, and run the
+        paper's parameter optimization (Problem 3 / Algorithm 1)."""
+        self.task = build_task(self.spec.data, self.spec.model,
+                               self.cfg.num_devices)
+        self.state = runtime.setup(self.cfg, self.task.params0,
+                                   self.task.model_dim)
+        self.history = {}
+        return self
+
+    def reset(self) -> "Experiment":
+        """Re-setup from round 0 (fresh params/optimizer/channel state); the
+        cached task — and therefore the compiled executables keyed on its
+        ``grad_fn`` — is reused."""
+        return self.setup()
+
+    def _ensure_setup(self):
+        if self.state is None:
+            self.setup()
+
+    # -------------------------------------------------------------------- run
+
+    def run(self, num_rounds: int, *, driver: Optional[str] = None,
+            chunk_size: Optional[int] = None,
+            eval_every: Optional[int] = None,
+            evaluate: Optional[bool] = None) -> Dict[str, List]:
+        """Run ``num_rounds`` FL rounds and merge the produced history into
+        ``self.history``.  Keyword overrides exist for benchmarking both
+        drivers from one spec; experiments normally declare everything in
+        the spec.  Returns this call's history (the increment, not the
+        accumulated ``self.history``)."""
+        self._ensure_setup()
+        ev = self.spec.eval
+        enabled = ev.enabled if evaluate is None else evaluate
+        self.state, hist = runtime.run(
+            self.cfg, self.state, self.task.grad_fn,
+            self.task.batch_provider, num_rounds,
+            eval_fn=self.task.eval_fn if enabled else None,
+            eval_every=eval_every if eval_every is not None else ev.every,
+            driver=driver or self.spec.driver,
+            chunk_size=chunk_size or self.spec.chunk_size,
+            chunk_batch_provider=self.task.chunk_batch_provider)
+        for k, v in hist.items():
+            self.history.setdefault(k, []).extend(v)
+        return hist
+
+    # ------------------------------------------------------------- properties
+
+    @property
+    def params(self) -> PyTree:
+        self._ensure_setup()
+        return self.state.params
+
+    @property
+    def round(self) -> int:
+        return 0 if self.state is None else self.state.round
+
+    # ------------------------------------------------------------ checkpoints
+
+    def _ckpt_tree(self) -> PyTree:
+        st = self.state
+        return {
+            "params": st.params,
+            "opt": st.opt_state,
+            "channel": {
+                "h": np.asarray(st.h, np.float64),
+                "b": np.asarray(st.b, np.float64),
+                "a": np.asarray(st.a, np.float64),
+                "eta0": np.asarray(st.eta0, np.float64),
+            },
+        }
+
+    def save(self, path: str) -> str:
+        """Checkpoint params + server-optimizer state + channel/round so a
+        fresh ``Experiment`` on the same spec can ``load`` and resume the
+        exact trajectory."""
+        self._ensure_setup()
+        if self.state.opt_state is None:
+            # run() initializes lazily; a save before any run records step 0
+            self.state.opt_state = runtime.server_optimizer(
+                self.cfg).init(self.state.params)
+        store.save(path, self._ckpt_tree(),
+                   {"round": self.state.round,
+                    "model_dim": self.state.model_dim,
+                    "scheme": self.cfg.scheme,
+                    "server_opt": self.cfg.server_opt})
+        return path
+
+    def load(self, path: str) -> "Experiment":
+        """Restore a checkpoint written by ``save`` (shape/dtype checked
+        against this spec's params and optimizer structure) and position the
+        experiment at the checkpoint's round."""
+        self._ensure_setup()
+        if self.state.opt_state is None:
+            self.state.opt_state = runtime.server_optimizer(
+                self.cfg).init(self.state.params)
+        restored, meta = store.restore(path, self._ckpt_tree())
+        st = self.state
+        st.params = restored["params"]
+        st.opt_state = restored["opt"]
+        st.h = np.asarray(restored["channel"]["h"], np.float64)
+        st.b = np.asarray(restored["channel"]["b"], np.float64)
+        st.a = float(restored["channel"]["a"])
+        st.eta0 = float(restored["channel"]["eta0"])
+        st.round = int(meta["round"])
+        return self

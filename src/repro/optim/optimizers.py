@@ -2,7 +2,12 @@
 paper's learning-rate schedules.
 
 The FL server update (eq. 11) is plain SGD on the OTA-aggregated direction;
-the mesh training path also supports Adam for the beyond-paper runs.
+``repro.fed.runtime`` plugs any ``Optimizer`` in as the *server-side*
+optimizer (``FLConfig.server_opt``), and the mesh training path supports
+Adam for the beyond-paper runs.  ``update`` accepts an optional per-call
+``lr`` override so a caller that already computed the round's eta_t (the FL
+runtime threads the paper's Case-I/II schedules through its scan carry) can
+drive any optimizer with it; the optimizer's own schedule applies otherwise.
 """
 from __future__ import annotations
 
@@ -23,8 +28,11 @@ class OptState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
+    """``update(grads, state, params, lr=None) -> (new_params, new_state)``;
+    ``lr`` overrides the constructor's schedule for that call."""
+
     init: Callable[[PyTree], OptState]
-    update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
+    update: Callable[..., Tuple[PyTree, OptState]]
     name: str = "sgd"
 
 
@@ -40,9 +48,9 @@ def sgd(lr: Callable[[jax.Array], jax.Array] | float,
         mu = _zeros_like(params) if momentum else jnp.zeros(())
         return OptState(jnp.zeros((), jnp.int32), mu, jnp.zeros(()))
 
-    def update(grads, state, params):
+    def update(grads, state, params, lr=None):
         step = state.step + 1
-        eta = lr_fn(step)
+        eta = lr_fn(step) if lr is None else jnp.asarray(lr)
         if momentum:
             mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state.mu, grads)
             upd = mu
@@ -63,10 +71,10 @@ def adamw(lr: Callable[[jax.Array], jax.Array] | float, b1: float = 0.9,
     def init(params):
         return OptState(jnp.zeros((), jnp.int32), _zeros_like(params), _zeros_like(params))
 
-    def update(grads, state, params):
+    def update(grads, state, params, lr=None):
         step = state.step + 1
         t = step.astype(jnp.float32)
-        eta = lr_fn(step)
+        eta = lr_fn(step) if lr is None else jnp.asarray(lr)
         mu = jax.tree_util.tree_map(
             lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
         nu = jax.tree_util.tree_map(

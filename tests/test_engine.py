@@ -134,6 +134,108 @@ class TestDriverParity:
             np.testing.assert_array_equal(np.asarray(l), want)
 
 
+class TestScenarioAxesParity:
+    """The new spec axes — server optimizer, multi-local-step clients,
+    partial participation — run on the scan engine and are held to
+    scan-vs-python parity (params AND every history key), individually and
+    composed."""
+
+    AXES = [
+        {"server_opt": "adamw"},
+        {"server_opt": "sgd", "server_momentum": 0.9},
+        {"local_steps": 3, "local_lr": 0.05},
+        {"participation": 0.5},
+        {"participation": 0.5, "participation_mode": "fixed"},
+        {"server_opt": "adamw", "local_steps": 2, "participation": 0.6},
+    ]
+
+    @pytest.mark.parametrize("axes", AXES,
+                             ids=lambda a: ",".join(f"{k}={v}"
+                                                    for k, v in a.items()))
+    def test_scan_matches_python(self, task, axes):
+        cfg = _cfg(task, **axes)
+        s_py, h_py = _run_driver(task, cfg, "python")
+        s_sc, h_sc = _run_driver(task, cfg, "scan")
+        assert_params_equal(s_sc.params, s_py.params, rtol=2e-6, atol=1e-7)
+        for k in rt.DIAG_KEYS:
+            np.testing.assert_allclose(h_sc[k], h_py[k], rtol=2e-6,
+                                       atol=1e-9, err_msg=k)
+
+    def test_fixed_participation_schedules_exact_fraction(self, task):
+        cfg = _cfg(task, participation=0.5, participation_mode="fixed")
+        _, hist = _run_driver(task, cfg, "scan")
+        assert all(n == K // 2 for n in hist["num_participants"])
+
+    def test_participation_cuts_tx_energy(self, task):
+        """eq.-8 accounting: with the normalized scheme every participant
+        spends b_k^2, so masked rounds spend proportionally less than the
+        full-cohort sum."""
+        cfg = _cfg(task, participation=0.5, participation_mode="fixed")
+        state = setup(cfg, task["params0"], task["dim"])
+        full = float(np.sum(np.square(state.b)))
+        _, hist = _run_driver(task, cfg, "scan")
+        assert all(0 < e < full for e in hist["tx_energy"])
+
+    def test_baseline_scheme_respects_mask(self, task):
+        """The 'mean' baseline bypasses the channel, so the mask cannot
+        reach it through b — the ideal reference must still average over
+        the PARTICIPANTS only (one round, checked against the masked mean
+        computed by hand)."""
+        cfg = _cfg(task, scheme="mean", participation=0.5,
+                   participation_mode="fixed")
+        state = setup(cfg, task["params0"], task["dim"])
+        state, hist = run(cfg, state, task["grad_fn"], task["provider"], 1,
+                          driver="python")
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        mask = np.asarray(rt._participation_mask(cfg, key, jnp.asarray(1)))
+        stacked = jax.vmap(lambda db: task["grad_fn"](task["params0"], db))(
+            task["provider"](1))
+        w = mask / mask.sum()
+        eta = 1.0   # case I, t = 1
+        for p0, p1, g in zip(jax.tree_util.tree_leaves(task["params0"]),
+                             jax.tree_util.tree_leaves(state.params),
+                             jax.tree_util.tree_leaves(stacked)):
+            want = np.asarray(p0) - eta * np.tensordot(
+                w, np.asarray(g, np.float32), axes=(0, 0))
+            np.testing.assert_allclose(np.asarray(p1), want, rtol=1e-5,
+                                       atol=1e-6)
+        assert hist["num_participants"] == [K // 2]
+
+    def test_empty_round_is_a_true_noop(self, task, monkeypatch):
+        """A round in which nobody transmits must leave params AND the
+        server-optimizer state untouched — even for a stateful optimizer
+        (adam moments / weight decay would otherwise still move the model)."""
+        monkeypatch.setattr(rt, "_participation_mask",
+                            lambda cfg, key, t: jnp.zeros((cfg.num_devices,),
+                                                          jnp.float32))
+        cfg = _cfg(task, server_opt="adamw", server_weight_decay=0.1,
+                   participation=0.123)   # unique value -> cold jit cache
+        state = setup(cfg, task["params0"], task["dim"])
+        state, hist = run(cfg, state, task["grad_fn"], task["provider"], 2,
+                          driver="python")
+        assert_params_equal(state.params, task["params0"], rtol=0, atol=0)
+        assert int(state.opt_state.step) == 0
+        for l in jax.tree_util.tree_leaves(state.opt_state.mu):
+            np.testing.assert_array_equal(np.asarray(l), 0.0)
+        assert hist["update_norm"] == [0.0, 0.0]
+        assert hist["num_participants"] == [0.0, 0.0]
+
+    def test_server_momentum_changes_trajectory(self, task):
+        _, h_plain = _run_driver(task, _cfg(task), "scan")
+        _, h_mom = _run_driver(task, _cfg(task, server_momentum=0.9), "scan")
+        assert not np.allclose(h_mom["update_norm"], h_plain["update_norm"])
+
+    def test_default_axes_unchanged_from_legacy(self, task):
+        """server_opt='sgd', local_steps=1, participation=1.0 IS the paper's
+        round: the explicit defaults produce the identical trajectory to a
+        config that never mentions the axes."""
+        _, h_a = _run_driver(task, _cfg(task), "scan")
+        _, h_b = _run_driver(task, _cfg(task, server_opt="sgd",
+                                        local_steps=1, participation=1.0),
+                             "scan")
+        assert h_a == h_b
+
+
 class TestChunkPlan:
     def test_eval_rounds_end_chunks(self):
         chunks = rt._plan_chunks(0, 10, eval_every=4, chunk_size=100)
@@ -198,7 +300,8 @@ class TestJaxSolverVsScipy:
 @pytest.mark.slow
 class TestMeshDriverParity:
     """Mesh backend needs >= K local devices -> subprocess with forced host
-    devices; the scan engine must wrap shard_map rounds unchanged."""
+    devices; the scan engine must wrap shard_map rounds unchanged, and the
+    declarative facade must reproduce the hand-wired run on mesh too."""
 
     def test_scan_vs_python(self):
         code = """
@@ -206,43 +309,40 @@ class TestMeshDriverParity:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.channel import ChannelConfig
-        from repro.data.datasets import device_batches, split_dirichlet, \\
-            synthetic_mnist
         from repro.fed.runtime import FLConfig, run, setup
-        from repro.models.simple import init_mlp_classifier, \\
-            mlp_classifier_loss
+        from repro.fl import (DataSpec, Experiment, EvalSpec, ExperimentSpec,
+                              ModelSpec, build_task)
 
         K = 4
-        key = jax.random.PRNGKey(0)
-        x, y = synthetic_mnist(key, 300)
-        split = split_dirichlet(jax.random.fold_in(key, 1), np.asarray(y),
-                                K, 1.0)
-        params0 = init_mlp_classifier(jax.random.fold_in(key, 2), hidden=8)
-        dim = sum(int(np.prod(np.asarray(l).shape))
-                  for l in jax.tree_util.tree_leaves(params0))
-        xnp, ynp = np.asarray(x), np.asarray(y)
-
-        def grad_fn(params, batch):
-            xb, yb = batch
-            return jax.grad(lambda p: mlp_classifier_loss(p, xb, yb))(params)
-
-        def provider(t):
-            idx = device_batches(jax.random.PRNGKey(3), split, 8, t)
-            return (jnp.asarray(xnp[idx]), jnp.asarray(ynp[idx]))
-
         chan = ChannelConfig(num_devices=K, channel_mean=1e-3,
                              block_fading=True)
         cfg = FLConfig(num_devices=K, scheme="normalized", channel=chan,
                        grad_bound=10.0, smoothness_L=5.0,
                        expected_loss_drop=2.0, seed=0, backend="mesh")
+        data = DataSpec(num_train=300, num_test=0, batch_size=8, seed=0)
+        model = ModelSpec(hidden=8)
+
         out = {}
         for driver in ("python", "scan"):
-            state = setup(cfg, params0, dim)
-            state, hist = run(cfg, state, grad_fn, provider, 6,
-                              driver=driver, chunk_size=3)
-            out[driver] = state.params
-        for g, w in zip(jax.tree_util.tree_leaves(out["scan"]),
-                        jax.tree_util.tree_leaves(out["python"])):
+            spec = ExperimentSpec(fl=cfg, data=data, model=model,
+                                  eval=EvalSpec(enabled=False),
+                                  driver=driver, chunk_size=3)
+            e = Experiment(spec)
+            e.run(6)
+            out[driver] = (e.state.params, e.history)
+
+        # the facade wires the identical task the hand-wired path would
+        task = build_task(data, model, K)
+        state = setup(cfg, task.params0, task.model_dim)
+        state, hist = run(cfg, state, task.grad_fn, task.batch_provider, 6,
+                          driver="python", chunk_size=3)
+        for g, w in zip(jax.tree_util.tree_leaves(out["python"][0]),
+                        jax.tree_util.tree_leaves(state.params)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-6, atol=1e-7)
+
+        for g, w in zip(jax.tree_util.tree_leaves(out["scan"][0]),
+                        jax.tree_util.tree_leaves(out["python"][0])):
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                        rtol=2e-6, atol=1e-7)
         print("MESH_ENGINE_PARITY_OK")

@@ -85,6 +85,80 @@ class TestCaseIEndToEnd:
             assert hist["acc"][-1] > 0.3, scheme
 
 
+class TestConfigValidation:
+    """Satellite: FLConfig.__post_init__ used to validate only `backend` —
+    a typo'd scheme surfaced as a deep KeyError mid-trace.  Every enum-ish
+    field now fails at construction with a message naming the options."""
+
+    def test_unknown_scheme_names_registry(self):
+        with pytest.raises(ValueError, match="unknown scheme 'normalised'"):
+            _cfg("normalised")
+
+    def test_unknown_backend(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            _cfg(backend="tpu")
+
+    def test_unknown_case(self):
+        with pytest.raises(ValueError, match=r"unknown case 'III'.*'I', 'II'"):
+            _cfg(case="III")
+
+    def test_unknown_amplification(self):
+        with pytest.raises(ValueError,
+                           match="unknown amplification 'bmin'"):
+            _cfg(amplification="bmin")
+
+    def test_unknown_server_opt(self):
+        with pytest.raises(ValueError, match="unknown server_opt 'lion'"):
+            _cfg(server_opt="lion")
+
+    def test_bad_local_steps(self):
+        with pytest.raises(ValueError, match="local_steps"):
+            _cfg(local_steps=0)
+
+    def test_bad_participation(self):
+        for p in (0.0, -0.5, 1.5):
+            with pytest.raises(ValueError, match="participation"):
+                _cfg(participation=p)
+        with pytest.raises(ValueError, match="participation_mode"):
+            _cfg(participation_mode="roundrobin")
+
+    def test_valid_config_still_builds(self):
+        cfg = _cfg("clipped", server_opt="adamw", local_steps=4,
+                   participation=0.25, participation_mode="fixed")
+        assert cfg.scheme == "clipped"
+
+
+class TestEvalHistoryAlignment:
+    """Satellite: record_eval's setdefault-append silently misaligned a
+    metric list with hist['eval_round'] when eval_fn returned a key only on
+    some rounds.  The key set locks on the first eval; divergence raises."""
+
+    @pytest.mark.parametrize("driver", ["python", "scan"])
+    def test_ragged_eval_keys_raise(self, mnist_task, driver):
+        calls = {"n": 0}
+
+        def ragged_ev(params):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                return {"acc": 0.5}
+            return {"acc": 0.5, "extra": 1.0}    # new key mid-run
+
+        cfg = _cfg("normalized")
+        state = setup(cfg, mnist_task["params0"], mnist_task["dim"])
+        with pytest.raises(ValueError, match="locked"):
+            run(cfg, state, mnist_task["grad_fn"], mnist_task["provider"],
+                8, ragged_ev, eval_every=4, driver=driver)
+
+    @pytest.mark.parametrize("driver", ["python", "scan"])
+    def test_aligned_eval_keys_stay_aligned(self, mnist_task, driver):
+        cfg = _cfg("normalized")
+        state = setup(cfg, mnist_task["params0"], mnist_task["dim"])
+        _, hist = run(cfg, state, mnist_task["grad_fn"],
+                      mnist_task["provider"], 8, mnist_task["ev"],
+                      eval_every=4, driver=driver)
+        assert len(hist["acc"]) == len(hist["eval_round"]) == 3  # t=1,4,8
+
+
 class TestHistoryAccounting:
     """Satellite: update_norm and tx_energy were computed every round but
     never recorded — every per-round history key must grow by num_rounds,

@@ -1,0 +1,144 @@
+"""Optimizer-substrate tests (satellite: the module is the FL server's
+pluggable optimizer now — load-bearing): adamw against a hand-rolled
+reference with explicit bias correction, schedule values, sgd+momentum
+trajectories, and the per-call ``lr`` override the FL runtime drives the
+paper's eta_t schedules through."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizers import (adamw, constant_schedule, cosine_schedule,
+                                    inverse_power_schedule, sgd)
+
+
+def _leaves(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+class TestAdamWReference:
+    """adamw vs a float64 numpy reference implementing the textbook update
+    m_t = b1 m + (1-b1) g;  v_t = b2 v + (1-b2) g^2;
+    w -= lr * ( (m_t / (1-b1^t)) / (sqrt(v_t / (1-b2^t)) + eps) + wd * w )."""
+
+    B1, B2, EPS, WD, LR = 0.9, 0.95, 1e-8, 0.01, 3e-3
+
+    def _reference(self, w0, grads_seq):
+        w = np.asarray(w0, np.float64).copy()
+        m = np.zeros_like(w)
+        v = np.zeros_like(w)
+        for t, g in enumerate(grads_seq, start=1):
+            g = np.asarray(g, np.float64)
+            m = self.B1 * m + (1 - self.B1) * g
+            v = self.B2 * v + (1 - self.B2) * g * g
+            mhat = m / (1 - self.B1 ** t)
+            vhat = v / (1 - self.B2 ** t)
+            w = w - self.LR * (mhat / (np.sqrt(vhat) + self.EPS)
+                               + self.WD * w)
+        return w
+
+    def test_matches_handrolled_reference(self):
+        rng = np.random.default_rng(0)
+        w0 = rng.normal(size=(7,)).astype(np.float32)
+        grads_seq = [rng.normal(size=(7,)).astype(np.float32)
+                     for _ in range(12)]
+        opt = adamw(self.LR, b1=self.B1, b2=self.B2, eps=self.EPS,
+                    weight_decay=self.WD)
+        p = {"w": jnp.asarray(w0)}
+        s = opt.init(p)
+        for g in grads_seq:
+            p, s = opt.update({"w": jnp.asarray(g)}, s, p)
+        np.testing.assert_allclose(np.asarray(p["w"]),
+                                   self._reference(w0, grads_seq),
+                                   rtol=2e-5, atol=1e-7)
+        assert int(s.step) == len(grads_seq)
+
+    def test_bias_correction_first_step(self):
+        """At t=1 the corrected moments equal g and g^2 exactly, so the step
+        is -lr * g / (|g| + eps) regardless of b1/b2 (the whole point of
+        bias correction; an uncorrected implementation would take a step
+        (1-b1)/sqrt(1-b2) ~ 0.45x too small here)."""
+        opt = adamw(self.LR, b1=self.B1, b2=self.B2, eps=self.EPS)
+        g = np.asarray([0.5, -2.0, 1e-3], np.float32)
+        p = {"w": jnp.zeros((3,))}
+        p2, _ = opt.update({"w": jnp.asarray(g)}, opt.init(p), p)
+        want = -self.LR * g / (np.abs(g) + self.EPS)
+        np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+
+    def test_lr_override_wins(self):
+        opt = adamw(123.0)   # constructor lr is ignored when lr= is passed
+        p = {"w": jnp.zeros((2,))}
+        g = {"w": jnp.ones((2,))}
+        p2, _ = opt.update(g, opt.init(p), p, lr=self.LR)
+        np.testing.assert_allclose(np.asarray(p2["w"]), -self.LR, rtol=1e-5)
+
+
+class TestSGD:
+    def test_momentum_trajectory(self):
+        """Heavy-ball: m_t = mu m_{t-1} + g, w -= lr m_t, checked over 4
+        steps against the closed-form partial sums."""
+        mu, lr = 0.8, 0.1
+        opt = sgd(lr, momentum=mu)
+        p = {"w": jnp.zeros(())}
+        s = opt.init(p)
+        m_ref, w_ref = 0.0, 0.0
+        for _ in range(4):
+            p, s = opt.update({"w": jnp.ones(())}, s, p)
+            m_ref = mu * m_ref + 1.0
+            w_ref -= lr * m_ref
+            np.testing.assert_allclose(float(p["w"]), w_ref, rtol=1e-6)
+
+    def test_lr_override_matches_legacy_eq11(self):
+        """sgd(momentum=0) with an explicit per-call lr IS the paper's
+        eq. 11, w <- w - eta y — bitwise, which the FL runtime's legacy
+        parity relies on."""
+        from repro.core.ota import apply_update
+        rng = np.random.default_rng(1)
+        p = {"w": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
+        y = {"w": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
+        eta = jnp.asarray(0.037, jnp.float32)
+        opt = sgd(999.0)
+        got, _ = opt.update(y, opt.init(p), p, lr=eta)
+        want = apply_update(p, y, eta)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(want["w"]))
+
+
+class TestSchedules:
+    def test_inverse_power_values(self):
+        sched = inverse_power_schedule(0.75, eta0=2.0)
+        for t in (1, 3, 17, 400):
+            np.testing.assert_allclose(float(sched(jnp.asarray(t))),
+                                       2.0 * t ** -0.75, rtol=1e-6)
+        # step 0 clamps to t=1 (schedules are 1-indexed like the paper)
+        np.testing.assert_allclose(float(sched(jnp.asarray(0))), 2.0,
+                                   rtol=1e-6)
+
+    def test_inverse_power_rejects_bad_p(self):
+        for p in (0.5, 1.0, 0.2):
+            with pytest.raises(ValueError):
+                inverse_power_schedule(p)
+
+    def test_constant(self):
+        sched = constant_schedule(0.01)
+        for t in (0, 1, 1000):
+            assert float(sched(jnp.asarray(t))) == pytest.approx(0.01)
+
+    def test_cosine_values(self):
+        peak, warmup, total, floor = 1.0, 10, 110, 0.1
+        sched = cosine_schedule(peak, warmup, total, floor)
+        # linear warmup
+        np.testing.assert_allclose(float(sched(jnp.asarray(5))), 0.5,
+                                   rtol=1e-6)
+        # midpoint of the cosine leg: (peak + floor) / 2
+        np.testing.assert_allclose(float(sched(jnp.asarray(60))),
+                                   (peak + floor) / 2, rtol=1e-5)
+        # quarter point: floor + (peak-floor) * (1 + cos(pi/4)) / 2
+        want = floor + (peak - floor) * (1 + math.cos(math.pi / 4)) / 2
+        np.testing.assert_allclose(float(sched(jnp.asarray(35))), want,
+                                   rtol=1e-5)
+        # past total: clamped at the floor
+        np.testing.assert_allclose(float(sched(jnp.asarray(500))), floor,
+                                   rtol=1e-5)

@@ -134,6 +134,38 @@ class TestUpdateRule:
         np.testing.assert_allclose(np.asarray(new["b"]), -0.5)
 
 
+class TestParticipationFold:
+    def test_masked_devices_get_zero_weight_and_energy(self):
+        from repro.core import participation_fold, transmit_energy
+        h = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+        b = jnp.asarray([2.0, 2.0, 2.0, 2.0])
+        mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+        b_eff, a_eff = participation_fold(h, b, 1.0, mask)
+        np.testing.assert_allclose(np.asarray(b_eff), [2.0, 0.0, 2.0, 0.0])
+        g = stacked_grads(KEY, k=4)
+        e = transmit_energy("normalized", g, b_eff, mask=mask)
+        np.testing.assert_allclose(np.asarray(e), [4.0, 0.0, 4.0, 0.0],
+                                   rtol=1e-5)
+
+    def test_effective_gain_is_preserved(self):
+        """The server rescales a so a*sum(h b) over participants equals the
+        full-cohort design value (what the convergence bounds see)."""
+        from repro.core import participation_fold
+        h = jnp.asarray([1.0, 2.0, 3.0])
+        b = jnp.asarray([0.5, 1.0, 1.5])
+        mask = jnp.asarray([0.0, 1.0, 1.0])
+        b_eff, a_eff = participation_fold(h, b, 0.25, mask)
+        np.testing.assert_allclose(float(a_eff * jnp.sum(h * b_eff)),
+                                   0.25 * float(jnp.sum(h * b)), rtol=1e-6)
+
+    def test_empty_round_zeroes_the_gain(self):
+        from repro.core import participation_fold
+        h = jnp.asarray([1.0, 2.0])
+        b = jnp.asarray([1.0, 1.0])
+        _, a_eff = participation_fold(h, b, 5.0, jnp.zeros(2))
+        assert float(a_eff) == 0.0
+
+
 @settings(max_examples=25, deadline=None)
 @given(k=st.integers(2, 8), scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
 def test_property_normalization_scale_invariant(k, scale, seed):
