@@ -18,16 +18,25 @@ build ``FLConfig``s/``ExperimentSpec``s and run them.
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Mapping, Optional
 
 from repro.core.channel import ChannelConfig
 from repro.fed.runtime import FLConfig
 from repro.fl import (DataSpec, EvalSpec, Experiment, ExperimentSpec,
-                      ModelSpec, build_task)
+                      ModelSpec, SweepSpec, build_task, run_sweep)
 
 K = 20
 CHANNEL_MEAN = 1e-3
 SEED = 0
+
+# Seed replicates for the figure error bands: every figure benchmark runs
+# its grid x SEED_REPLICATES channel/noise seeds as ONE batched sweep and
+# dumps mean +- std across the seed axis.
+SEED_REPLICATES = 3
+
+
+def seed_axis(n: int = SEED_REPLICATES):
+    return tuple(SEED + i for i in range(n))
 
 # Execution backend for the benchmark FLConfigs: the fused Pallas kernel
 # path by default (the registry refactor made every scheme run on it; on
@@ -108,6 +117,17 @@ class _SpecExperiment:
     def experiment(self, cfg: FLConfig, eval_every: int = 10) -> Experiment:
         return Experiment(self.spec(cfg, eval_every))
 
+    def sweep(self, axes: Mapping, cfg: Optional[FLConfig] = None,
+              eval_every: int = 10, evaluate: bool = True,
+              seeds: Optional[int] = SEED_REPLICATES) -> SweepSpec:
+        """A ``SweepSpec`` over this experiment's task: the given axes plus
+        (by default) a batchable seed-replicate axis for error bands."""
+        axes = dict(axes)
+        if seeds and "seed" not in axes:
+            axes["seed"] = seed_axis(seeds)
+        return SweepSpec(self.spec(cfg or self.config(), eval_every,
+                                   evaluate), axes)
+
     def run(self, cfg: FLConfig, rounds: int, eval_every: int = 10):
         e = self.experiment(cfg, eval_every)
         hist = e.run(rounds)
@@ -167,3 +187,12 @@ def timed_rounds(exp, cfg, rounds: int, eval_every: int = 50):
     state, hist = exp.run(cfg, rounds, eval_every)
     dt = time.perf_counter() - t0
     return state, hist, dt / rounds * 1e6
+
+
+def timed_sweep(sweep: SweepSpec, rounds: int, **kw):
+    """Run a whole sweep and report wall time per (grid point x round) —
+    the aggregate us_per_call the figure CSV rows carry."""
+    t0 = time.perf_counter()
+    res = run_sweep(sweep, rounds, **kw)
+    dt = time.perf_counter() - t0
+    return res, dt / (sweep.size * rounds) * 1e6

@@ -1,6 +1,10 @@
-"""One benchmark per paper figure (Sec. V).  Each returns CSV rows
-``name,us_per_call,derived`` where ``derived`` is the figure's headline
-quantity; the full trajectories go to results/bench_<name>.json.
+"""One benchmark per paper figure (Sec. V), on the vectorized sweep engine:
+each figure is ONE batched sweep (its comparison axis x seed replicates),
+so every curve in the dumped JSON carries a mean and a std band across
+channel/noise seeds.  Rows are CSV ``name,us_per_call,derived`` where
+``us_per_call`` is aggregate wall time per (grid point x round) and
+``derived`` the figure's headline quantity; full trajectories go to
+results/bench_<name>.json.
 """
 from __future__ import annotations
 
@@ -8,9 +12,8 @@ import json
 import os
 from typing import List, Tuple
 
-import numpy as np
-
-from benchmarks.common import CaseIExperiment, CaseIIExperiment, timed_rounds
+from benchmarks.common import (CaseIExperiment, CaseIIExperiment,
+                               SEED_REPLICATES, timed_sweep)
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
 
@@ -21,93 +24,120 @@ def _dump(name: str, payload) -> None:
         json.dump(payload, f, indent=2)
 
 
-def fig1a_opt_benefit(rounds: int = 300) -> List[Tuple[str, float, str]]:
-    """Fig. 1(a): Case I test accuracy — optimized (a, b) vs b_k = b_k^max."""
-    exp = CaseIExperiment()
+def _banded_rows(fig: str, res, us: float, axis: str, metric: str,
+                 seeds: int, row_metric: str = None, value_prefix: str = "",
+                 ) -> Tuple[List[Tuple[str, float, str]], dict]:
+    """CSV rows + JSON payload for a (axis x seed) sweep: one curve per axis
+    value, mean +- std across the seed replicates.  ``row_metric`` picks the
+    headline quantity of the CSV row when it differs from the dumped curve
+    metric (the ridge figures plot ``loss`` but report ``gap``)."""
+    mean, std = res.band(metric, over="seed")
+    row_metric = row_metric or metric
+    rmean, rstd = ((mean, std) if row_metric == metric
+                   else res.band(row_metric, over="seed"))
     rows, curves = [], {}
-    for amp in ("optimal", "bmax"):
-        cfg = exp.config(scheme="normalized", amplification=amp)
-        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=max(rounds // 12, 5))
-        acc = hist["test_acc"][-1]
-        early = hist["test_acc"][1] if len(hist["test_acc"]) > 1 else acc
-        curves[amp] = {"round": hist["eval_round"], "acc": hist["test_acc"]}
-        rows.append((f"fig1a/{amp}", us,
-                     f"early_acc={early:.4f};final_acc={acc:.4f}"))
+    for i, value in enumerate(res.sweep.values(axis)):
+        curves[str(value)] = {
+            "round": res.eval_rounds,
+            metric: mean[i].tolist(),            # mean across seeds
+            f"{metric}_std": std[i].tolist(),    # the error band
+            "seeds": seeds,
+        }
+        rows.append((f"{fig}/{value_prefix}{value}", us,
+                     f"final_{row_metric}={rmean[i][-1]:.5f}"
+                     f"+-{rstd[i][-1]:.5f}"))
+    return rows, curves
+
+
+def fig1a_opt_benefit(rounds: int = 300,
+                      seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
+    """Fig. 1(a): Case I test accuracy — optimized (a, b) vs b_k = b_k^max.
+    One sweep: amplification (structural) x seed (batchable)."""
+    exp = CaseIExperiment()
+    sweep = exp.sweep({"amplification": ("optimal", "bmax")},
+                      eval_every=max(rounds // 12, 5), seeds=seeds)
+    res, us = timed_sweep(sweep, rounds)
+    rows, curves = _banded_rows("fig1a", res, us, "amplification",
+                                "test_acc", seeds)
     _dump("fig1a", curves)
     return rows
 
 
-def fig1b_benchmarks(rounds: int = 300) -> List[Tuple[str, float, str]]:
+def fig1b_benchmarks(rounds: int = 300,
+                     seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
     """Fig. 1(b): Case I — proposed vs Benchmark I [7] / II [13] (+ one-bit
-    [12] as the extra ablation the intro argues against)."""
+    [12] as the extra ablation the intro argues against).  One sweep:
+    scheme (structural, 4 sub-batches) x seed (batchable)."""
     exp = CaseIExperiment()
-    rows, curves = [], {}
-    for scheme in ("normalized", "benchmark1", "benchmark2", "onebit"):
-        cfg = exp.config(scheme=scheme)
-        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=25)
-        acc = hist["test_acc"][-1]
-        curves[scheme] = {"round": hist["eval_round"], "acc": hist["test_acc"]}
-        rows.append((f"fig1b/{scheme}", us, f"final_acc={acc:.4f}"))
+    sweep = exp.sweep(
+        {"scheme": ("normalized", "benchmark1", "benchmark2", "onebit")},
+        eval_every=25, seeds=seeds)
+    res, us = timed_sweep(sweep, rounds)
+    rows, curves = _banded_rows("fig1b", res, us, "scheme", "test_acc", seeds)
     _dump("fig1b", curves)
     return rows
 
 
-def fig2a_opt_benefit_ridge(rounds: int = 400) -> List[Tuple[str, float, str]]:
+def fig2a_opt_benefit_ridge(rounds: int = 400,
+                            seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
     """Fig. 2(a): Case II loss — optimized (a, b) vs b_k = b_k^max."""
     exp = CaseIIExperiment()
-    rows, curves = [], {}
-    for amp in ("optimal", "bmax"):
-        cfg = exp.config(amplification=amp)
-        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=40)
-        curves[amp] = {"round": hist["eval_round"], "loss": hist["loss"]}
-        rows.append((f"fig2a/{amp}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    sweep = exp.sweep({"amplification": ("optimal", "bmax")}, eval_every=40,
+                      seeds=seeds)
+    res, us = timed_sweep(sweep, rounds)
+    rows, curves = _banded_rows("fig2a", res, us, "amplification", "loss",
+                                seeds, row_metric="gap")
     _dump("fig2a", curves)
     return rows
 
 
-def fig2b_benchmarks_ridge(rounds: int = 400) -> List[Tuple[str, float, str]]:
+def fig2b_benchmarks_ridge(rounds: int = 400,
+                           seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
     """Fig. 2(b): Case II — proposed vs Benchmark I / II."""
     exp = CaseIIExperiment()
-    rows, curves = [], {}
-    for scheme in ("normalized", "benchmark1", "benchmark2"):
-        cfg = exp.config(scheme=scheme)
-        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=40)
-        curves[scheme] = {"round": hist["eval_round"], "loss": hist["loss"]}
-        rows.append((f"fig2b/{scheme}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    sweep = exp.sweep({"scheme": ("normalized", "benchmark1", "benchmark2")},
+                      eval_every=40, seeds=seeds)
+    res, us = timed_sweep(sweep, rounds)
+    rows, curves = _banded_rows("fig2b", res, us, "scheme", "loss", seeds,
+                                row_metric="gap")
     _dump("fig2b", curves)
     return rows
 
 
-def fig3a_case1_vs_case2(rounds: int = 400) -> List[Tuple[str, float, str]]:
+def fig3a_case1_vs_case2(rounds: int = 400,
+                         seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
     """Fig. 3(a): on the strongly-convex task, Case-II parameters converge
-    faster than Case-I parameters (the benefit of exploiting convexity)."""
+    faster than Case-I parameters (the benefit of exploiting convexity).
+    The case axis is a composite (several fields per value) and structural;
+    seeds ride along batched within each sub-batch."""
     exp = CaseIIExperiment()
-    rows, curves = [], {}
-    for case in ("I", "II"):
-        kw = dict(case=case)
-        if case == "I":
-            kw.update(p=0.75, expected_loss_drop=20.0, s_target=None)
-        else:
-            kw.update(s_target=0.98)   # paper tunes Case II for speed (Fig. 3a)
-        cfg = exp.config(**kw)
-        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=40)
-        curves[case] = {"round": hist["eval_round"], "loss": hist["loss"]}
-        # rounds to reach 1.1x the better final gap
-        rows.append((f"fig3a/case{case}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    sweep = exp.sweep(
+        {"case_setup": (
+            ("caseI", {"case": "I", "p": 0.75, "expected_loss_drop": 20.0,
+                       "s_target": None}),
+            # paper tunes Case II for speed in Fig. 3(a)
+            ("caseII", {"case": "II", "s_target": 0.98}),
+        )},
+        eval_every=40, seeds=seeds)
+    res, us = timed_sweep(sweep, rounds)
+    rows, curves = _banded_rows("fig3a", res, us, "case_setup", "loss",
+                                seeds)
     _dump("fig3a", curves)
     return rows
 
 
-def fig3b_tradeoff(rounds: int = 600) -> List[Tuple[str, float, str]]:
+def fig3b_tradeoff(rounds: int = 600,
+                   seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
     """Fig. 3(b): the q_max <-> epsilon tradeoff — larger s gives a lower
-    floor but slower approach."""
+    floor but slower approach.  ``s_target`` only moves the setup-time
+    receiver gain, so the WHOLE figure (3 targets x seeds) is one batched
+    program."""
     exp = CaseIIExperiment()
-    rows, curves = [], {}
-    for s in (0.9779, 0.9890, 0.9945):
-        cfg = exp.config(s_target=s)
-        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=60)
-        curves[str(s)] = {"round": hist["eval_round"], "loss": hist["loss"]}
-        rows.append((f"fig3b/s={s}", us, f"final_gap={hist['gap'][-1]:.5f}"))
+    sweep = exp.sweep({"s_target": (0.9779, 0.9890, 0.9945)}, eval_every=60,
+                      seeds=seeds)
+    res, us = timed_sweep(sweep, rounds)
+    rows, curves = _banded_rows("fig3b", res, us, "s_target", "loss", seeds,
+                                row_metric="gap", value_prefix="s=")
     _dump("fig3b", curves)
     return rows
 
@@ -163,6 +193,72 @@ def engine_rounds_per_sec(rounds: int = 64,
     return rows
 
 
+def sweep_rounds_per_sec(rounds: int = 256, grid: int = 8,
+                         repeats: int = 2) -> List[Tuple[str, float, str]]:
+    """Vectorized-sweep headline: aggregate rounds/sec of ONE batched
+    program over a (seed x noise) grid vs the same grid as N sequential
+    ``runtime.run`` dispatches (both on the compiled scan engine, both warm).
+    The grid point is the Case-II ridge task — the overhead-bound regime
+    sweeps live in — and the batched program runs the whole grid per
+    dispatch, so the expected win is ~grid-size.  Also asserts the
+    compiled-executable caches report ZERO re-traces across the timed
+    repeats (the ``cache_info`` satellite)."""
+    import dataclasses
+    import time
+
+    from repro.fed import runtime
+    from repro.fl import SweepSpec
+    from benchmarks.common import CaseIIExperiment, run_sweep, seed_axis
+
+    exp = CaseIIExperiment()
+    seeds = max(grid // 2, 1)
+    base = dataclasses.replace(exp.spec(exp.config(), evaluate=False),
+                               chunk_size=rounds)        # one scan per run
+    nv = base.fl.channel.noise_var
+    sweep = SweepSpec(base, {"noise_var": (nv, 2.0 * nv),
+                             "seed": seed_axis(seeds)})
+    g = sweep.size
+
+    times = {}
+    for mode, vectorized in (("batched", True), ("sequential", False)):
+        run_sweep(sweep, rounds, vectorized=vectorized)      # warm-up
+        traces0 = dict(runtime.TRACE_COUNTS)
+        dt = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            run_sweep(sweep, rounds, vectorized=vectorized)
+            dt = min(dt, time.perf_counter() - t0)
+        retraces = sum(runtime.TRACE_COUNTS.values()) - sum(traces0.values())
+        if mode == "batched" and retraces:
+            # the README/ROADMAP contract: a warm batched grid re-traces
+            # NOTHING (cache eviction or an unhashable config would show up
+            # here long before it shows up as a perf regression)
+            raise AssertionError(
+                f"warm batched sweep re-traced {retraces} time(s); "
+                f"cache_info={runtime.cache_info()}")
+        times[mode] = dt
+        times[f"{mode}_retraces"] = retraces
+    rows = []
+    for mode in ("batched", "sequential"):
+        dt, retraces = times[mode], times[f"{mode}_retraces"]
+        rows.append((f"sweep/{mode}", dt / (g * rounds) * 1e6,
+                     f"agg_rounds_per_sec={g * rounds / dt:.1f};grid={g};"
+                     f"retraces={retraces}"))
+    speedup = times["sequential"] / times["batched"]
+    rows.append((f"sweep/speedup", 0.0,
+                 f"batched_over_sequential={speedup:.2f}x;grid={g}"))
+    _dump("sweep", {
+        "grid": g, "rounds": rounds,
+        "agg_rounds_per_sec": {m: g * rounds / times[m]
+                               for m in ("batched", "sequential")},
+        "speedup": speedup,
+        "retraces": {m: times[f"{m}_retraces"]
+                     for m in ("batched", "sequential")},
+        "cache_info": runtime.cache_info(),
+    })
+    return rows
+
+
 def scenario_axes(rounds: int = 120) -> List[Tuple[str, float, str]]:
     """The new spec axes on the Case-I task, each a one-field change to the
     baseline ``ExperimentSpec`` (the point of the declarative redesign):
@@ -207,20 +303,28 @@ def scenario_axes(rounds: int = 120) -> List[Tuple[str, float, str]]:
     return rows
 
 
-def grad_norm_fluctuation(rounds: int = 200) -> List[Tuple[str, float, str]]:
+def grad_norm_fluctuation(rounds: int = 200,
+                          seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
     """Sec. I motivating claim: the local gradient norm fluctuates over
     iterations (so provisioning b_k for the max norm G wastes headroom).
-    Reported on both experiment tasks; ridge (whose norms collapse as the
-    iterate approaches w*) shows the effect most starkly."""
+    Reported on both experiment tasks (one seed-batched sweep each); ridge
+    (whose norms collapse as the iterate approaches w*) shows the effect
+    most starkly."""
     rows, dump = [], {}
     for name, exp in (("mnist", CaseIExperiment()), ("ridge", CaseIIExperiment())):
-        cfg = exp.config(scheme="normalized")
-        _, hist, us = timed_rounds(exp, cfg, rounds, eval_every=rounds)
-        norms = np.asarray(hist["grad_norm_mean"])
-        ratio = float(norms.max() / max(norms.min(), 1e-9))
-        dump[name] = {"round": hist["round"], "mean": hist["grad_norm_mean"],
-                      "min": hist["grad_norm_min"], "max": hist["grad_norm_max"]}
+        sweep = exp.sweep({}, eval_every=rounds, evaluate=False, seeds=seeds)
+        res, us = timed_sweep(sweep, rounds)
+        mean = res.history["grad_norm_mean"].mean(axis=0)
+        ratio = float(mean.max() / max(mean.min(), 1e-9))
+        dump[name] = {
+            "round": res.rounds,
+            "mean": mean.tolist(),
+            "mean_std": res.history["grad_norm_mean"].std(axis=0).tolist(),
+            "min": res.history["grad_norm_min"].mean(axis=0).tolist(),
+            "max": res.history["grad_norm_max"].mean(axis=0).tolist(),
+            "seeds": seeds,
+        }
         rows.append((f"grad_norm_fluctuation/{name}", us,
-                     f"max_over_min={ratio:.2f};final_mean={norms[-1]:.4f}"))
+                     f"max_over_min={ratio:.2f};final_mean={mean[-1]:.4f}"))
     _dump("grad_norm_fluctuation", dump)
     return rows

@@ -35,15 +35,23 @@ def main() -> None:
         common.DEFAULT_DRIVER = args.driver
 
     r = (lambda full, quick: quick if args.quick else full)
+    # figure benchmarks run as batched sweeps with seed-replicate error
+    # bands; quick mode trims rounds AND replicates
+    s = r(3, 2)
     benches = [
-        ("fig1a", lambda: figures.fig1a_opt_benefit(r(300, 60))),
-        ("fig1b", lambda: figures.fig1b_benchmarks(r(300, 60))),
-        ("fig2a", lambda: figures.fig2a_opt_benefit_ridge(r(400, 80))),
-        ("fig2b", lambda: figures.fig2b_benchmarks_ridge(r(400, 80))),
-        ("fig3a", lambda: figures.fig3a_case1_vs_case2(r(400, 80))),
-        ("fig3b", lambda: figures.fig3b_tradeoff(r(600, 120))),
-        ("grad_norm", lambda: figures.grad_norm_fluctuation(r(200, 50))),
+        ("fig1a", lambda: figures.fig1a_opt_benefit(r(300, 60), s)),
+        ("fig1b", lambda: figures.fig1b_benchmarks(r(300, 60), s)),
+        ("fig2a", lambda: figures.fig2a_opt_benefit_ridge(r(400, 80), s)),
+        ("fig2b", lambda: figures.fig2b_benchmarks_ridge(r(400, 80), s)),
+        ("fig3a", lambda: figures.fig3a_case1_vs_case2(r(400, 80), s)),
+        ("fig3b", lambda: figures.fig3b_tradeoff(r(600, 120), s)),
+        ("grad_norm", lambda: figures.grad_norm_fluctuation(r(200, 50), s)),
         ("engine", lambda: figures.engine_rounds_per_sec(r(48, 16))),
+        # the vectorized sweep engine: one compiled program for a whole
+        # experiment grid vs the same grid dispatched sequentially (quick
+        # keeps enough rounds that the per-run host assembly amortizes —
+        # the measurement targets the engine, not the stacking)
+        ("sweep", lambda: figures.sweep_rounds_per_sec(r(256, 128))),
         # the declarative spec axes: server optimizer / local steps /
         # partial participation, each one field on the baseline spec
         ("scenarios", lambda: figures.scenario_axes(r(120, 30))),

@@ -44,18 +44,24 @@ class ChannelConfig:
         return self.channel_mean / math.sqrt(math.pi / 2.0)
 
 
-def draw_channel(key: jax.Array, cfg: ChannelConfig) -> jax.Array:
+def draw_channel(key: jax.Array, cfg: ChannelConfig,
+                 scale: Optional[jax.Array] = None) -> jax.Array:
     """Draw ``h_k`` for k = 1..K, i.i.d. Rayleigh with the configured mean.
 
     A Rayleigh variate is the magnitude of a complex Gaussian:
     ``|CN(0, 2 sigma_r^2)| = sigma_r * sqrt(x1^2 + x2^2)``, x_i ~ N(0,1).
+
+    ``scale`` overrides ``cfg.rayleigh_scale()`` with a (possibly traced)
+    per-experiment value — the batched sweep engine's ``channel_mean`` axis
+    redraws every experiment's channel from one vmapped program.
     """
-    sigma_r = cfg.rayleigh_scale()
+    sigma_r = cfg.rayleigh_scale() if scale is None else scale
     x = jax.random.normal(key, (cfg.num_devices, 2))
     return sigma_r * jnp.sqrt(jnp.sum(x * x, axis=-1))
 
 
-def channel_for_round(key: jax.Array, cfg: ChannelConfig, round_idx) -> jax.Array:
+def channel_for_round(key: jax.Array, cfg: ChannelConfig, round_idx,
+                      scale: Optional[jax.Array] = None) -> jax.Array:
     """Channel draw for a given round honouring the block-fading switch.
 
     ``round_idx`` may be a traced int32 scalar: the fold_in/draw pair is
@@ -63,8 +69,8 @@ def channel_for_round(key: jax.Array, cfg: ChannelConfig, round_idx) -> jax.Arra
     (``repro.fed.runtime``) redraws ``h_t`` inside its ``lax.scan`` body
     with no host callback."""
     if cfg.block_fading:
-        return draw_channel(jax.random.fold_in(key, round_idx), cfg)
-    return draw_channel(key, cfg)
+        return draw_channel(jax.random.fold_in(key, round_idx), cfg, scale)
+    return draw_channel(key, cfg, scale)
 
 
 def draw_noise(key: jax.Array, shape, noise_var: float, dtype=jnp.float32) -> jax.Array:

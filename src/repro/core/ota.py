@@ -134,7 +134,9 @@ def superpose(stacked_x: PyTree, h: jax.Array, b: jax.Array, a: float,
     hb = (h * b).astype(jnp.float32)
     summed = jax.tree_util.tree_map(
         lambda l: jnp.tensordot(hb, l.astype(jnp.float32), axes=(0, 0)), stacked_x)
-    if key is not None and noise_var > 0.0:
+    # maybe_positive: a traced sigma^2 (the batched sweep engine's
+    # per-experiment noise axis) must resolve the branch at trace time
+    if key is not None and schemes.maybe_positive(noise_var):
         summed = schemes.add_channel_noise(summed, key, noise_var)
     return jax.tree_util.tree_map(lambda l: jnp.asarray(a, l.dtype) * l, summed)
 

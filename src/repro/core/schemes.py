@@ -278,6 +278,16 @@ def transmit_energy(scheme: Scheme, stats: DeviceStats, b: jax.Array,
     return e
 
 
+def maybe_positive(noise_var) -> bool:
+    """Python-level gate for "should the noise branch be traced?": True for a
+    traced (or concrete-array) variance — the batched sweep engine threads
+    sigma^2 as a per-experiment traced scalar, so the branch must be resolved
+    at trace time — and for a positive python float.  Tracing the noise path
+    with a concrete 0 adds ``sqrt(0) * z = 0`` exactly, so the gate is
+    value-preserving either way."""
+    return isinstance(noise_var, jax.Array) or noise_var > 0.0
+
+
 def add_channel_noise(tree: PyTree, key: jax.Array, noise_var: float) -> PyTree:
     """Add the ES receiver noise z ~ N(0, sigma^2 I), one subkey per leaf.
 

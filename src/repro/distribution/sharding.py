@@ -1,18 +1,54 @@
-"""Parameter/activation sharding rules (logical-axis style).
+"""Parameter/activation sharding rules (logical-axis style), plus the
+experiment-axis data parallelism of the vectorized sweep engine.
 
 Rules are keyed on parameter leaf names (the model zoo uses stable names) and
 produce ``PartitionSpec``s.  ``model_axis`` carries tensor parallelism
 (attention heads / FFN hidden / experts / vocab); ``fsdp_axis`` optionally
 shards the other large dim (required for llama3-405b).  Leaves with a leading
 superblock-stack axis get a ``None`` prepended automatically.
+
+``experiment_mesh`` / ``shard_experiment_axis`` serve
+``repro.fed.runtime.run_batched``: a batched grid of experiments is embar-
+rassingly parallel over its leading E axis, so when several local devices
+are available the stacked per-experiment state is placed with E sharded over
+a 1-D mesh and the jitted vmapped program runs SPMD — each device carries
+E / n_devices whole experiments, no cross-device collectives.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+EXPERIMENT_AXIS = "exp"
+
+
+def experiment_mesh(num_experiments: int, *, axis_name: str = EXPERIMENT_AXIS,
+                    devices=None):
+    """A 1-D mesh over the local devices for sharding a batched run's
+    experiment axis, or ``None`` when sharding would not help: a single
+    device, or a grid the device count does not divide (uneven shards would
+    force padding; the caller then just runs replicated on one device)."""
+    devices = list(jax.local_devices() if devices is None else devices)
+    if len(devices) <= 1 or num_experiments % len(devices) != 0:
+        return None
+    return jax.make_mesh((len(devices),), (axis_name,), devices=devices)
+
+
+def shard_experiment_axis(tree: Any, mesh, *,
+                          axis_name: str = EXPERIMENT_AXIS) -> Any:
+    """``device_put`` every array leaf of ``tree`` with its leading
+    (experiment) axis sharded over ``mesh``; rank-0 leaves replicate.  The
+    leaves must all carry E as their leading axis (the stacked state of
+    ``run_batched``)."""
+    def one(leaf):
+        nd = jnp.ndim(leaf)
+        spec = P() if nd == 0 else P(axis_name, *([None] * (nd - 1)))
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(one, tree)
 
 # name -> spec WITHOUT the stack axis; 'M' = model axis, 'F' = fsdp axis
 _RULES = {

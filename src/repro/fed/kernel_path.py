@@ -99,7 +99,8 @@ def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
         scale = scale * hb
 
     n = flat.shape[1]
-    if key is not None and not cfg.noiseless and cfg.noise_var > 0.0:
+    if (key is not None and not cfg.noiseless
+            and schemes.maybe_positive(cfg.noise_var)):
         zeros = jax.tree_util.tree_map(jnp.zeros_like, template)
         noise, _ = ravel_pytree(
             schemes.add_channel_noise(zeros, key, cfg.noise_var))

@@ -43,13 +43,26 @@ Two round-loop drivers (``run(..., driver=...)``):
            round or for step-debugging; it computes the identical numbers
            (tests/test_engine.py holds the two drivers to fp32 parity on
            every backend, fixed and block-fading).
+
+Beyond single experiments, ``run_batched`` vectorizes the scan engine over a
+leading *experiment* axis: E structurally-identical configs (same scheme /
+case / backend / scenario axes — see ``structural_config``) that differ only
+in *batchable numerics* (seed, eta, s_target, grad_bound, noise_var,
+channel_mean, b_max, ...) compile into ONE program via ``jax.vmap`` through
+``_round_math`` — including channel redraws and the Problem-3 bisection
+under block fading — and the experiment axis is sharded across local
+devices (``distribution.sharding.experiment_mesh``) when a mesh is
+available.  ``repro.fl.sweep`` is the declarative front door that expands a
+grid, groups points by structural signature, and dispatches here.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import os
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +87,68 @@ DIAG_KEYS = ("grad_norm_mean", "grad_norm_min", "grad_norm_max", "eta",
 # key-derivation salt separating the participation draw from the channel
 # noise (both are folded from the same per-run key at the same round t)
 _MASK_SALT = 0x5EED
+
+# Compiled-executable cache size for the round/chunk builders below.  Large
+# sweeps walk many (config, grad_fn) pairs; a too-small LRU silently evicts
+# and re-traces mid-sweep, so the size is configurable without a code change
+# (REPRO_ENGINE_CACHE_SIZE) and ``cache_info()`` exposes hit/miss/trace
+# counters so benchmarks can assert zero re-traces.
+ENGINE_CACHE_SIZE = int(os.environ.get("REPRO_ENGINE_CACHE_SIZE", "64"))
+
+# incremented inside the traced bodies (tracing executes them; cached
+# executions do not), so re-traces are observable even when they happen
+# inside jax's own jit cache rather than the lru builders
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _engine_cache(fn):
+    return functools.lru_cache(maxsize=ENGINE_CACHE_SIZE)(fn)
+
+
+def cache_info() -> Dict[str, Any]:
+    """Introspection for the compiled-executable caches: per-builder
+    ``lru_cache`` statistics plus cumulative trace counts (``TRACE_COUNTS``).
+    The sweep benchmark asserts the trace counters stay flat across repeated
+    grid runs — i.e. zero re-traces once warm."""
+    return {
+        "cache_size": ENGINE_CACHE_SIZE,
+        "builders": {name: fn.cache_info()._asdict()
+                     for name, fn in _CACHED_BUILDERS.items()},
+        "traces": dict(TRACE_COUNTS),
+    }
+
+
+def clear_compile_caches() -> None:
+    """Drop every cached builder (and its jitted executables) and reset the
+    trace counters — test isolation / memory-pressure escape hatch."""
+    for fn in _CACHED_BUILDERS.values():
+        fn.cache_clear()
+    TRACE_COUNTS.clear()
+
+
+# FLConfig fields a batched (vmapped) run can vary per experiment: they are
+# either consumed only by host-side ``setup`` (folded into the stacked
+# h/b/a/eta0 inputs) or threaded through the compiled program as traced
+# per-experiment scalars (``BatchAxes``).  Everything else — scheme, case,
+# backend, schedule exponent, scenario axes — changes the traced program
+# and is therefore *structural*: vary it across compiles, not lanes.
+BATCHED_FL_FIELDS = ("seed", "eta", "s_target", "epsilon_target",
+                     "grad_bound", "smoothness_L", "strong_convexity_M",
+                     "expected_loss_drop", "theta_th")
+BATCHED_CHANNEL_FIELDS = ("noise_var", "channel_mean", "b_max")
+
+
+class BatchAxes(NamedTuple):
+    """Per-experiment traced scalars of a batched run (each field is [E] at
+    the ``run_batched`` boundary and a scalar inside the vmapped body).
+    ``None`` fields fall back to the baked ``FLConfig`` value — the
+    single-experiment drivers pass ``over=None`` everywhere, so their traces
+    (and compiled executables) are untouched by the batching refactor."""
+
+    noise_var: Optional[jax.Array] = None       # sigma^2 at the ES
+    grad_bound: Optional[jax.Array] = None      # G (schemes that need it)
+    b_max: Optional[jax.Array] = None           # per-device cap, block fading
+    rayleigh_scale: Optional[jax.Array] = None  # channel redraw, block fading
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +216,23 @@ class FLConfig:
             raise ValueError(
                 f"unknown participation_mode {self.participation_mode!r}; "
                 f"one of {PARTICIPATION_MODES}")
+
+
+def structural_config(cfg: FLConfig) -> FLConfig:
+    """The *structural signature* of a config: every batchable numeric field
+    (``BATCHED_FL_FIELDS`` / ``BATCHED_CHANNEL_FIELDS``) collapsed to a fixed
+    sentinel.  Two configs are batchable into one compiled program iff their
+    structural signatures are equal; the batched chunk builder is cached on
+    this signature, so every sub-batch of a sweep that shares a structure
+    shares one executable.  ``grad_bound`` keeps its None-ness (present vs
+    absent changes the traced program), not its value."""
+    channel = dataclasses.replace(cfg.channel, noise_var=0.0,
+                                  channel_mean=1.0, b_max=1.0)
+    return dataclasses.replace(
+        cfg, seed=0, eta=0.01, s_target=None, epsilon_target=None,
+        grad_bound=None if cfg.grad_bound is None else 1.0,
+        smoothness_L=1.0, strong_convexity_M=1.0, expected_loss_drop=1.0,
+        theta_th=chan.DEFAULT_THETA_TH, channel=channel)
 
 
 @dataclasses.dataclass
@@ -252,10 +344,20 @@ def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch) -> PyTree:
 
 
 def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
-                batch, h, b, a, eta0, t, key):
+                batch, h, b, a, eta0, t, key,
+                over: Optional[BatchAxes] = None):
     """One FL round (local computation -> OTA aggregate -> server optimizer
     step) plus the scalar diagnostics of ``DIAG_KEYS``.  Pure; traced
-    identically by both drivers."""
+    identically by both drivers.  ``over`` carries the per-experiment traced
+    scalars of a batched run (None — the single-experiment default — bakes
+    the ``cfg`` values into the trace exactly as before)."""
+    noise_var = cfg.channel.noise_var
+    grad_bound = cfg.grad_bound
+    if over is not None:
+        if over.noise_var is not None:
+            noise_var = over.noise_var
+        if over.grad_bound is not None:
+            grad_bound = over.grad_bound
     stacked = _local_transmit(cfg, grad_fn, params, batch)
     if cfg.participation < 1.0:
         mask = _participation_mask(cfg, key, t)
@@ -274,8 +376,8 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
             stacked)
     else:
         ocfg = ota.OTAConfig(scheme=cfg.scheme, a=a_eff,
-                             noise_var=cfg.channel.noise_var,
-                             grad_bound=cfg.grad_bound, backend=cfg.backend)
+                             noise_var=noise_var,
+                             grad_bound=grad_bound, backend=cfg.backend)
         y = ota.aggregate(ocfg, stacked, h, b_eff,
                           jax.random.fold_in(key, t))
     if mask is not None:
@@ -301,7 +403,7 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
     # stats — folding the two would need aggregate() to return them
     stats = schemes.compute_stats(stacked, sch, batched=True)
     norms = jnp.sqrt(stats.sq_norm)
-    tx = schemes.transmit_energy(sch, stats, b_eff, cfg.grad_bound, mask)
+    tx = schemes.transmit_energy(sch, stats, b_eff, grad_bound, mask)
     diag = {
         "grad_norm_mean": jnp.mean(norms),
         "grad_norm_min": jnp.min(norms),
@@ -319,32 +421,47 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
     return new_params, new_opt_state, diag
 
 
-def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t):
+def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t,
+                    over: Optional[BatchAxes] = None):
     """Block fading (beyond the paper, which holds h_k fixed): redraw the
     round-t channel and RE-RUN the Problem-3 optimization, entirely in JAX —
     Algorithm 1 is cheap (O(log(1/eps)(K+1)^3)) relative to a round of local
-    training, and ``solve_problem3_jax`` makes it scan-safe.  The effective
-    receiver-side gain a*sum(h_k b_k) (what the bounds see) is held at its
-    optimized value."""
-    h = chan.channel_for_round(chan_key, cfg.channel, t).astype(jnp.float32)
+    training, and ``solve_problem3_jax`` makes it scan-safe (and vmap-safe,
+    which is how a batched run re-optimizes every experiment's b_t in one
+    program).  The effective receiver-side gain a*sum(h_k b_k) (what the
+    bounds see) is held at its optimized value."""
+    noise_var = cfg.channel.noise_var
+    b_max = cfg.channel.b_max
+    scale = None
+    if over is not None:
+        if over.noise_var is not None:
+            noise_var = over.noise_var
+        if over.b_max is not None:
+            b_max = over.b_max
+        scale = over.rayleigh_scale
+    h = chan.channel_for_round(chan_key, cfg.channel, t,
+                               scale=scale).astype(jnp.float32)
     if cfg.amplification == "optimal":
-        sol = amp.solve_problem3_jax(h, cfg.channel.noise_var, model_dim,
-                                     cfg.channel.b_max)
+        sol = amp.solve_problem3_jax(h, noise_var, model_dim, b_max)
         b = sol.b.astype(jnp.float32)
     else:
-        b = jnp.full(h.shape, cfg.channel.b_max, jnp.float32)
+        b = jnp.broadcast_to(jnp.asarray(b_max, jnp.float32), h.shape)
     a = (eff_gain / jnp.sum(h * b)).astype(jnp.float32)
     return h, b, a
 
 
-@functools.lru_cache(maxsize=32)
+@_engine_cache
 def _make_fading_refresh(cfg: FLConfig, model_dim: int):
     """Jitted per-round channel/Problem-3 refresh for the python driver
     (the scan driver inlines ``_fading_refresh`` in its scan body)."""
-    return jax.jit(partial(_fading_refresh, cfg, model_dim))
+    def refresh(eff_gain, chan_key, t):
+        TRACE_COUNTS["fading_refresh"] += 1
+        return _fading_refresh(cfg, model_dim, eff_gain, chan_key, t)
+
+    return jax.jit(refresh)
 
 
-@functools.lru_cache(maxsize=32)
+@_engine_cache
 def make_round_step(cfg: FLConfig, grad_fn: GradFn):
     """Builds the jitted one-round function (the ``python`` driver's unit).
 
@@ -361,13 +478,47 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
 
     @jax.jit
     def round_step(params, opt_state, device_batches, h, b, a, eta0, t, key):
+        TRACE_COUNTS["round_step"] += 1
         return _round_math(cfg, sch, opt, grad_fn, params, opt_state,
                            device_batches, h, b, a, eta0, t, key)
 
     return round_step
 
 
-@functools.lru_cache(maxsize=32)
+def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
+                     trace_counter: str):
+    """The one chunk-scan body BOTH engine builders share: ``lax.scan`` of
+    ``_round_math`` (+ the block-fading refresh) over a chunk of rounds.
+    ``over=None`` bakes the config numerics into the trace (the
+    single-experiment engine); a ``BatchAxes`` of traced scalars is the
+    vmapped sweep engine's per-experiment lane."""
+    sch = schemes.get(cfg.scheme)
+    opt = server_optimizer(cfg)
+    block_fading = cfg.channel.block_fading
+
+    def run_one(params, opt_state, h, b, a, eta0, key, chan_key, eff_gain,
+                over, ts, batches):
+        TRACE_COUNTS[trace_counter] += 1
+
+        def body(carry, xs):
+            params, opt_state, h, b, a = carry
+            t, batch = xs
+            if block_fading:
+                h, b, a = _fading_refresh(cfg, model_dim, eff_gain,
+                                          chan_key, t, over)
+            params, opt_state, diag = _round_math(
+                cfg, sch, opt, grad_fn, params, opt_state, batch,
+                h, b, a, eta0, t, key, over)
+            return (params, opt_state, h, b, a), diag
+
+        (params, opt_state, h, b, a), hist = jax.lax.scan(
+            body, (params, opt_state, h, b, a), (ts, batches))
+        return params, opt_state, h, b, a, hist
+
+    return run_one
+
+
+@_engine_cache
 def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
     """Builds the compiled multi-round engine: one ``lax.scan`` over a chunk
     of rounds.  Param and server-optimizer buffers are donated (in-place
@@ -375,28 +526,48 @@ def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
     arrays — one host transfer per chunk, not one per round.  Cached like
     ``make_round_step``.
     """
-    sch = schemes.get(cfg.scheme)
-    opt = server_optimizer(cfg)
-    block_fading = cfg.channel.block_fading
+    run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk")
 
     def run_chunk(params, opt_state, h, b, a, eta0, key, chan_key, eff_gain,
                   ts, batches):
-        def body(carry, xs):
-            params, opt_state, h, b, a = carry
-            t, batch = xs
-            if block_fading:
-                h, b, a = _fading_refresh(cfg, model_dim, eff_gain,
-                                          chan_key, t)
-            params, opt_state, diag = _round_math(
-                cfg, sch, opt, grad_fn, params, opt_state, batch,
-                h, b, a, eta0, t, key)
-            return (params, opt_state, h, b, a), diag
-
-        (params, opt_state, h, b, a), hist = jax.lax.scan(
-            body, (params, opt_state, h, b, a), (ts, batches))
-        return params, opt_state, h, b, a, hist
+        return run_one(params, opt_state, h, b, a, eta0, key, chan_key,
+                       eff_gain, None, ts, batches)
 
     return jax.jit(run_chunk, donate_argnums=(0, 1))
+
+
+@_engine_cache
+def _make_run_chunk_batched(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
+    """The vectorized sweep engine's unit: the SAME chunk scan as
+    ``_make_run_chunk`` (one shared ``_make_chunk_scan`` body), wrapped in
+    ``jax.vmap`` over a leading experiment axis E.  Per-experiment state
+    (params, optimizer moments, channel h/b/a, eta0, PRNG keys, the
+    ``BatchAxes`` traced numerics) is batched; the round schedule ``ts`` and
+    the device batches are shared across experiments (in_axes=None), so a
+    sub-batch that shares a task shares one host->device batch transfer per
+    chunk.
+
+    ``cfg`` must be the *structural* representative of the sub-batch
+    (``structural_config``): every per-experiment numeric arrives through the
+    batched inputs, never through the baked config, so all sub-batches with
+    one structure share this cache entry AND its compiled executables.
+    Block-fading chunks redraw every experiment's channel and re-run the
+    Problem-3 bisection (``amp.solve_problem3_jax``) inside the vmapped scan
+    — ``lax.while_loop``'s batching rule freezes converged lanes, so each
+    lane's bisection is identical to its solo run."""
+    run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk_batched")
+    batched = jax.vmap(run_one, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+                                         None, None))
+    return jax.jit(batched, donate_argnums=(0, 1))
+
+
+# name -> lru-cached builder, for cache_info()/clear_compile_caches()
+_CACHED_BUILDERS = {
+    "round_step": make_round_step,
+    "run_chunk": _make_run_chunk,
+    "run_chunk_batched": _make_run_chunk_batched,
+    "fading_refresh": _make_fading_refresh,
+}
 
 
 def _plan_chunks(t0: int, num_rounds: int, eval_every: Optional[int],
@@ -423,6 +594,24 @@ def _stack_batches(batch_provider, ts: Sequence[int]) -> PyTree:
     device transfer feeds the whole scan)."""
     per_round = [batch_provider(t) for t in ts]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_round)
+
+
+def _locked_eval_keys(metrics: Dict[str, float],
+                      eval_keys: Optional[Tuple[str, ...]], t,
+                      where: str = "") -> Tuple[str, ...]:
+    """The metric key set is LOCKED on the first eval: an eval_fn that
+    returns a key only on some rounds (or, batched, some experiments) would
+    silently misalign that metric's history with hist['eval_round'].  Both
+    ``run`` and ``run_batched`` share this contract."""
+    if eval_keys is None:
+        return tuple(metrics)
+    if set(metrics) != set(eval_keys):
+        raise ValueError(
+            f"eval_fn returned metric keys {sorted(metrics)} at round "
+            f"{t}{where}, but the history locked {sorted(eval_keys)} on the "
+            "first eval — per-round metric lists must stay aligned with "
+            "hist['eval_round']")
+    return eval_keys
 
 
 def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
@@ -483,27 +672,14 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     for k in DIAG_KEYS:
         hist[k] = []
 
-    # the metric key set is LOCKED on the first eval: an eval_fn that returns
-    # a key only on some rounds would otherwise silently misalign that
-    # metric's list with hist["eval_round"] (every metric list must stay the
-    # same length as eval_round)
     eval_keys: Optional[Tuple[str, ...]] = None
 
     def record_eval(params, t):
         nonlocal eval_keys
         metrics = eval_fn(params)
-        if eval_keys is None:
-            eval_keys = tuple(metrics)
-            for mk in eval_keys:
-                hist.setdefault(mk, [])
-        elif set(metrics) != set(eval_keys):
-            raise ValueError(
-                "eval_fn returned metric keys "
-                f"{sorted(metrics)} at round {t}, but the history locked "
-                f"{sorted(eval_keys)} on the first eval — per-round metric "
-                "lists must stay aligned with hist['eval_round']")
+        eval_keys = _locked_eval_keys(metrics, eval_keys, t)
         for mk in eval_keys:
-            hist[mk].append(metrics[mk])
+            hist.setdefault(mk, []).append(metrics[mk])
         hist["eval_round"].append(t)
 
     t0 = state.round
@@ -556,3 +732,172 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         state.a = float(a)
     state.round += num_rounds
     return state, hist
+
+
+def _stack_trees(trees: Sequence[PyTree]) -> PyTree:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _slice_tree(tree: PyTree, e: int) -> PyTree:
+    return jax.tree_util.tree_map(lambda l: l[e], tree)
+
+
+def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
+                grad_fn: GradFn, batch_provider: Callable[[int], Any],
+                num_rounds: int,
+                eval_fn: Optional[Callable[[PyTree], Dict[str, float]]] = None,
+                eval_every: int = 10, *, chunk_size: int = 16,
+                chunk_batch_provider: Optional[
+                    Callable[[Sequence[int]], Any]] = None,
+                shard: bool = True) -> Tuple[List[FLState], Dict[str, Any]]:
+    """Run E experiments as ONE compiled program: the vectorized twin of
+    ``run(driver='scan')``.
+
+    The configs must be *structurally identical* (equal
+    ``structural_config``): same scheme / case / backend / scenario axes /
+    fading mode, differing only in the batchable numerics
+    (``BATCHED_FL_FIELDS`` / ``BATCHED_CHANNEL_FIELDS``) — those travel as
+    per-experiment traced inputs through ``BatchAxes`` and the stacked
+    h/b/a/eta0 channel state, so E grid points cost one trace and one
+    dispatch per chunk.  All experiments share ``grad_fn`` and the batch
+    providers (one task), the round counter, and the eval schedule.
+
+    When multiple local devices are available and E divides their count, the
+    experiment axis is sharded across them
+    (``distribution.sharding.experiment_mesh``) — grid points run on
+    different devices with no further code change.
+
+    Returns ``(states, hist)`` where each per-round diagnostic in ``hist``
+    is an ``np.ndarray`` of shape [E, num_rounds] (same ``DIAG_KEYS`` as
+    ``run`` plus the leading experiment axis), eval metrics are
+    [E, num_evals], and ``hist['round']`` / ``hist['eval_round']`` stay flat
+    lists shared by every experiment.  ``states`` is updated in place per
+    experiment exactly like ``run`` updates its single state.
+
+    The mesh backend is not batchable (its device axis IS the mesh); callers
+    (``repro.fl.sweep``) fall back to sequential runs there.
+    """
+    if len(cfgs) != len(states) or not cfgs:
+        raise ValueError("need equal, nonzero numbers of configs and states")
+    num_exp = len(cfgs)
+    cfg0 = cfgs[0]
+    if cfg0.backend == "mesh":
+        raise ValueError("the mesh backend reserves the device axis for the "
+                         "FL devices; run mesh experiments sequentially")
+    sig = structural_config(cfg0)
+    for c in cfgs[1:]:
+        if structural_config(c) != sig:
+            raise ValueError(
+                "configs in a batched run must be structurally identical "
+                "(they may differ only in "
+                f"{BATCHED_FL_FIELDS + BATCHED_CHANNEL_FIELDS}); got "
+                f"{structural_config(c)} vs {sig}")
+    t0s = {s.round for s in states}
+    if len(t0s) != 1:
+        raise ValueError(f"states disagree on the round counter: {t0s}")
+    t0 = t0s.pop()
+    dims = {s.model_dim for s in states}
+    if len(dims) != 1:
+        raise ValueError(f"states disagree on model_dim: {dims} — a batched "
+                         "run shares one task")
+    model_dim = dims.pop()
+
+    opt = server_optimizer(cfg0)
+    for s in states:
+        if s.opt_state is None:
+            s.opt_state = opt.init(s.params)._replace(
+                step=jnp.asarray(s.round, jnp.int32))
+
+    # assemble the per-experiment numerics in NumPy — ONE host->device
+    # transfer per stacked array, not one dispatch per experiment (the
+    # stacking cost is per run_sweep call, so it must stay off the grid's
+    # critical path)
+    params = _stack_trees([s.params for s in states])
+    opt_state = _stack_trees([s.opt_state for s in states])
+    h = jnp.asarray(np.stack([np.asarray(s.h) for s in states]), jnp.float32)
+    b = jnp.asarray(np.stack([np.asarray(s.b) for s in states]), jnp.float32)
+    a = jnp.asarray(np.asarray([s.a for s in states]), jnp.float32)
+    eta0 = jnp.asarray(np.asarray([s.eta0 for s in states]), jnp.float32)
+    keys = jnp.stack([jax.random.PRNGKey(c.seed + 1) for c in cfgs])
+    chan_keys = jnp.stack([jax.random.PRNGKey(c.seed + 2) for c in cfgs])
+    block_fading = cfg0.channel.block_fading
+    eff_gain = jnp.zeros((num_exp,), jnp.float32)
+    if block_fading:
+        if model_dim <= 0:
+            raise ValueError("block fading re-solves Problem 3 with the real "
+                             "model dimension; FLState.model_dim is unset — "
+                             "build the states via setup()")
+        eff_gain = jnp.asarray(
+            np.asarray([s.a * float(np.sum(np.asarray(s.h, np.float64)
+                                           * np.asarray(s.b, np.float64)))
+                        for s in states]), jnp.float32)
+    over = BatchAxes(
+        noise_var=jnp.asarray(
+            np.asarray([c.channel.noise_var for c in cfgs]), jnp.float32),
+        grad_bound=(None if cfg0.grad_bound is None else jnp.asarray(
+            np.asarray([c.grad_bound for c in cfgs]), jnp.float32)),
+        b_max=(jnp.asarray(np.asarray([c.channel.b_max for c in cfgs]),
+                           jnp.float32) if block_fading else None),
+        rayleigh_scale=(jnp.asarray(
+            np.asarray([c.channel.rayleigh_scale() for c in cfgs]),
+            jnp.float32) if block_fading else None),
+    )
+
+    if shard:
+        from repro.distribution import sharding as shardlib
+        mesh = shardlib.experiment_mesh(num_exp)
+        if mesh is not None:
+            (params, opt_state, h, b, a, eta0, keys, chan_keys, eff_gain,
+             over) = shardlib.shard_experiment_axis(
+                 (params, opt_state, h, b, a, eta0, keys, chan_keys,
+                  eff_gain, over), mesh)
+
+    hist: Dict[str, Any] = {"round": [], "eval_round": []}
+    diag_chunks: Dict[str, List[np.ndarray]] = {k: [] for k in DIAG_KEYS}
+    eval_chunks: Dict[str, List[List[float]]] = {}
+    eval_keys: Optional[Tuple[str, ...]] = None
+
+    def record_eval(params, t):
+        nonlocal eval_keys
+        per_exp: Dict[str, List[float]] = {}
+        for e in range(num_exp):
+            metrics = eval_fn(_slice_tree(params, e))
+            eval_keys = _locked_eval_keys(metrics, eval_keys, t,
+                                          where=f" (experiment {e})")
+            for mk in eval_keys:
+                per_exp.setdefault(mk, []).append(metrics[mk])
+        for mk in eval_keys:
+            eval_chunks.setdefault(mk, []).append(per_exp[mk])
+        hist["eval_round"].append(t)
+
+    run_chunk = _make_run_chunk_batched(sig, grad_fn, model_dim)
+    for ts in _plan_chunks(t0, num_rounds,
+                           eval_every if eval_fn is not None else None,
+                           chunk_size):
+        batches = (chunk_batch_provider(ts) if chunk_batch_provider
+                   else _stack_batches(batch_provider, ts))
+        params, opt_state, h, b, a, chunk_hist = run_chunk(
+            params, opt_state, h, b, a, eta0, keys, chan_keys, eff_gain,
+            over, jnp.asarray(ts, jnp.int32), batches)
+        chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
+        hist["round"].extend(ts)
+        for k in DIAG_KEYS:
+            diag_chunks[k].append(np.asarray(chunk_hist[k], np.float64))
+        t_end = ts[-1]
+        if eval_fn is not None and (t_end % eval_every == 0 or t_end == 1):
+            record_eval(params, t_end)
+
+    for k in DIAG_KEYS:
+        hist[k] = np.concatenate(diag_chunks[k], axis=1)       # [E, T]
+    for mk, cols in eval_chunks.items():
+        hist[mk] = np.asarray(cols, np.float64).T              # [E, evals]
+
+    for e, s in enumerate(states):
+        s.params = _slice_tree(params, e)
+        s.opt_state = _slice_tree(opt_state, e)
+        if block_fading:
+            s.h = np.asarray(jax.device_get(h[e]), np.float64)
+            s.b = np.asarray(jax.device_get(b[e]), np.float64)
+            s.a = float(a[e])
+        s.round += num_rounds
+    return list(states), hist

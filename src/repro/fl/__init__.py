@@ -12,8 +12,12 @@ its ``run()`` the stable compatibility wrapper for hand-wired callers).
 """
 from repro.fed.runtime import FLConfig
 from repro.fl.experiment import Experiment
-from repro.fl.spec import DataSpec, EvalSpec, ExperimentSpec, ModelSpec
+from repro.fl.spec import (DataSpec, EvalSpec, ExperimentSpec, ModelSpec,
+                           apply_axes, apply_axis, resolve_axis)
+from repro.fl.sweep import SweepPoint, SweepResult, SweepSpec, run_sweep
 from repro.fl.tasks import Task, build_task
 
 __all__ = ["DataSpec", "EvalSpec", "Experiment", "ExperimentSpec",
-           "FLConfig", "ModelSpec", "Task", "build_task"]
+           "FLConfig", "ModelSpec", "SweepPoint", "SweepResult", "SweepSpec",
+           "Task", "apply_axes", "apply_axis", "build_task", "resolve_axis",
+           "run_sweep"]

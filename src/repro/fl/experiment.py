@@ -39,10 +39,13 @@ class Experiment:
     ``repro.checkpoint.store``.
     """
 
-    def __init__(self, spec: ExperimentSpec):
+    def __init__(self, spec: ExperimentSpec, task: Optional[Task] = None):
         self.spec = spec
         self.cfg = spec.fl_config()
-        self.task: Optional[Task] = None
+        # a caller that already built the task (the sweep engine's sequential
+        # fallback, parity tests) may inject it; it must match the spec —
+        # build_task's lru cache makes the default path equally shared
+        self.task: Optional[Task] = task
         self.state: Optional[runtime.FLState] = None
         self.history: Dict[str, List] = {}
 
@@ -51,8 +54,9 @@ class Experiment:
     def setup(self) -> "Experiment":
         """Build (or fetch the cached) task, draw the channel, and run the
         paper's parameter optimization (Problem 3 / Algorithm 1)."""
-        self.task = build_task(self.spec.data, self.spec.model,
-                               self.cfg.num_devices)
+        if self.task is None:
+            self.task = build_task(self.spec.data, self.spec.model,
+                                   self.cfg.num_devices)
         self.state = runtime.setup(self.cfg, self.task.params0,
                                    self.task.model_dim)
         self.history = {}

@@ -18,8 +18,9 @@ and the jitted round programs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Mapping, Optional, Tuple
 
+from repro.core.channel import ChannelConfig
 from repro.fed.runtime import FLConfig
 
 DATASETS = ("synthetic_mnist", "ridge")
@@ -125,3 +126,97 @@ class ExperimentSpec:
             ("participation_mode", self.participation_mode),
         ) if v is not None}
         return dataclasses.replace(self.fl, **over) if over else self.fl
+
+
+# ---------------------------------------------------------------------------
+# sweep-axis resolution: one flat namespace over the nested spec
+#
+# A sweep axis addresses a field of the nested spec by bare name
+# ("noise_var", "scheme", "alpha") or, to disambiguate, by dotted scope
+# ("fl.seed", "data.seed").  Scopes are searched in the order below; the
+# first hit wins, so e.g. bare "seed" is the CHANNEL/RUN seed (fl.seed) and
+# the data/init seed must be spelled "data.seed".
+
+_SCOPE_ORDER: Tuple[Tuple[str, type], ...] = (
+    ("fl", FLConfig),
+    ("channel", ChannelConfig),
+    ("data", DataSpec),
+    ("model", ModelSpec),
+)
+_SCOPE_FIELDS = {scope: tuple(f.name for f in dataclasses.fields(cls))
+                 for scope, cls in _SCOPE_ORDER}
+# ExperimentSpec-level execution knobs are deliberately NOT sweepable: the
+# sweep engine owns eval alignment / driver / chunking.  The scenario-axis
+# override fields sweep through their FLConfig name (apply_axis writes the
+# spec-level override so it can never be shadowed).
+_UNSWEEPABLE = ("eval", "driver", "chunk_size")
+_OVERRIDE_FIELDS = ("server_opt", "local_steps", "local_lr",
+                    "participation", "participation_mode")
+
+
+def resolve_axis(name: str) -> Tuple[str, str]:
+    """Resolve a sweep-axis name to ``(scope, field)`` with scope one of
+    ``fl`` / ``channel`` / ``data`` / ``model``.  Raises ``ValueError`` for
+    unknown or unsweepable names."""
+    if "." in name:
+        scope, _, field = name.partition(".")
+        if scope not in _SCOPE_FIELDS:
+            raise ValueError(f"unknown sweep scope {scope!r} in {name!r}; "
+                             f"one of {tuple(_SCOPE_FIELDS)}")
+        if field not in _SCOPE_FIELDS[scope]:
+            raise ValueError(f"{scope!r} spec has no field {field!r}; "
+                             f"one of {_SCOPE_FIELDS[scope]}")
+        return scope, field
+    for scope, fields in _SCOPE_FIELDS.items():
+        if name in fields:
+            return scope, name
+    if name in _UNSWEEPABLE or name in {
+            f.name for f in dataclasses.fields(ExperimentSpec)}:
+        raise ValueError(f"{name!r} is not sweepable (execution/eval knobs "
+                         "are owned by the sweep engine; scenario-axis "
+                         "overrides sweep via their FLConfig field)")
+    known = sorted(set().union(*_SCOPE_FIELDS.values()))
+    raise ValueError(f"unknown sweep axis {name!r}; known fields: {known}")
+
+
+def apply_axis(spec: ExperimentSpec, name: str, value: Any) -> ExperimentSpec:
+    """Return ``spec`` with one resolved axis field replaced (validation of
+    the resulting spec runs via the dataclass ``__post_init__``s)."""
+    scope, field = resolve_axis(name)
+    if scope == "fl":
+        if field in _OVERRIDE_FIELDS:
+            # scenario axes have a spec-level override that outranks the
+            # FLConfig field in fl_config(); write the override so an axis
+            # value can never be shadowed by a base-spec override
+            return dataclasses.replace(spec, **{field: value})
+        if field == "num_devices":
+            # K lives in BOTH FLConfig and the already-built ChannelConfig;
+            # a sweep over the cohort size must move them together or setup
+            # draws a channel of the stale length
+            channel = dataclasses.replace(spec.fl.channel, num_devices=value)
+            return dataclasses.replace(
+                spec, fl=dataclasses.replace(spec.fl, num_devices=value,
+                                             channel=channel))
+        return dataclasses.replace(
+            spec, fl=dataclasses.replace(spec.fl, **{field: value}))
+    if scope == "channel":
+        if field == "num_devices":
+            raise ValueError("sweep the cohort size via 'num_devices' (the "
+                             "FLConfig field) — it keeps the channel length "
+                             "in sync")
+        channel = dataclasses.replace(spec.fl.channel, **{field: value})
+        return dataclasses.replace(
+            spec, fl=dataclasses.replace(spec.fl, channel=channel))
+    if scope == "data":
+        return dataclasses.replace(
+            spec, data=dataclasses.replace(spec.data, **{field: value}))
+    return dataclasses.replace(
+        spec, model=dataclasses.replace(spec.model, **{field: value}))
+
+
+def apply_axes(spec: ExperimentSpec,
+               coords: Mapping[str, Any]) -> ExperimentSpec:
+    """Fold a mapping of axis name -> value into a spec, one grid point."""
+    for name, value in coords.items():
+        spec = apply_axis(spec, name, value)
+    return spec

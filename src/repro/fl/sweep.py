@@ -1,0 +1,330 @@
+"""The vectorized sweep engine's declarative front door: expand an
+``ExperimentSpec`` over named axes, classify each axis as *batchable*
+(numeric — traced into one compiled program as a per-experiment input) or
+*structural* (changes the traced program — compiled once per sub-batch),
+and run the whole grid in as few dispatches as the structure allows.
+
+    sweep = SweepSpec(base_spec, {"s_target": (0.98, 0.99, 0.995),
+                                  "seed": (0, 1, 2, 3)})
+    result = run_sweep(sweep, num_rounds=400)
+    mean, std = result.band("gap", over="seed")     # [3, num_evals]
+
+Axis names address the nested spec through one flat namespace
+(``repro.fl.spec.resolve_axis``): bare field names ("seed", "noise_var",
+"scheme", "alpha") or dotted scopes ("fl.seed", "data.seed").  Which fields
+are batchable is owned by the runtime (``repro.fed.runtime
+.BATCHED_FL_FIELDS`` / ``BATCHED_CHANNEL_FIELDS``): they are either consumed
+by host-side ``setup`` (folded into the stacked per-experiment channel
+state) or threaded through the compiled program as traced scalars.
+Everything else — scheme, case, backend, amplification policy, scenario
+axes, any data/model field — is structural.
+
+Grid points are grouped by *structural signature* (``runtime
+.structural_config`` of the effective config + the data/model specs); each
+group becomes ONE ``runtime.run_batched`` call — a single ``jax.vmap``-ed
+``lax.scan`` program whose experiment axis is sharded across local devices
+when a mesh is available.  Groups with equal data/model specs share one
+lru-cached ``Task`` (same arrays AND ``grad_fn`` identity), so compiled
+executables stay hot across groups and repeated sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fed import runtime
+from repro.fl.experiment import Experiment
+from repro.fl.spec import (ExperimentSpec, apply_axes, apply_axis,
+                           resolve_axis)
+from repro.fl.tasks import build_task
+
+BATCHABLE = "batchable"
+STRUCTURAL = "structural"
+
+
+def classify_field(name: str) -> str:
+    """``batchable`` or ``structural`` for one resolved spec field."""
+    scope, field = resolve_axis(name)
+    if scope == "fl" and field in runtime.BATCHED_FL_FIELDS:
+        return BATCHABLE
+    if scope == "channel" and field in runtime.BATCHED_CHANNEL_FIELDS:
+        return BATCHABLE
+    return STRUCTURAL
+
+
+def _is_composite(value: Any) -> bool:
+    """Composite axis values bundle several field assignments under one
+    label: ``("caseI", {"case": "I", "p": 0.75})``."""
+    return (isinstance(value, tuple) and len(value) == 2
+            and isinstance(value[0], str) and isinstance(value[1], Mapping))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One grid point: its N-D index, its coordinates (axis name -> value,
+    composite axes contribute their label), and the fully-applied spec."""
+
+    index: Tuple[int, ...]
+    coords: Tuple[Tuple[str, Any], ...]
+    spec: ExperimentSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A base ``ExperimentSpec`` plus named axes (mapping or sequence of
+    ``(name, values)`` pairs; values in declaration order define the grid's
+    C-order).  Axis values are field values, or ``(label, mapping)``
+    composites assigning several fields at once (classified batchable only
+    if every constituent field is)."""
+
+    base: ExperimentSpec
+    axes: Any
+
+    def __post_init__(self):
+        items = (tuple((k, tuple(v)) for k, v in self.axes.items())
+                 if isinstance(self.axes, Mapping)
+                 else tuple((k, tuple(v)) for k, v in self.axes))
+        object.__setattr__(self, "axes", items)
+        seen = set()
+        for name, values in items:
+            if name in seen:
+                raise ValueError(f"duplicate sweep axis {name!r}")
+            seen.add(name)
+            if not values:
+                raise ValueError(f"sweep axis {name!r} has no values")
+            composite = [_is_composite(v) for v in values]
+            if any(composite) and not all(composite):
+                raise ValueError(
+                    f"axis {name!r} mixes composite (label, mapping) values "
+                    "with plain values")
+            if all(composite):
+                for _, mapping in values:
+                    for field in mapping:
+                        resolve_axis(field)
+            else:
+                resolve_axis(name)
+        # expand ONCE — validates every grid point at declaration time, and
+        # points()/run_sweep reuse the expansion (a thousand-point grid is
+        # thousands of chained dataclasses.replace calls)
+        object.__setattr__(self, "_points", tuple(self._expand()))
+
+    # ----------------------------------------------------------- geometry
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.axes)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(len(values) for _, values in self.axes)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.axes else 1
+
+    def values(self, name: str) -> Tuple[Any, ...]:
+        """The coordinate values of one axis (labels for composites)."""
+        for axis, vals in self.axes:
+            if axis == name:
+                return tuple(v[0] if _is_composite(v) else v for v in vals)
+        raise ValueError(f"no sweep axis named {name!r}; one of {self.names}")
+
+    # ----------------------------------------------------- classification
+
+    def classification(self) -> Dict[str, str]:
+        """axis name -> ``batchable`` | ``structural``.  A batchable axis
+        multiplies lanes of one compiled program; a structural axis
+        multiplies compiled sub-batches."""
+        out = {}
+        for name, values in self.axes:
+            if _is_composite(values[0]):
+                fields = set()
+                for _, mapping in values:
+                    fields.update(mapping)
+                out[name] = (BATCHABLE if all(classify_field(f) == BATCHABLE
+                                              for f in fields)
+                             else STRUCTURAL)
+            else:
+                out[name] = classify_field(name)
+        return out
+
+    # ----------------------------------------------------------- expansion
+
+    def points(self) -> List[SweepPoint]:
+        """The full grid in C-order (last axis fastest), expanded once at
+        declaration time (every spec validated by its dataclass
+        constructors)."""
+        return list(self._points)
+
+    def _expand(self) -> List[SweepPoint]:
+        if not self.axes:
+            return [SweepPoint((), (), self.base)]
+        pts = []
+        ranges = [range(len(values)) for _, values in self.axes]
+        for index in itertools.product(*ranges):
+            spec = self.base
+            coords = []
+            for (name, values), i in zip(self.axes, index):
+                value = values[i]
+                if _is_composite(value):
+                    label, mapping = value
+                    spec = apply_axes(spec, mapping)
+                    coords.append((name, label))
+                else:
+                    spec = apply_axis(spec, name, value)
+                    coords.append((name, value))
+            pts.append(SweepPoint(tuple(index), tuple(coords), spec))
+        return pts
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-experiment histories of a sweep, flat over the grid.
+
+    ``history[key]`` is ``[G, T]`` for the runtime's ``DIAG_KEYS`` and
+    ``[G, num_evals]`` for eval metrics, where G = grid size in the C-order
+    of ``points``; ``rounds`` / ``eval_rounds`` are shared by every point
+    (the sweep engine aligns eval chunk boundaries across the whole grid).
+    """
+
+    sweep: SweepSpec
+    num_rounds: int
+    rounds: List[int]
+    eval_rounds: List[int]
+    history: Dict[str, np.ndarray]
+    points: List[SweepPoint]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.sweep.shape
+
+    def grid(self, key: str) -> np.ndarray:
+        """``history[key]`` reshaped to the grid: [*axis lengths, T]."""
+        arr = self.history[key]
+        return arr.reshape(self.shape + arr.shape[1:])
+
+    def band(self, key: str, over: str = "seed") -> Tuple[np.ndarray,
+                                                          np.ndarray]:
+        """(mean, std) of ``history[key]`` reduced over one named axis —
+        the seed-replicate error band of the figure benchmarks.  The
+        returned arrays keep the remaining grid axes."""
+        if over not in self.sweep.names:
+            raise ValueError(f"no sweep axis named {over!r}; one of "
+                             f"{self.sweep.names}")
+        axis = self.sweep.names.index(over)
+        g = self.grid(key)
+        return g.mean(axis=axis), g.std(axis=axis)
+
+    def point_index(self, **coords) -> int:
+        """Flat index of the unique point matching the given coordinate
+        values (every axis must be pinned)."""
+        if set(coords) != set(self.sweep.names):
+            raise ValueError(f"pin every axis {self.sweep.names}, got "
+                             f"{tuple(coords)}")
+        index = []
+        for name in self.sweep.names:
+            values = self.sweep.values(name)
+            if coords[name] not in values:
+                raise ValueError(f"{coords[name]!r} is not a value of axis "
+                                 f"{name!r} ({values})")
+            index.append(values.index(coords[name]))
+        return int(np.ravel_multi_index(tuple(index), self.shape))
+
+
+def _structural_signature(spec: ExperimentSpec):
+    """Hashable key under which grid points may share one compiled batched
+    program: the runtime's structural config plus everything that shapes the
+    task (data/model specs drive arrays, ``grad_fn``, and eval metrics)."""
+    return (runtime.structural_config(spec.fl_config()), spec.data,
+            spec.model)
+
+
+def _run_group_sequential(specs, task, num_rounds, evaluate, eval_every):
+    """Per-point fallback (mesh backend / python driver, or
+    ``vectorized=False`` — the benchmark's sequential baseline): N truly
+    independent ``Experiment.run`` trajectories (sharing the group's cached
+    ``Task``) assembled into the batched history layout."""
+    rows = []
+    for spec in specs:
+        e = Experiment(spec, task=task)
+        rows.append(e.run(num_rounds, evaluate=evaluate,
+                          eval_every=eval_every))
+    out: Dict[str, Any] = {"round": rows[0]["round"],
+                           "eval_round": rows[0]["eval_round"]}
+    for key in rows[0]:
+        if key not in out:
+            out[key] = np.stack([np.asarray(r[key], np.float64)
+                                 for r in rows])
+    return out
+
+
+def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
+              shard: bool = True,
+              evaluate: Optional[bool] = None) -> SweepResult:
+    """Run every grid point of ``sweep`` for ``num_rounds`` rounds.
+
+    Points are grouped by structural signature; each group runs as ONE
+    compiled batched program (``runtime.run_batched``), its experiment axis
+    sharded across local devices when available.  ``vectorized=False``
+    forces the per-point sequential path for every group (the baseline the
+    ``sweep`` benchmark compares against); the mesh backend and the
+    ``python`` driver always take the sequential path (the mesh's device
+    axis belongs to the FL devices; the python driver is a host loop).
+
+    Eval scheduling comes from ``sweep.base.eval`` (``evaluate`` overrides
+    the enable switch) and is identical for every point, so histories align
+    across the grid.  All groups must produce the same eval-metric key set —
+    a sweep spanning tasks with different metrics should be split.
+    """
+    pts = sweep.points()
+    base = sweep.base
+    enabled = base.eval.enabled if evaluate is None else evaluate
+    eval_every = base.eval.every
+    # the python driver is the per-round host loop — inherently sequential
+    vectorized = vectorized and base.driver == "scan"
+
+    groups: Dict[Any, List[int]] = {}
+    for i, pt in enumerate(pts):
+        groups.setdefault(_structural_signature(pt.spec), []).append(i)
+
+    flat: Dict[str, np.ndarray] = {}
+    rounds: Optional[List[int]] = None
+    eval_rounds: Optional[List[int]] = None
+    metric_keys: Optional[frozenset] = None
+    for idxs in groups.values():
+        gspecs = [pts[i].spec for i in idxs]
+        cfgs = [s.fl_config() for s in gspecs]
+        task = build_task(gspecs[0].data, gspecs[0].model,
+                          cfgs[0].num_devices)
+        if vectorized and cfgs[0].backend != "mesh":
+            states = [runtime.setup(cfg, task.params0, task.model_dim)
+                      for cfg in cfgs]
+            _, hist = runtime.run_batched(
+                cfgs, states, task.grad_fn, task.batch_provider, num_rounds,
+                eval_fn=task.eval_fn if enabled else None,
+                eval_every=eval_every, chunk_size=base.chunk_size,
+                chunk_batch_provider=task.chunk_batch_provider, shard=shard)
+        else:
+            hist = _run_group_sequential(gspecs, task, num_rounds, enabled,
+                                         eval_every)
+        keys = frozenset(k for k in hist if k not in ("round", "eval_round"))
+        if rounds is None:
+            rounds, eval_rounds = list(hist["round"]), list(hist["eval_round"])
+            metric_keys = keys
+        elif keys != metric_keys:
+            raise ValueError(
+                "sweep groups disagree on history keys "
+                f"({sorted(keys ^ metric_keys)} differ) — split a sweep "
+                "that spans tasks with different eval metrics")
+        for key in keys:
+            arr = np.asarray(hist[key], np.float64)
+            buf = flat.get(key)
+            if buf is None:
+                buf = np.zeros((len(pts),) + arr.shape[1:])
+                flat[key] = buf
+            buf[idxs] = arr
+    return SweepResult(sweep=sweep, num_rounds=num_rounds, rounds=rounds,
+                       eval_rounds=eval_rounds, history=flat, points=pts)

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Callable, Dict, Sequence
 
 import jax
@@ -133,7 +134,20 @@ def _build_ridge_task(data: DataSpec, model: ModelSpec,
                           "x": x, "y": y})
 
 
-@functools.lru_cache(maxsize=16)
+# Like the engine's executable caches (repro.fed.runtime), the task cache is
+# sized for sweeps: a grid over data/model axes walks one entry per distinct
+# (data, model, K) triple, and an eviction drops the shared arrays AND the
+# grad_fn identity the compiled-executable caches key on.
+TASK_CACHE_SIZE = int(os.environ.get("REPRO_TASK_CACHE_SIZE", "32"))
+
+
+def task_cache_info() -> Dict[str, int]:
+    """``lru_cache`` statistics of ``build_task`` (hits mean shared arrays
+    and hot compiled executables across experiments/sweeps)."""
+    return build_task.cache_info()._asdict()
+
+
+@functools.lru_cache(maxsize=TASK_CACHE_SIZE)
 def build_task(data: DataSpec, model: ModelSpec, num_devices: int) -> Task:
     """Build (or fetch the cached) ``Task`` for a data/model spec pair.
 

@@ -1,0 +1,470 @@
+"""Vectorized sweep-engine tests: a batched grid (one vmapped compiled
+program, ``runtime.run_batched`` / ``repro.fl.sweep``) must reproduce N
+independent sequential runs for every batchable axis — alone and composed
+with block fading and the scenario axes — plus the SweepSpec expansion /
+classification contract, the ``_plan_chunks`` properties, and the
+compiled-executable cache introspection.
+
+Parity contract: trajectories are held to the repo's CPU fp32 parity
+tolerance (``RTOL``, the same bound the scan-vs-python driver tests use).
+On this container most history keys agree bitwise; the residual 1-2 ulp
+comes from XLA lowering batched dots (model grads, the superpose tensordot,
+``t**p``) with different accumulation blocking under vmap — quantities the
+engine computes without dots (participation counts, round alignment, the
+Problem-3 bisection) are asserted exactly.
+"""
+import dataclasses
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import amplification as amp
+from repro.core.channel import ChannelConfig
+from repro.fed import runtime as rt
+from repro.fl import (DataSpec, EvalSpec, Experiment, ExperimentSpec,
+                      ModelSpec, SweepSpec, apply_axis, resolve_axis,
+                      run_sweep)
+from repro.fl.sweep import (BATCHABLE, STRUCTURAL, classify_field,
+                            _structural_signature)
+
+K = 4
+ROUNDS = 8
+# per-round divergence is 1-2 ulp (see module docstring) but compounds along
+# the trajectory; 2e-5 over 8 rounds keeps the contract tight while
+# absorbing the accumulation on the most sensitive diagnostics
+RTOL = 2e-5
+
+
+def ridge_spec(fading=False, **fl_kw):
+    fl = dict(num_devices=K, scheme="normalized", case="II", eta=0.01,
+              channel=ChannelConfig(num_devices=K, channel_mean=1e-3,
+                                    block_fading=fading),
+              grad_bound=25.0, s_target=0.995, smoothness_L=2.0,
+              strong_convexity_M=0.5, seed=0)
+    fl.update(fl_kw)
+    return ExperimentSpec(
+        fl=rt.FLConfig(**fl),
+        data=DataSpec(dataset="ridge", split="iid", num_train=200, dim=8,
+                      batch_size=16, seed=3),
+        model=ModelSpec(kind="ridge"),
+        eval=EvalSpec(every=5), chunk_size=3)
+
+
+def mnist_spec(fading=False, **fl_kw):
+    fl = dict(num_devices=K, scheme="normalized", case="I", p=0.75,
+              channel=ChannelConfig(num_devices=K, channel_mean=1e-3,
+                                    noise_var=1e-7, block_fading=fading),
+              grad_bound=10.0, smoothness_L=5.0, expected_loss_drop=2.0,
+              seed=0)
+    fl.update(fl_kw)
+    return ExperimentSpec(
+        fl=rt.FLConfig(**fl),
+        data=DataSpec(dataset="synthetic_mnist", split="dirichlet",
+                      num_train=300, num_test=60, batch_size=16, seed=0),
+        model=ModelSpec(kind="mlp", hidden=8),
+        eval=EvalSpec(every=5), chunk_size=3)
+
+
+def assert_parity(sweep, rounds=ROUNDS):
+    """Batched sweep == the same grid as independent sequential engine runs:
+    rounds exactly, dot-free diagnostics exactly, the rest to RTOL."""
+    res_b = run_sweep(sweep, rounds)
+    res_s = run_sweep(sweep, rounds, vectorized=False)
+    assert res_b.rounds == res_s.rounds == list(range(1, rounds + 1))
+    assert res_b.eval_rounds == res_s.eval_rounds
+    assert set(res_b.history) == set(res_s.history)
+    np.testing.assert_array_equal(res_b.history["num_participants"],
+                                  res_s.history["num_participants"])
+    for key in res_b.history:
+        np.testing.assert_allclose(res_b.history[key], res_s.history[key],
+                                   rtol=RTOL, atol=1e-7, err_msg=key)
+    return res_b
+
+
+class TestSweepSpecGeometry:
+    def test_shape_size_values_and_order(self):
+        sweep = SweepSpec(ridge_spec(), {"s_target": (0.98, 0.99),
+                                         "seed": (0, 1, 2)})
+        assert sweep.names == ("s_target", "seed")
+        assert sweep.shape == (2, 3) and sweep.size == 6
+        assert sweep.values("seed") == (0, 1, 2)
+        pts = sweep.points()
+        # C-order: last axis fastest
+        assert [p.index for p in pts[:4]] == [(0, 0), (0, 1), (0, 2), (1, 0)]
+        assert pts[4].coords == (("s_target", 0.99), ("seed", 1))
+        assert pts[4].spec.fl.s_target == 0.99 and pts[4].spec.fl.seed == 1
+
+    def test_mapping_and_pair_axes_agree(self):
+        a = SweepSpec(ridge_spec(), {"seed": (0, 1)})
+        b = SweepSpec(ridge_spec(), (("seed", (0, 1)),))
+        assert a.axes == b.axes
+
+    def test_dotted_names_disambiguate(self):
+        assert resolve_axis("seed") == ("fl", "seed")
+        assert resolve_axis("data.seed") == ("data", "seed")
+        assert resolve_axis("noise_var") == ("channel", "noise_var")
+        spec = apply_axis(ridge_spec(), "data.seed", 9)
+        assert spec.data.seed == 9 and spec.fl.seed == 0
+
+    def test_axis_errors(self):
+        with pytest.raises(ValueError, match="unknown sweep axis"):
+            SweepSpec(ridge_spec(), {"not_a_field": (1,)})
+        with pytest.raises(ValueError, match="not sweepable"):
+            SweepSpec(ridge_spec(), {"driver": ("scan", "python")})
+        with pytest.raises(ValueError, match="no values"):
+            SweepSpec(ridge_spec(), {"seed": ()})
+        with pytest.raises(ValueError, match="mixes composite"):
+            SweepSpec(ridge_spec(), {"seed": (("a", {"seed": 1}), 2)})
+        with pytest.raises(ValueError):        # invalid value fails eagerly
+            SweepSpec(ridge_spec(), {"scheme": ("normalized", "nope")})
+
+    def test_classify_field_function(self):
+        assert classify_field("seed") == BATCHABLE
+        assert classify_field("channel.noise_var") == BATCHABLE
+        assert classify_field("scheme") == STRUCTURAL
+        assert classify_field("data.alpha") == STRUCTURAL
+
+    def test_classification(self):
+        sweep = SweepSpec(
+            ridge_spec(),
+            {"seed": (0, 1), "noise_var": (0.0, 1e-7), "eta": (0.01, 0.02),
+             "s_target": (0.98, 0.99), "grad_bound": (10.0, 25.0),
+             "b_max": (1.0, 2.0), "channel_mean": (1e-3, 2e-3),
+             "scheme": ("normalized", "benchmark1"),
+             "participation": (0.5, 1.0), "alpha": (0.5, 1.0)})
+        cls = sweep.classification()
+        for name in ("seed", "noise_var", "eta", "s_target", "grad_bound",
+                     "b_max", "channel_mean"):
+            assert cls[name] == BATCHABLE, name
+        for name in ("scheme", "participation", "alpha"):
+            assert cls[name] == STRUCTURAL, name
+
+    def test_composite_classification(self):
+        sweep = SweepSpec(ridge_spec(), {
+            "setup": (("caseI", {"case": "I", "p": 0.75, "s_target": None,
+                                 "expected_loss_drop": 2.0}),
+                      ("caseII", {"case": "II", "s_target": 0.98})),
+            "target": (("a", {"s_target": 0.98}), ("b", {"eta": 0.02}))})
+        cls = sweep.classification()
+        assert cls["target"] == BATCHABLE      # all constituent fields are
+        assert cls["setup"] == STRUCTURAL      # 'case'/'p' change the trace
+        assert sweep.values("setup") == ("caseI", "caseII")
+        pts = sweep.points()
+        assert pts[0].coords == (("setup", "caseI"), ("target", "a"))
+        assert pts[0].spec.fl.case == "I"
+        assert pts[0].spec.fl.s_target == 0.98   # later axis wins
+
+    def test_scenario_override_axis_beats_base_override(self):
+        base = dataclasses.replace(ridge_spec(), server_opt="adamw")
+        spec = apply_axis(base, "server_opt", "sgd")
+        assert spec.fl_config().server_opt == "sgd"
+
+    def test_num_devices_axis_keeps_channel_in_sync(self):
+        spec = apply_axis(ridge_spec(), "num_devices", 6)
+        assert spec.fl.num_devices == 6
+        assert spec.fl.channel.num_devices == 6
+        with pytest.raises(ValueError, match="keeps the channel length"):
+            apply_axis(ridge_spec(), "channel.num_devices", 6)
+
+    def test_num_devices_axis_runs(self):
+        """A cohort-size sweep is structural (one sub-batch per K) but must
+        run — the desync between FLConfig.num_devices and the channel length
+        was a crash inside the memoized Problem-3 solver."""
+        res = assert_parity(SweepSpec(ridge_spec(), {"num_devices": (3, 5)}),
+                            rounds=3)
+        assert res.history["num_participants"][:, 0].tolist() == [3.0, 5.0]
+
+    def test_solve_problem3_rejects_ragged_b_max(self):
+        with pytest.raises(ValueError, match="must match h shape"):
+            amp.solve_problem3([1.0, 2.0, 3.0], 1e-7, 10, [1.0, 1.0])
+        with pytest.raises(ValueError, match="must match h shape"):
+            amp.solve_problem3([1.0, 2.0, 3.0], 1e-7, 10,
+                               [1.0, 1.0, 1.0, 9.0])
+
+    def test_structural_signature_collapses_batchables(self):
+        a = _structural_signature(SweepSpec(ridge_spec(),
+                                            {"seed": (0,)}).points()[0].spec)
+        b = _structural_signature(
+            SweepSpec(ridge_spec(), {"seed": (7,), "noise_var": (3e-7,),
+                                     "s_target": (0.9,)}).points()[0].spec)
+        assert a == b
+        c = _structural_signature(
+            SweepSpec(ridge_spec(),
+                      {"scheme": ("benchmark1",)}).points()[0].spec)
+        assert a != c
+
+
+class TestBatchedSequentialParity:
+    """Each batchable axis, alone and composed with block fading (the
+    channel redraw + Problem-3 re-optimization then run vmapped inside the
+    scan), against independent sequential engine runs."""
+
+    AXES = [
+        {"seed": (0, 1, 2)},
+        {"noise_var": (0.0, 1e-7, 1e-6)},
+        {"eta": (0.005, 0.01, 0.02)},
+        {"s_target": (0.98, 0.99, 0.995)},
+        {"b_max": (1.0, math.sqrt(5.0))},
+        {"channel_mean": (1e-3, 2e-3)},
+        {"seed": (0, 1), "noise_var": (1e-7, 1e-6)},
+    ]
+
+    @pytest.mark.parametrize("fading", [False, True], ids=["fixed", "fading"])
+    @pytest.mark.parametrize("axes", AXES,
+                             ids=lambda a: "+".join(a))
+    def test_axis_parity_ridge(self, axes, fading):
+        assert_parity(SweepSpec(ridge_spec(fading), axes))
+
+    def test_grad_bound_axis_parity(self):
+        # a scheme that actually consumes G in the round math
+        assert_parity(SweepSpec(ridge_spec(scheme="benchmark1"),
+                                {"grad_bound": (10.0, 25.0, 50.0)}))
+
+    def test_kernels_backend_parity(self):
+        # the figure benchmarks sweep on the kernels backend; on non-TPU
+        # hosts its ops are the XLA oracles, which vmap like the rest
+        assert_parity(SweepSpec(ridge_spec(backend="kernels"),
+                                {"seed": (0, 1), "noise_var": (1e-7, 1e-6)}))
+
+    def test_seeds_parity_mnist_composed_scenario_axes(self):
+        # partial participation + adamw + H=2 local steps are structural;
+        # the seed axis batches the participation draws, channel, and noise
+        spec = mnist_spec(participation=0.5, server_opt="adamw",
+                          local_steps=2, local_lr=0.05)
+        assert_parity(SweepSpec(spec, {"seed": (0, 1, 2)}))
+
+    def test_matches_independent_experiment_runs(self):
+        """The acceptance contract, literally: the batched sweep against N
+        freshly-constructed ``Experiment.run`` trajectories."""
+        sweep = SweepSpec(ridge_spec(True), {"seed": (0, 1, 2),
+                                             "noise_var": (1e-7, 1e-6)})
+        res = run_sweep(sweep, ROUNDS)
+        for i, pt in enumerate(sweep.points()):
+            e = Experiment(pt.spec)
+            e.run(ROUNDS)
+            assert e.history["round"] == res.rounds
+            assert e.history["eval_round"] == res.eval_rounds
+            for key in ("gap", "loss", "update_norm", "tx_energy", "eta"):
+                np.testing.assert_allclose(
+                    res.history[key][i], np.asarray(e.history[key]),
+                    rtol=RTOL, atol=1e-7, err_msg=f"{key} point {pt.coords}")
+
+    def test_structural_axis_grouping(self):
+        """A structural axis splits into sub-batches; every sub-batch still
+        matches its sequential twin and the grid layout is preserved."""
+        sweep = SweepSpec(ridge_spec(),
+                          {"scheme": ("normalized", "benchmark1"),
+                           "seed": (0, 1)})
+        res = assert_parity(sweep)
+        grid = res.grid("gap")
+        assert grid.shape[:2] == (2, 2)
+        # the two schemes genuinely differ; the two seeds genuinely differ
+        assert not np.allclose(grid[0, 0], grid[1, 0])
+        assert not np.allclose(grid[0, 0], grid[0, 1])
+
+    def test_band_reduces_seed_axis(self):
+        sweep = SweepSpec(ridge_spec(), {"s_target": (0.98, 0.99),
+                                         "seed": (0, 1, 2)})
+        res = run_sweep(sweep, ROUNDS)
+        mean, std = res.band("gap", over="seed")
+        grid = res.grid("gap")
+        np.testing.assert_allclose(mean, grid.mean(axis=1))
+        np.testing.assert_allclose(std, grid.std(axis=1))
+        assert mean.shape == (2, len(res.eval_rounds))
+
+    def test_point_index(self):
+        sweep = SweepSpec(ridge_spec(), {"s_target": (0.98, 0.99),
+                                         "seed": (0, 1, 2)})
+        res = run_sweep(sweep, ROUNDS, evaluate=False)
+        i = res.point_index(s_target=0.99, seed=2)
+        assert res.points[i].coords == (("s_target", 0.99), ("seed", 2))
+
+    def test_mixed_task_metrics_raise(self):
+        base = dataclasses.replace(ridge_spec(), model=ModelSpec(kind="auto"))
+        sweep = SweepSpec(base, {"dataset": ("ridge", "synthetic_mnist")})
+        with pytest.raises(ValueError, match="history keys"):
+            run_sweep(sweep, 2)
+
+
+class TestRunBatchedValidation:
+    def _cfg_state(self, **kw):
+        spec = ridge_spec(**kw)
+        from repro.fl.tasks import build_task
+        task = build_task(spec.data, spec.model, K)
+        cfg = spec.fl_config()
+        return cfg, rt.setup(cfg, task.params0, task.model_dim), task
+
+    def test_structural_mismatch_raises(self):
+        c1, s1, task = self._cfg_state()
+        c2, s2, _ = self._cfg_state(scheme="benchmark1")
+        with pytest.raises(ValueError, match="structurally identical"):
+            rt.run_batched([c1, c2], [s1, s2], task.grad_fn,
+                           task.batch_provider, 2)
+
+    def test_mesh_backend_raises(self):
+        c, s, task = self._cfg_state()
+        c = dataclasses.replace(c, backend="mesh")
+        with pytest.raises(ValueError, match="mesh"):
+            rt.run_batched([c], [s], task.grad_fn, task.batch_provider, 2)
+
+    def test_round_counter_mismatch_raises(self):
+        c, s1, task = self._cfg_state()
+        _, s2, _ = self._cfg_state()
+        s2.round = 5
+        with pytest.raises(ValueError, match="round counter"):
+            rt.run_batched([c, c], [s1, s2], task.grad_fn,
+                           task.batch_provider, 2)
+
+
+class TestProblem3VmapBitwise:
+    """The sweep engine's block-fading path vmaps the Algorithm-1 bisection;
+    ``lax.while_loop``'s batching rule freezes converged lanes, so every
+    lane must equal its solo solve BITWISE."""
+
+    def test_vmapped_solver_bitwise(self):
+        rng = np.random.default_rng(0)
+        h = jnp.asarray(rng.rayleigh(1e-3, (5, 12)), jnp.float32)
+        nv = jnp.asarray([1e-7, 5e-7, 1e-6, 0.0, 2e-7], jnp.float32)
+        bm = jnp.asarray([1.0, 2.0, 0.5, 1.5, math.sqrt(5.0)], jnp.float32)
+        batched = jax.jit(jax.vmap(
+            lambda hh, v, b: amp.solve_problem3_jax(hh, v, 500, b)))(h, nv, bm)
+        for e in range(5):
+            solo = amp.solve_problem3_jax(h[e], nv[e], 500, bm[e])
+            np.testing.assert_array_equal(np.asarray(batched.b[e]),
+                                          np.asarray(solo.b))
+            np.testing.assert_array_equal(np.asarray(batched.Z[e]),
+                                          np.asarray(solo.Z))
+
+
+class TestPlanChunksProperty:
+    @staticmethod
+    def _check(t0, num_rounds, eval_every, chunk_size):
+        chunks = rt._plan_chunks(t0, num_rounds, eval_every, chunk_size)
+        flat = [t for c in chunks for t in c]
+        assert flat == list(range(t0 + 1, t0 + num_rounds + 1))
+        assert all(chunks), "no empty chunks"
+        assert all(len(c) <= chunk_size for c in chunks)
+        if eval_every is not None:
+            ends = {c[-1] for c in chunks}
+            for t in flat:
+                if t == 1 or t % eval_every == 0:
+                    assert t in ends, (t, chunks)
+
+    def test_partition_exhaustive_small(self):
+        """Deterministic companion of the property test (which needs the
+        optional hypothesis dep): every (t0, rounds, eval, chunk) combo of a
+        small grid partitions exactly and ends chunks on eval rounds."""
+        for t0 in (0, 1, 7):
+            for num_rounds in (1, 2, 5, 16):
+                for eval_every in (None, 1, 3, 5, 16):
+                    for chunk_size in (1, 3, 4, 32):
+                        self._check(t0, num_rounds, eval_every, chunk_size)
+
+    @settings(max_examples=60, deadline=None)
+    @given(t0=st.integers(0, 50), num_rounds=st.integers(1, 60),
+           eval_every=st.one_of(st.none(), st.integers(1, 13)),
+           chunk_size=st.integers(1, 20))
+    def test_partition_and_eval_boundaries(self, t0, num_rounds, eval_every,
+                                           chunk_size):
+        self._check(t0, num_rounds, eval_every, chunk_size)
+
+
+class TestCacheIntrospection:
+    def test_cache_info_shape(self):
+        info = rt.cache_info()
+        assert info["cache_size"] == rt.ENGINE_CACHE_SIZE >= 1
+        assert set(info["builders"]) == {"round_step", "run_chunk",
+                                         "run_chunk_batched",
+                                         "fading_refresh"}
+        for stats in info["builders"].values():
+            assert {"hits", "misses", "maxsize", "currsize"} <= set(stats)
+
+    def test_repeat_sweep_zero_retraces(self):
+        sweep = SweepSpec(ridge_spec(), {"seed": (0, 1)})
+        run_sweep(sweep, 4)                       # compile
+        before = dict(rt.TRACE_COUNTS)
+        run_sweep(sweep, 4)                       # same shapes: cached
+        assert dict(rt.TRACE_COUNTS) == before
+
+    def test_cache_size_env_override(self):
+        code = ("import os; os.environ['REPRO_ENGINE_CACHE_SIZE'] = '7'; "
+                "from repro.fed import runtime; "
+                "assert runtime.ENGINE_CACHE_SIZE == 7; "
+                "assert runtime.cache_info()['cache_size'] == 7; "
+                "print('ENV_OK')")
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True,
+                           env=dict(os.environ, PYTHONPATH="src"),
+                           cwd=os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))), timeout=120)
+        assert "ENV_OK" in r.stdout, r.stderr[-2000:]
+
+    def test_task_cache_info(self):
+        from repro.fl.tasks import task_cache_info
+        info = task_cache_info()
+        assert {"hits", "misses", "maxsize", "currsize"} <= set(info)
+
+
+class TestExperimentSharding:
+    def test_single_device_returns_no_mesh(self):
+        from repro.distribution import sharding
+        if jax.local_device_count() == 1:
+            assert sharding.experiment_mesh(4) is None
+        # an experiment count the devices don't divide never shards
+        assert sharding.experiment_mesh(jax.local_device_count() + 1) is None
+
+    @pytest.mark.slow
+    def test_sharded_sweep_matches_sequential(self):
+        """4 forced host devices, E=4: the experiment axis shards over the
+        mesh and the histories still match the sequential runs."""
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        from repro.core.channel import ChannelConfig
+        from repro.distribution import sharding
+        from repro.fed.runtime import FLConfig
+        from repro.fl import (DataSpec, EvalSpec, ExperimentSpec, ModelSpec,
+                              SweepSpec, run_sweep)
+
+        assert jax.local_device_count() == 4
+        assert sharding.experiment_mesh(4) is not None
+        assert sharding.experiment_mesh(6) is None
+
+        spec = ExperimentSpec(
+            fl=FLConfig(num_devices=4, scheme="normalized", case="II",
+                        eta=0.01,
+                        channel=ChannelConfig(num_devices=4,
+                                              channel_mean=1e-3,
+                                              block_fading=True),
+                        grad_bound=25.0, s_target=0.995, smoothness_L=2.0,
+                        strong_convexity_M=0.5, seed=0),
+            data=DataSpec(dataset="ridge", split="iid", num_train=200,
+                          dim=8, batch_size=16, seed=3),
+            model=ModelSpec(kind="ridge"), eval=EvalSpec(every=4),
+            chunk_size=4)
+        sweep = SweepSpec(spec, {"seed": (0, 1, 2, 3)})
+        res_sharded = run_sweep(sweep, 8, shard=True)
+        res_seq = run_sweep(sweep, 8, vectorized=False)
+        for key in res_sharded.history:
+            np.testing.assert_allclose(res_sharded.history[key],
+                                       res_seq.history[key], rtol=2e-5,
+                                       atol=1e-7, err_msg=key)
+        print("SHARDED_SWEEP_PARITY_OK")
+        """
+        r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                           capture_output=True, text=True,
+                           env=dict(os.environ, PYTHONPATH="src"),
+                           timeout=600,
+                           cwd=os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))))
+        assert "SHARDED_SWEEP_PARITY_OK" in r.stdout, r.stderr[-2500:]
