@@ -12,6 +12,8 @@ import json
 import os
 from typing import List, Tuple
 
+import numpy as np
+
 from benchmarks.common import (CaseIExperiment, CaseIIExperiment,
                                SEED_REPLICATES, timed_sweep)
 
@@ -300,6 +302,104 @@ def scenario_axes(rounds: int = 120) -> List[Tuple[str, float, str]]:
         rows.append((f"scenario/{name}", us,
                      f"final_acc={acc:.4f};total_tx_energy={energy:.1f}"))
     _dump("scenarios", dump)
+    return rows
+
+
+def channel_rounds_per_sec(rounds: int = 256,
+                           repeats: int = 2) -> List[Tuple[str, float, str]]:
+    """Wireless-environment engine overhead: scan rounds/sec of the ridge
+    task (overhead-bound rounds — the regime where channel work shows)
+    across radio environments: fixed channel, i.i.d. block fading, AR(1)
+    correlated fading, and AR(1) + imperfect CSI.  Every time-varying
+    variant redraws the channel AND re-solves Problem 3 (on ``h_hat``)
+    inside the scan, so this measures the in-scan re-solve + estimation
+    cost directly; the CSI variant must stay within 2x of plain fading
+    (asserted — a regression in the scan-safe refresh shows up here before
+    it shows up in a sweep)."""
+    import dataclasses
+    import time
+
+    from repro.fl import Experiment
+    from benchmarks.common import CaseIIExperiment
+
+    exp = CaseIIExperiment()
+    base = dataclasses.replace(exp.spec(exp.config(), evaluate=False),
+                               chunk_size=rounds)       # one scan per run
+    def env(**chkw):
+        channel = dataclasses.replace(base.fl.channel, **chkw)
+        return dataclasses.replace(
+            base, fl=dataclasses.replace(base.fl, channel=channel))
+
+    variants = {
+        "fixed": base,
+        "iid_fading": env(block_fading=True),
+        "ar1": env(model="ar1", rho=0.9),
+        "ar1_csi": env(model="ar1", rho=0.9, csi_error=0.2),
+    }
+    rows, dump = [], {}
+    rps = {}
+    for name, spec in variants.items():
+        e = Experiment(spec)
+        e.run(rounds)                                    # warm-up + compile
+        dt = float("inf")
+        for _ in range(repeats):
+            e.reset()
+            t0 = time.perf_counter()
+            e.run(rounds)
+            dt = min(dt, time.perf_counter() - t0)
+        rps[name] = rounds / dt
+        rows.append((f"channel/{name}", dt / rounds * 1e6,
+                     f"rounds_per_sec={rps[name]:.1f}"))
+    overhead = rps["iid_fading"] / rps["ar1_csi"]
+    if overhead > 2.0:
+        raise AssertionError(
+            "in-scan AR(1)+CSI refresh costs "
+            f"{overhead:.2f}x plain block fading (> 2x budget)")
+    rows.append(("channel/csi_overhead", 0.0,
+                 f"fading_over_ar1_csi={overhead:.2f}x"))
+    _dump("channel", {"rounds": rounds, "rounds_per_sec": rps,
+                      "csi_overhead_vs_fading": overhead})
+    return rows
+
+
+def csi_robustness(rounds: int = 400,
+                   seeds: int = SEED_REPLICATES) -> List[Tuple[str, float, str]]:
+    """CSI-robustness figure: the proposed normalized-gradient scheme vs
+    the max-norm Benchmark I across CSI-error levels (block fading, so the
+    per-round re-solve runs on every round's noisy estimate).  One sweep:
+    scheme (structural, 2 sub-batches) x csi_error (batchable) x seed
+    (batchable), dumped with seed-replicate bands via ``SweepResult.band``."""
+    import dataclasses
+
+    from benchmarks.common import CaseIIExperiment, seed_axis, timed_sweep
+    from repro.fl import SweepSpec
+
+    exp = CaseIIExperiment()
+    base = exp.spec(exp.config(), eval_every=max(rounds // 10, 5))
+    channel = dataclasses.replace(base.fl.channel, block_fading=True)
+    base = dataclasses.replace(
+        base, fl=dataclasses.replace(base.fl, channel=channel))
+    sweep = SweepSpec(base, {"scheme": ("normalized", "benchmark1"),
+                             "csi_error": (0.0, 0.1, 0.3, 0.6),
+                             "seed": seed_axis(seeds)})
+    res, us = timed_sweep(sweep, rounds)
+    mean, std = res.band("gap", over="seed")      # [scheme, csi, evals]
+    err_mean, _ = res.band("csi_gain_err", over="seed")
+    rows, curves = [], {}
+    for i, scheme in enumerate(res.sweep.values("scheme")):
+        for j, err in enumerate(res.sweep.values("csi_error")):
+            curves[f"{scheme}/csi={err}"] = {
+                "round": res.eval_rounds,
+                "gap": mean[i, j].tolist(),
+                "gap_std": std[i, j].tolist(),
+                "mean_abs_csi_gain_err": float(
+                    np.abs(err_mean[i, j]).mean()),
+                "seeds": seeds,
+            }
+            rows.append((f"csi_robustness/{scheme}/csi={err}", us,
+                         f"final_gap={mean[i, j][-1]:.5f}"
+                         f"+-{std[i, j][-1]:.5f}"))
+    _dump("csi_robustness", curves)
     return rows
 
 

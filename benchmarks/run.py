@@ -52,6 +52,12 @@ def main() -> None:
         # keeps enough rounds that the per-run host assembly amortizes —
         # the measurement targets the engine, not the stacking)
         ("sweep", lambda: figures.sweep_rounds_per_sec(r(256, 128))),
+        # the wireless-environment subsystem: in-scan channel refresh
+        # overhead (fixed vs fading vs AR(1) vs AR(1)+imperfect-CSI; the
+        # CSI re-solve must stay within 2x of plain fading, asserted) and
+        # the CSI-robustness figure (scheme x csi_error x seed bands)
+        ("channel", lambda: figures.channel_rounds_per_sec(r(256, 96))),
+        ("csi_robustness", lambda: figures.csi_robustness(r(400, 60))),
         # the declarative spec axes: server optimizer / local steps /
         # partial participation, each one field on the baseline spec
         ("scenarios", lambda: figures.scenario_axes(r(120, 30))),
@@ -62,16 +68,24 @@ def main() -> None:
         benches = [b for b in benches if b[0] in keep]
 
     print("name,us_per_call,derived")
+    failed = []
     for name, fn in benches:
         t0 = time.time()
         try:
             rows = fn()
         except Exception as e:  # keep the harness alive; report the failure
             print(f"{name},0,ERROR={e!r}", flush=True)
+            failed.append(name)
             continue
         for row in rows:
             print(",".join(str(c) for c in row), flush=True)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        # the CI smoke relies on in-benchmark assertions (e.g. the channel
+        # benchmark's 2x CSI-refresh budget) actually failing the job — a
+        # swallowed error must not exit 0
+        print(f"# FAILED: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""Composable wireless-environment subsystem.
+
+One ``ChannelModel`` registry (``repro.channels.base``) behind three
+orthogonal axes of the radio environment, all declarative via
+``ChannelConfig`` / ``ExperimentSpec`` and sweepable (``channel.model``,
+``channel.rho``, ``channel.csi_error``, ...):
+
+* **small-scale process** (``models``): i.i.d. Rayleigh (the bitwise
+  default), Rician with K-factor, time-correlated Gauss-Markov AR(1);
+* **large-scale geometry** (``geometry``): per-device distances ->
+  path loss + log-normal shadowing -> heterogeneous per-device means;
+* **imperfect CSI** (``csi``): the true ``h`` (the air) vs the server's
+  estimate ``h_hat`` (amplification + receiver gain).
+"""
+from repro.channels.base import ChannelModel, get, names, register
+from repro.channels.csi import CSI_ERROR_MODELS, estimate
+from repro.channels.geometry import (GeometryConfig, draw_distances,
+                                     relative_gains)
+from repro.channels import models as _models  # noqa: F401  (registers)
+from repro.channels import csi, geometry  # noqa: F401
+
+__all__ = ["CSI_ERROR_MODELS", "ChannelModel", "GeometryConfig", "csi",
+           "draw_distances", "estimate", "geometry", "get", "names",
+           "register", "relative_gains"]

@@ -1,0 +1,87 @@
+"""The channel-model registry: every radio environment the FL system can
+run over is ONE ``ChannelModel`` record here, consumed by both runtime
+drivers, the vectorized sweep engine, and ``setup()``.
+
+A model describes the *small-scale* fading process of the uplink amplitudes
+``h_k``.  It is deliberately tiny — two pure functions over a PRNG key and a
+(possibly per-device ``[K]``, possibly traced) amplitude scale — because
+everything around it is owned elsewhere:
+
+* **large-scale** structure (path loss from device geometry, log-normal
+  shadowing) enters through the ``scale`` argument
+  (``repro.channels.geometry`` turns a ``GeometryConfig`` into per-device
+  scales at ``setup()`` time);
+* **imperfect CSI** is applied *after* the draw (``repro.channels.csi``
+  splits the true ``h`` from the server's estimate ``h_hat``);
+* the redraw *schedule* (fixed vs per-round) is the runtime's: a model with
+  ``time_varying=True`` (AR(1)) forces per-round steps, otherwise
+  ``ChannelConfig.block_fading`` decides.
+
+Both functions must be jit/vmap/scan-safe: the compiled FL engine calls
+``step`` inside its ``lax.scan`` body (and the sweep engine vmaps that body
+over an experiment axis), so a model may not branch on traced values at the
+Python level.
+
+Registering is the only extension step::
+
+    register(ChannelModel(name="mymodel", init=..., step=...))
+
+after which ``ChannelConfig(model="mymodel")`` validates, sweeps accept a
+``channel.model`` axis, and both drivers run it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+# init(cfg, scale, key)            -> (h0 [K], state0 or None)
+# step(cfg, scale, key_t, state, rho) -> (h_t [K], state_t or None)
+InitFn = Callable[..., Tuple[jax.Array, Optional[jax.Array]]]
+StepFn = Callable[..., Tuple[jax.Array, Optional[jax.Array]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """One small-scale fading process.
+
+    ``init`` draws the round-0 channel (host-side, at ``setup()``);
+    ``step`` draws the round-t channel from an already-``fold_in``-ed key
+    (device-side, inside the scan when the channel is time-varying).
+    ``has_state`` models thread a persistent array (the AR(1) Gauss-Markov
+    innovation state, shape [K, 2]) through the scan carry, ``FLState``, and
+    checkpoints; stateless models carry ``None``.
+    """
+
+    name: str
+    init: InitFn
+    step: StepFn
+    doc: str = ""
+    # True: the channel evolves every round regardless of block_fading
+    # (block fading is this process with correlation rho = 0)
+    time_varying: bool = False
+    # True: step() consumes/produces a [K, 2] persistent fading state
+    has_state: bool = False
+
+
+_REGISTRY: Dict[str, ChannelModel] = {}
+
+
+def register(model: ChannelModel) -> ChannelModel:
+    if not isinstance(model, ChannelModel):
+        raise TypeError(f"expected a ChannelModel, got {type(model)}")
+    _REGISTRY[model.name] = model
+    return model
+
+
+def get(name: str) -> ChannelModel:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown channel model {name!r}; "
+                         f"registered: {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

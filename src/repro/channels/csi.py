@@ -1,0 +1,51 @@
+"""Imperfect channel-state information: the ``h`` vs ``h_hat`` split.
+
+The air superposes with the TRUE amplitudes ``h_k`` (eq. 10); the server
+only ever sees its ESTIMATE ``h_hat_k``, so Algorithm-1 amplification
+(Problem 3 solved on ``h_hat``), the receiver gain ``a``, the participation
+rescale, and the side-info folding all run on ``h_hat``.  The gap between
+the designed effective gain ``a sum_k h_hat_k b_k`` and the realized one
+``a sum_k h_k b_k`` is the per-round ``csi_gain_err`` diagnostic
+(``repro.fed.runtime.DIAG_KEYS``).
+
+Two estimation-error models (``ChannelConfig.csi_error_model``), both
+scaled by the dimensionless ``ChannelConfig.csi_error`` (0 = perfect CSI):
+
+``additive``         h_hat = |h + csi_error * scale * e|,  e ~ N(0, I)
+                     — pilot-estimation noise whose std is ``csi_error``
+                     channel-widths (``scale`` is the amplitude scale, so
+                     geometry-heterogeneous devices get proportionally
+                     scaled estimation noise)
+``multiplicative``   h_hat = h * |1 + csi_error * e|
+                     — relative (quantization/feedback-style) error
+
+Both take the magnitude so ``h_hat`` stays a valid non-negative amplitude
+for the Problem-3 solvers, and both are EXACT at ``csi_error = 0`` — even
+as a traced zero (``0 * e`` vanishes bitwise), which is what lets a batched
+sweep carry perfect- and imperfect-CSI lanes in one compiled program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CSI_ERROR_MODELS = ("additive", "multiplicative")
+
+
+def estimate(h: jax.Array, key: jax.Array, csi_error, scale,
+             model: str = "additive") -> jax.Array:
+    """The server's channel estimate ``h_hat`` for a true draw ``h``.
+
+    ``csi_error`` and ``scale`` may be traced (per-experiment sweep lanes)
+    or python floats; ``scale`` may also be a per-device ``[K]`` vector.
+    jit/vmap/scan-safe — the compiled engine re-estimates every round's
+    ``h_hat_t`` inside its scan body under time-varying fading.
+    """
+    if model not in CSI_ERROR_MODELS:
+        raise ValueError(f"unknown csi_error_model {model!r}; "
+                         f"one of {CSI_ERROR_MODELS}")
+    e = jax.random.normal(key, h.shape, h.dtype)
+    err = jnp.asarray(csi_error, h.dtype)
+    if model == "additive":
+        return jnp.abs(h + err * jnp.asarray(scale, h.dtype) * e)
+    return h * jnp.abs(1.0 + err * e)

@@ -1,0 +1,78 @@
+"""Large-scale channel structure: device geometry -> per-device mean gains.
+
+The paper collapses the uplink budget to one scalar ``channel_mean`` (free
+space over 300 m at 3.5 GHz for every device).  Real cohorts are spread over
+a cell: each device k sits at its own distance ``d_k``, so its mean
+amplitude is
+
+    mean_k = channel_mean * (d_k / ref_distance)^(-path_loss_exp / 2)
+                          * 10^(X_k / 20),     X_k ~ N(0, shadowing_std_db^2)
+
+— ``channel_mean`` stays the single batchable knob (the gain AT the
+reference distance), the path-loss exponent acts on *power* (hence the /2 on
+the amplitude), and the optional log-normal shadowing term models
+building/terrain blockage.  Distances are drawn uniformly **by area** over
+the annulus [min_distance, cell_radius] (closer-in rings hold fewer devices)
+from the experiment's channel seed, host-side at ``setup()`` time; the
+resulting per-device scale vector rides into the compiled engine as data
+(``FLState.scale``), so in-scan fading redraws see the heterogeneous means
+with no extra trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometryConfig:
+    """Static cell geometry behind heterogeneous per-device channel means."""
+
+    cell_radius: float = 500.0       # outer annulus radius [m]
+    min_distance: float = 50.0       # closest a device can sit to the ES [m]
+    ref_distance: float = 300.0      # distance at which mean == channel_mean
+    path_loss_exp: float = 3.0       # power path-loss exponent gamma
+    shadowing_std_db: float = 0.0    # log-normal shadowing sigma (dB); 0 = off
+
+    def __post_init__(self):
+        if not 0.0 < self.min_distance <= self.cell_radius:
+            raise ValueError(
+                "need 0 < min_distance <= cell_radius, got "
+                f"min_distance={self.min_distance}, "
+                f"cell_radius={self.cell_radius}")
+        if self.ref_distance <= 0.0:
+            raise ValueError(f"ref_distance must be positive, got "
+                             f"{self.ref_distance}")
+        if self.path_loss_exp < 0.0:
+            raise ValueError(f"path_loss_exp must be >= 0, got "
+                             f"{self.path_loss_exp}")
+        if self.shadowing_std_db < 0.0:
+            raise ValueError(f"shadowing_std_db must be >= 0, got "
+                             f"{self.shadowing_std_db}")
+
+
+def draw_distances(key: jax.Array, geo: GeometryConfig,
+                   num_devices: int) -> np.ndarray:
+    """[K] device-to-ES distances, uniform by area over the annulus."""
+    u = np.asarray(jax.random.uniform(key, (num_devices,)), np.float64)
+    r2 = geo.min_distance ** 2 + u * (geo.cell_radius ** 2
+                                      - geo.min_distance ** 2)
+    return np.sqrt(r2)
+
+
+def relative_gains(key: jax.Array, geo: GeometryConfig,
+                   num_devices: int) -> np.ndarray:
+    """[K] per-device mean-amplitude gains RELATIVE to ``channel_mean``
+    (i.e. mean_k = channel_mean * relative_gains(...)[k]): path loss at the
+    drawn distance plus optional log-normal shadowing.  Deterministic in the
+    key; float64 host-side (this feeds ``setup()``, not the scan)."""
+    d = draw_distances(key, geo, num_devices)
+    gains = (d / geo.ref_distance) ** (-geo.path_loss_exp / 2.0)
+    if geo.shadowing_std_db > 0.0:
+        x_db = geo.shadowing_std_db * np.asarray(
+            jax.random.normal(jax.random.fold_in(key, 1), (num_devices,)),
+            np.float64)
+        gains = gains * 10.0 ** (x_db / 20.0)
+    return gains

@@ -1,0 +1,94 @@
+"""The registered small-scale fading processes.
+
+All three models draw the amplitude as the envelope of a 2-component
+Gaussian (the I/Q pair of a complex-Gaussian channel tap), through the SAME
+primitive the historical i.i.d. path used (``core.channel``), so the default
+``rayleigh`` model is bitwise-identical to the pre-registry draw and the
+AR(1) model at ``rho = 0`` is bitwise-identical to block fading:
+
+``rayleigh``   h = scale * |x|,            x ~ N(0, I_2)   (the paper, Sec. V)
+``rician``     h = scale * |x + nu e_1|,   nu = sqrt(2 K)  (LOS + scatter;
+               ``scale`` is calibrated by ``ChannelConfig.amplitude_scale``
+               so E[h] still equals ``channel_mean`` at every K-factor)
+``ar1``        x_t = rho x_{t-1} + sqrt(1 - rho^2) w_t,  h_t = scale * |x_t|
+               (Gauss-Markov / Jakes-flavoured time correlation; the state
+               x_t threads through the scan carry and ``FLState.fad_state``,
+               and the stationary marginal of h_t is exactly the i.i.d.
+               Rayleigh of the same scale)
+
+``scale`` may be a scalar, a per-device ``[K]`` vector (geometry-derived
+heterogeneous means), or a traced value (the batched sweep engine's
+``channel_mean`` axis); ``rho`` likewise (the ``channel.rho`` sweep axis).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.channels.base import ChannelModel, register
+from repro.core import channel as chan
+
+
+def _rayleigh_init(cfg, scale, key):
+    return chan.draw_channel(key, cfg, scale), None
+
+
+def _rayleigh_step(cfg, scale, key_t, state, rho):
+    return chan.draw_channel(key_t, cfg, scale), None
+
+
+register(ChannelModel(
+    name="rayleigh",
+    doc="i.i.d. Rayleigh envelope (the paper's model; bitwise-compatible "
+        "default)",
+    init=_rayleigh_init,
+    step=_rayleigh_step,
+))
+
+
+def _rician_offset(cfg) -> float:
+    # K-factor K = nu^2 / (2 sigma^2) with unit per-component variance
+    return math.sqrt(2.0 * cfg.rician_k)
+
+
+def _rician_draw(cfg, scale, key):
+    x = chan.draw_fading_state(key, cfg.num_devices)
+    x = x + jnp.asarray([_rician_offset(cfg), 0.0], x.dtype)
+    return chan.envelope(x, scale), None
+
+
+register(ChannelModel(
+    name="rician",
+    doc="Rician envelope with K-factor cfg.rician_k (LOS component); "
+        "K = 0 degenerates to Rayleigh",
+    init=lambda cfg, scale, key: _rician_draw(cfg, scale, key),
+    step=lambda cfg, scale, key_t, state, rho: _rician_draw(cfg, scale,
+                                                            key_t),
+))
+
+
+def _ar1_init(cfg, scale, key):
+    x = chan.draw_fading_state(key, cfg.num_devices)
+    return chan.envelope(x, scale), x
+
+
+def _ar1_step(cfg, scale, key_t, state, rho):
+    w = chan.draw_fading_state(key_t, cfg.num_devices)
+    rho = jnp.asarray(rho, w.dtype)
+    x = rho * state + jnp.sqrt(1.0 - rho * rho) * w
+    return chan.envelope(x, scale), x
+
+
+register(ChannelModel(
+    name="ar1",
+    doc="time-correlated Rayleigh: Gauss-Markov AR(1) on the underlying "
+        "complex tap, correlation cfg.rho per round; rho = 0 IS block "
+        "fading (bitwise), and the stationary marginal is the i.i.d. "
+        "Rayleigh of the same scale",
+    time_varying=True,
+    has_state=True,
+    init=_ar1_init,
+    step=_ar1_step,
+))

@@ -51,13 +51,23 @@ def save(path: str, tree: PyTree, metadata: Optional[Dict] = None) -> None:
     os.replace(tmp, path)
 
 
-def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict]:
+def restore(path: str, like: PyTree,
+            missing_ok: Tuple[str, ...] = ()) -> Tuple[PyTree, Dict]:
     """Restore into the structure of ``like`` (shape/dtype checked).
 
     A ``like`` leaf that is a *numpy* array round-trips as numpy with its own
     dtype — float64 host-side state (e.g. the FL channel draw) must not be
     silently truncated to fp32 by passing through jnp, which is the fate of
     every jax-array leaf (device arrays follow jax's default precision).
+
+    ``missing_ok`` is a tuple of key-path prefixes (``jax.tree_util.keystr``
+    form, e.g. ``"['channel']"``) whose leaves MAY be absent from the
+    checkpoint: they keep ``like``'s own value instead of raising
+    ``KeyError`` — scoped forward compatibility for state that grows fields
+    over time (checkpoints written before the wireless-environment
+    subsystem lack the ``h_hat``/``fad_state`` channel leaves and restore
+    with the freshly-``setup()`` defaults), without silently accepting a
+    checkpoint whose params/optimizer structure does not match.
     """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
@@ -66,6 +76,9 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict]:
     out = {}
     for k, ref in leaves_like.items():
         if k not in stored:
+            if any(k.startswith(p) for p in missing_ok):
+                out[k] = ref
+                continue
             raise KeyError(f"checkpoint missing leaf {k}")
         arr = _decode_array(stored[k])
         if tuple(arr.shape) != tuple(np.shape(ref)):

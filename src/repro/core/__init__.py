@@ -1,7 +1,9 @@
 """Paper core: over-the-air normalized-gradient aggregation + theory."""
 from repro.core.channel import (ChannelConfig, draw_channel, channel_for_round,
-                                draw_noise, DEFAULT_B_MAX, DEFAULT_CHANNEL_MEAN,
-                                DEFAULT_NOISE_VAR, DEFAULT_THETA_TH)
+                                draw_fading_state, draw_noise, envelope,
+                                DEFAULT_B_MAX, DEFAULT_CHANNEL_MEAN,
+                                DEFAULT_MODEL, DEFAULT_NOISE_VAR,
+                                DEFAULT_THETA_TH)
 from repro.core.ota import (OTAConfig, BACKENDS, aggregate,
                             apply_update, device_transform, superpose,
                             server_post, per_device_norm, per_device_sq_norm,

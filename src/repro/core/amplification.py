@@ -20,6 +20,18 @@ solve, matching the paper's ``O(log2(eps_b) (K+1)^3)`` claim.
 After Problem 3, Case I picks ``S*`` by eq. (26) and ``a = 1/(S sum h_k b_k)``;
 Case II picks ``a * eta`` from eq. (30) given a target contraction ``s=q_max``.
 
+Imperfect CSI (``repro.channels.csi``): the ``h`` these solvers receive is
+whatever channel knowledge the CALLER has.  The FL runtime hands them the
+server's estimate ``h_hat`` — Algorithm 1, the receiver gain, and the
+participation rescale are all server-side computations, so under
+``ChannelConfig.csi_error > 0`` the optimized ``b, a`` are optimal for the
+*estimated* channel while the air applies the true one; the induced
+effective-gain misalignment is the runtime's ``csi_gain_err`` diagnostic.
+The solvers themselves are CSI-agnostic — both accept any non-negative
+amplitude vector (and ``solve_problem3_jax`` stays jit/vmap/scan-safe on a
+traced one, which is how in-scan refreshes re-optimize on every round's
+fresh estimate).
+
 Two interchangeable Problem-3 solvers live here:
 
 ``solve_problem3``      float64 NumPy+SciPy (bisection + L-BFGS-B inner convex

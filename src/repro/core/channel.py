@@ -8,21 +8,40 @@ unit-mean Rayleigh draw) and AWGN with variance ``sigma^2 = 1e-7``.
 On a TPU mesh there is no radio: the channel is *simulated* deterministically
 from a JAX PRNG key so an entire FL round — including the "air" — is a single
 jittable, shardable program (see DESIGN.md Sec. 2).
+
+Beyond the paper's scalar-mean i.i.d. Rayleigh, ``ChannelConfig`` now
+describes a full radio environment through the composable
+``repro.channels`` subsystem:
+
+* ``model`` selects the small-scale fading process from the channel-model
+  registry (``'rayleigh'`` — the bitwise-compatible default — ``'rician'``
+  with K-factor ``rician_k``, or time-correlated ``'ar1'`` Gauss-Markov
+  fading with per-round correlation ``rho``);
+* ``geometry`` (a ``repro.channels.geometry.GeometryConfig``) replaces the
+  single ``channel_mean`` with per-device means from drawn distances ->
+  path loss (+ optional log-normal shadowing);
+* ``csi_error`` / ``csi_error_model`` split the TRUE ``h`` seen by the air
+  from the server's ESTIMATE ``h_hat`` used for amplification and the
+  receiver gain (``repro.channels.csi``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
+
+if TYPE_CHECKING:   # pragma: no cover — avoids a core <-> channels cycle
+    from repro.channels.geometry import GeometryConfig
 
 # Paper Sec. V defaults.
 DEFAULT_CHANNEL_MEAN = 1e-5
 DEFAULT_NOISE_VAR = 1e-7
 DEFAULT_B_MAX = math.sqrt(5.0)
 DEFAULT_THETA_TH = math.pi / 3.0
+DEFAULT_MODEL = "rayleigh"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,10 +57,88 @@ class ChannelConfig:
     # analysis and experiments hold h_k fixed over iterations (no t superscript),
     # which is the default here.
     block_fading: bool = False
+    # --- wireless-environment axes (repro.channels) -----------------------
+    # small-scale fading process, from the channel-model registry:
+    # 'rayleigh' (paper default) | 'rician' | 'ar1'
+    model: str = DEFAULT_MODEL
+    # Rician K-factor (LOS power / scattered power); 0 == Rayleigh
+    rician_k: float = 0.0
+    # AR(1) per-round correlation of the 'ar1' model; rho = 0 IS block fading
+    rho: float = 0.0
+    # CSI estimation-error magnitude (0 = perfect CSI: h_hat is h bitwise)
+    # and the error model applying it ('additive' | 'multiplicative')
+    csi_error: float = 0.0
+    csi_error_model: str = "additive"
+    # large-scale structure: per-device distances -> path loss (+ shadowing)
+    # -> heterogeneous per-device means (None keeps the scalar channel_mean)
+    geometry: Optional["GeometryConfig"] = None
+
+    def __post_init__(self):
+        if self.num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got "
+                             f"{self.num_devices}")
+        if self.channel_mean <= 0.0:
+            raise ValueError(f"channel_mean must be positive, got "
+                             f"{self.channel_mean}")
+        if self.noise_var < 0.0:
+            raise ValueError(f"noise_var must be >= 0, got {self.noise_var}")
+        if self.b_max <= 0.0:
+            raise ValueError(f"b_max must be positive, got {self.b_max}")
+        if self.rician_k < 0.0:
+            raise ValueError(f"rician_k must be >= 0, got {self.rician_k}")
+        if not 0.0 <= self.rho < 1.0:
+            raise ValueError(f"rho must lie in [0, 1), got {self.rho}")
+        if self.csi_error < 0.0:
+            raise ValueError(f"csi_error must be >= 0, got {self.csi_error}")
+        # registry-backed validation (lazy imports: repro.channels builds on
+        # this module, so the registry cannot be imported at module scope)
+        from repro import channels as _chl
+        _chl.get(self.model)    # raises ValueError naming the registry
+        if self.csi_error_model not in _chl.CSI_ERROR_MODELS:
+            raise ValueError(
+                f"unknown csi_error_model {self.csi_error_model!r}; "
+                f"one of {_chl.CSI_ERROR_MODELS}")
 
     def rayleigh_scale(self) -> float:
         # Rayleigh(sigma) has mean sigma * sqrt(pi/2).
         return self.channel_mean / math.sqrt(math.pi / 2.0)
+
+    def amplitude_scale(self) -> float:
+        """The envelope scale handed to the configured fading model so that
+        ``E[h_k] == channel_mean``.  For Rayleigh (and its AR(1) extension,
+        whose stationary marginal is the same Rayleigh) this is the
+        classical ``mean / sqrt(pi/2)``; for Rician the mean picks up the
+        Laguerre factor ``L_{1/2}(-K) = (1+K) I0e(K/2) + K I1e(K/2)``."""
+        base = self.rayleigh_scale()
+        if self.model == "rician" and self.rician_k > 0.0:
+            from scipy import special
+            k = self.rician_k
+            laguerre = float((1.0 + k) * special.i0e(k / 2.0)
+                             + k * special.i1e(k / 2.0))
+            return base / laguerre
+        return base
+
+    def time_varying(self) -> bool:
+        """True when the channel evolves every round: block fading, or a
+        model (AR(1)) that is inherently a per-round process."""
+        if self.block_fading:
+            return True
+        from repro import channels as _chl
+        return _chl.get(self.model).time_varying
+
+
+def draw_fading_state(key: jax.Array, num_devices: int) -> jax.Array:
+    """[K, 2] standard-Gaussian I/Q pair underlying one envelope draw — the
+    shared primitive of every registered fading model (and the persistent
+    state of the AR(1) process)."""
+    return jax.random.normal(key, (num_devices, 2))
+
+
+def envelope(state: jax.Array, scale) -> jax.Array:
+    """Amplitude envelope ``scale * |state|`` of a [K, 2] I/Q state.
+    ``scale`` may be a scalar or a per-device [K] vector (and either may be
+    traced)."""
+    return scale * jnp.sqrt(jnp.sum(state * state, axis=-1))
 
 
 def draw_channel(key: jax.Array, cfg: ChannelConfig,
@@ -52,12 +149,19 @@ def draw_channel(key: jax.Array, cfg: ChannelConfig,
     ``|CN(0, 2 sigma_r^2)| = sigma_r * sqrt(x1^2 + x2^2)``, x_i ~ N(0,1).
 
     ``scale`` overrides ``cfg.rayleigh_scale()`` with a (possibly traced)
-    per-experiment value — the batched sweep engine's ``channel_mean`` axis
-    redraws every experiment's channel from one vmapped program.
+    per-experiment scalar — the batched sweep engine's ``channel_mean`` axis
+    redraws every experiment's channel from one vmapped program — or a
+    per-device ``[K]`` vector: the geometry subsystem's heterogeneous
+    means (``repro.channels.geometry``).  Scalar behavior is bitwise
+    unchanged.
     """
     sigma_r = cfg.rayleigh_scale() if scale is None else scale
-    x = jax.random.normal(key, (cfg.num_devices, 2))
-    return sigma_r * jnp.sqrt(jnp.sum(x * x, axis=-1))
+    if hasattr(sigma_r, "shape") and getattr(sigma_r, "ndim", 0) > 0:
+        if sigma_r.shape != (cfg.num_devices,):
+            raise ValueError(
+                f"per-device scale must have shape ({cfg.num_devices},), "
+                f"got {sigma_r.shape}")
+    return envelope(draw_fading_state(key, cfg.num_devices), sigma_r)
 
 
 def channel_for_round(key: jax.Array, cfg: ChannelConfig, round_idx,

@@ -143,7 +143,9 @@ def superpose(stacked_x: PyTree, h: jax.Array, b: jax.Array, a: float,
 
 def server_post(scheme: str, y: PyTree, side: dict, h: jax.Array,
                 b: jax.Array) -> PyTree:
-    """Server-side reconstruction applied after the receiver gain."""
+    """Server-side reconstruction applied after the receiver gain.  ``h``
+    here is the channel AS THE SERVER KNOWS IT — pass the CSI estimate
+    ``h_hat`` under imperfect CSI (see ``aggregate``)."""
     sch = schemes.get(scheme)
     if sch.server_post is None:
         return y
@@ -151,25 +153,33 @@ def server_post(scheme: str, y: PyTree, side: dict, h: jax.Array,
 
 
 def aggregate(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
-              key: Optional[jax.Array] = None) -> PyTree:
+              key: Optional[jax.Array] = None,
+              h_hat: Optional[jax.Array] = None) -> PyTree:
     """Full OTA aggregation: device transform -> superpose -> server post,
     on the backend selected by ``cfg.backend``.
 
-    Returns the update direction ``y`` such that ``w <- w - eta * y``.
+    ``h`` is the TRUE channel — the air superposes with it (eq. 10).
+    ``h_hat`` is the server's CSI estimate, used by everything the SERVER
+    computes (the side-info folding of the server post-transform); ``None``
+    means perfect CSI (``h_hat = h``), which is bitwise the historical
+    behavior.  Returns the update direction ``y`` such that
+    ``w <- w - eta * y``.
     """
+    if h_hat is None:
+        h_hat = h
     if cfg.backend == "kernels":
         from repro.fed.kernel_path import aggregate_kernels
-        return aggregate_kernels(cfg, stacked_grads, h, b, key)
+        return aggregate_kernels(cfg, stacked_grads, h, b, key, h_hat=h_hat)
     if cfg.backend == "mesh":
         from repro.distribution.ota_collectives import aggregate_mesh
-        return aggregate_mesh(cfg, stacked_grads, h, b, key)
+        return aggregate_mesh(cfg, stacked_grads, h, b, key, h_hat=h_hat)
 
     if schemes.get(cfg.scheme).baseline:
         return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), stacked_grads)
     x, side = device_transform(cfg.scheme, stacked_grads, cfg.grad_bound)
     noise_key = None if cfg.noiseless else key
     y = superpose(x, h, b, cfg.a, noise_key, cfg.noise_var)
-    return server_post(cfg.scheme, y, side, h, b)
+    return server_post(cfg.scheme, y, side, h_hat, b)
 
 
 def apply_update(params: PyTree, y: PyTree, eta) -> PyTree:
@@ -191,8 +201,10 @@ def participation_fold(h: jax.Array, b: jax.Array, a,
     zero eq.-8 energy).  The server schedules the round, so it knows the
     participant set and rescales its receiver gain to hold the *effective*
     gain ``a * sum_k h_k b_k`` at the full-cohort design value — the quantity
-    the paper's convergence bounds see.  If nobody participates the gain is
-    zeroed: the server applies no update rather than amplifying pure noise.
+    the paper's convergence bounds see.  The rescale is a SERVER computation:
+    under imperfect CSI pass the estimate ``h_hat`` for ``h`` (the runtime
+    does).  If nobody participates the gain is zeroed: the server applies no
+    update rather than amplifying pure noise.
 
     Returns ``(b_eff, a_eff)``.
     """

@@ -93,10 +93,13 @@ def ota_psum(grads: PyTree, *, scheme: str, axes: Tuple[str, ...],
              h: jax.Array, b: jax.Array, a: float, noise_var: float,
              key: Optional[jax.Array] = None,
              grad_bound: Optional[float] = None,
-             reduce_dtype=None, stats_impl: str = "jnp") -> PyTree:
+             reduce_dtype=None, stats_impl: str = "jnp",
+             h_hat: Optional[jax.Array] = None) -> PyTree:
     """Aggregate this shard's gradient with every other FL client's, over the
     air.  ``h``/``b`` are the full [K] per-client arrays (replicated); each
-    shard selects its own coefficient by mesh position.
+    shard selects its own coefficient by mesh position.  ``h_hat`` is the
+    server's CSI estimate (None = perfect): the TRUE ``h`` rides the psum
+    (the air), the estimate weighs the server-side side-info fold.
 
     Returns the server-side update direction y (identical on all clients).
     """
@@ -115,6 +118,7 @@ def ota_psum(grads: PyTree, *, scheme: str, axes: Tuple[str, ...],
     me = client_index(axes)
     hk = h[me].astype(jnp.float32)
     bk = b[me].astype(jnp.float32)
+    hk_hat = hk if h_hat is None else h_hat[me].astype(jnp.float32)
 
     stats = (_local_stats_kernels(grads, sch) if stats_impl == "kernels"
              else schemes.compute_stats(grads, sch, batched=False))
@@ -138,15 +142,17 @@ def ota_psum(grads: PyTree, *, scheme: str, axes: Tuple[str, ...],
         folded = {}
         if sch.collect_side is not None:
             side = sch.collect_side(stats)
-            sum_hb = jax.lax.psum(hk * bk, axes)
+            sum_hb = jax.lax.psum(hk_hat * bk, axes)
             folded = schemes.fold_side(
-                side, lambda v: jax.lax.psum(hk * bk * v, axes) / (sum_hb + _EPS))
+                side, lambda v: jax.lax.psum(hk_hat * bk * v, axes)
+                / (sum_hb + _EPS))
         y = sch.server_post(y, folded)
     return y
 
 
 def aggregate_mesh(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
-                   key: Optional[jax.Array] = None) -> PyTree:
+                   key: Optional[jax.Array] = None,
+                   h_hat: Optional[jax.Array] = None) -> PyTree:
     """The mesh backend behind ``core.ota.aggregate``: scatter a *stacked*
     [K, ...] gradient pytree over a 1-D mesh of local devices (one shard per
     FL client) and run ``ota_psum``.
@@ -173,7 +179,7 @@ def aggregate_mesh(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
         return ota_psum(g, scheme=cfg.scheme, axes=("ota_clients",), h=h, b=b,
                         a=cfg.a, noise_var=cfg.noise_var,
                         key=(nk if use_noise else None),
-                        grad_bound=cfg.grad_bound)
+                        grad_bound=cfg.grad_bound, h_hat=h_hat)
 
     f = jax.shard_map(per_client, mesh=mesh,
                       in_specs=(P("ota_clients"), P()), out_specs=P(),

@@ -51,11 +51,18 @@ def _template_unravel(stacked: PyTree):
 
 def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
                       key: Optional[jax.Array] = None, *,
+                      h_hat: Optional[jax.Array] = None,
                       interpret: Optional[bool] = None) -> PyTree:
     """Pallas-kernel implementation of ``aggregate`` for any registered
     norm-scaling scheme.  stacked_grads: pytree with leading device axis K;
     returns the update direction y with the single-device pytree structure.
+
+    ``h`` is the true channel (folded into the superpose kernel's composite
+    scale — the air); ``h_hat`` the server's CSI estimate, used only by the
+    server-side side-info folding (None = perfect CSI).
     """
+    if h_hat is None:
+        h_hat = h
     sch = schemes.validate_config(cfg.scheme, cfg.grad_bound)
     if sch.baseline:
         return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0),
@@ -117,7 +124,8 @@ def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
     if sch.server_post is not None:
         folded = {}
         if sch.collect_side is not None:
-            folded = schemes.fold_side_stacked(sch.collect_side(stats), h, b)
+            folded = schemes.fold_side_stacked(sch.collect_side(stats),
+                                               h_hat, b)
         y = sch.server_post(y, folded)
     return y
 

@@ -28,6 +28,18 @@ axes, all spec fields (no new positional arguments — the declarative
                     energy accounting via ``ota.participation_fold`` — a
                     masked device transmits nothing and spends nothing.
 
+The radio environment itself is an axis too (``repro.channels``, all fields
+on ``FLConfig.channel``): the fading process comes from the channel-model
+registry (``channel.model`` — i.i.d. Rayleigh, Rician, or time-correlated
+AR(1) whose Gauss-Markov state threads the scan carry and ``FLState``),
+per-device means from drawn cell geometry (``channel.geometry``), and
+imperfect CSI (``channel.csi_error``) splits the TRUE ``h_t`` the air
+superposes with from the server ESTIMATE ``h_hat_t`` on which Algorithm 1,
+the receiver gain, the participation rescale, and the side-info folding
+run; the effective-gain misalignment this induces is the per-round
+``csi_gain_err`` diagnostic.  ``rho`` and ``csi_error`` are batchable sweep
+lanes (``BATCHED_CHANNEL_FIELDS``); model/geometry/K-factor are structural.
+
 Two round-loop drivers (``run(..., driver=...)``):
 
 ``scan``   (default) the compiled multi-round engine: ``jax.lax.scan`` over
@@ -68,6 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import channels as chl
 from repro.core import amplification as amp
 from repro.core import channel as chan
 from repro.core import ota
@@ -81,12 +94,19 @@ DRIVERS = ("scan", "python")
 SERVER_OPTS = ("sgd", "adamw")
 PARTICIPATION_MODES = ("bernoulli", "fixed")
 # per-round scalar diagnostics recorded by BOTH drivers (same device-side
-# math, so the drivers' histories agree exactly)
+# math, so the drivers' histories agree exactly).  ``csi_gain_err`` is the
+# relative misalignment of the realized effective gain a sum h_k b_k vs the
+# one the server DESIGNED on its estimate, a sum h_hat_k b_k — exactly 0
+# under perfect CSI, and the measurable cost of noisy/stale estimates.
 DIAG_KEYS = ("grad_norm_mean", "grad_norm_min", "grad_norm_max", "eta",
-             "update_norm", "tx_energy", "num_participants")
+             "update_norm", "tx_energy", "num_participants", "csi_gain_err")
 # key-derivation salt separating the participation draw from the channel
 # noise (both are folded from the same per-run key at the same round t)
 _MASK_SALT = 0x5EED
+# salt separating the CSI-estimation noise stream from the channel redraw
+# (both fold from chan_key), and the geometry draw from the setup channel key
+_CSI_SALT = 0xC51
+_GEOM_SALT = 0x6E0
 
 # Compiled-executable cache size for the round/chunk builders below.  Large
 # sweeps walk many (config, grad_fn) pairs; a too-small LRU silently evicts
@@ -135,20 +155,25 @@ def clear_compile_caches() -> None:
 BATCHED_FL_FIELDS = ("seed", "eta", "s_target", "epsilon_target",
                      "grad_bound", "smoothness_L", "strong_convexity_M",
                      "expected_loss_drop", "theta_th")
-BATCHED_CHANNEL_FIELDS = ("noise_var", "channel_mean", "b_max")
+BATCHED_CHANNEL_FIELDS = ("noise_var", "channel_mean", "b_max", "rho",
+                          "csi_error")
 
 
 class BatchAxes(NamedTuple):
     """Per-experiment traced scalars of a batched run (each field is [E] at
     the ``run_batched`` boundary and a scalar inside the vmapped body).
     ``None`` fields fall back to the baked ``FLConfig`` value — the
-    single-experiment drivers pass ``over=None`` everywhere, so their traces
-    (and compiled executables) are untouched by the batching refactor."""
+    single-experiment drivers pass ``over=None`` everywhere (geometry runs
+    excepted: they thread their per-device [K] ``rayleigh_scale`` here), so
+    default traces (and compiled executables) are untouched by the batching
+    refactor."""
 
     noise_var: Optional[jax.Array] = None       # sigma^2 at the ES
     grad_bound: Optional[jax.Array] = None      # G (schemes that need it)
-    b_max: Optional[jax.Array] = None           # per-device cap, block fading
-    rayleigh_scale: Optional[jax.Array] = None  # channel redraw, block fading
+    b_max: Optional[jax.Array] = None           # per-device cap, time-varying
+    rayleigh_scale: Optional[jax.Array] = None  # redraw scale: scalar or [K]
+    rho: Optional[jax.Array] = None             # AR(1) per-round correlation
+    csi_error: Optional[jax.Array] = None       # estimation-error magnitude
 
 
 @dataclasses.dataclass(frozen=True)
@@ -227,7 +252,8 @@ def structural_config(cfg: FLConfig) -> FLConfig:
     shares one executable.  ``grad_bound`` keeps its None-ness (present vs
     absent changes the traced program), not its value."""
     channel = dataclasses.replace(cfg.channel, noise_var=0.0,
-                                  channel_mean=1.0, b_max=1.0)
+                                  channel_mean=1.0, b_max=1.0, rho=0.0,
+                                  csi_error=0.0)
     return dataclasses.replace(
         cfg, seed=0, eta=0.01, s_target=None, epsilon_target=None,
         grad_bound=None if cfg.grad_bound is None else 1.0,
@@ -250,6 +276,16 @@ class FLState:
     # built before the server_opt axis existed); step counts rounds, so
     # Adam bias correction stays consistent across resumed runs
     opt_state: Optional[optim.OptState] = None
+    # the server's channel ESTIMATE h_hat (imperfect CSI; None — states from
+    # before the wireless-environment subsystem — means perfect CSI: h)
+    h_hat: Optional[np.ndarray] = None
+    # persistent fading-process state ([K, 2] Gauss-Markov I/Q pair for the
+    # 'ar1' model; None for stateless models) — threads the scan carry and
+    # checkpoints so run(5); run(5) continues run(10)'s correlated channel
+    fad_state: Optional[np.ndarray] = None
+    # per-device amplitude scales from the geometry subsystem ([K]; None
+    # keeps the homogeneous scalar ChannelConfig.amplitude_scale())
+    scale: Optional[np.ndarray] = None
 
 
 def server_optimizer(cfg: FLConfig) -> optim.Optimizer:
@@ -263,40 +299,75 @@ def server_optimizer(cfg: FLConfig) -> optim.Optimizer:
     return optim.sgd(0.0, momentum=cfg.server_momentum)
 
 
-def setup(cfg: FLConfig, params0: PyTree, model_dim: int) -> FLState:
-    """Draw the channel and run the paper's parameter optimization."""
+def _setup_channel(cfg: FLConfig):
+    """Host-side round-0 radio environment: per-device amplitude scales
+    (geometry), the model's initial draw (+ fading state), and the server's
+    CSI estimate ``h_hat``.  Returns ``(h, h_hat, fad_state, scale_vec)``
+    with ``h``/``h_hat`` float64 [K]; ``h_hat`` IS ``h`` (same array) under
+    perfect CSI, so the default path is bitwise-unchanged."""
     key = jax.random.PRNGKey(cfg.seed)
-    h = np.asarray(chan.draw_channel(key, cfg.channel), np.float64)
+    ccfg = cfg.channel
+    model = chl.get(ccfg.model)
+    scale = ccfg.amplitude_scale()
+    scale_vec = None
+    if ccfg.geometry is not None:
+        rel = chl.relative_gains(jax.random.fold_in(key, _GEOM_SALT),
+                                 ccfg.geometry, cfg.num_devices)
+        scale_vec = np.asarray(scale * rel, np.float64)
+        scale = jnp.asarray(scale_vec, jnp.float32)
+    h_jax, fad0 = model.init(ccfg, scale, key)
+    h = np.asarray(h_jax, np.float64)
+    fad_state = None if fad0 is None else np.asarray(fad0, np.float64)
+    h_hat = h
+    if ccfg.csi_error > 0.0:
+        h_hat = np.asarray(chl.estimate(
+            jnp.asarray(h, jnp.float32),
+            jax.random.fold_in(key, _CSI_SALT), ccfg.csi_error, scale,
+            ccfg.csi_error_model), np.float64)
+    return h, h_hat, fad_state, scale_vec
+
+
+def setup(cfg: FLConfig, params0: PyTree, model_dim: int) -> FLState:
+    """Draw the radio environment and run the paper's parameter
+    optimization.  Algorithm 1 (and the receiver-gain calibration) runs on
+    the server's estimate ``h_hat`` — what the server can actually know —
+    which is ``h`` itself under perfect CSI (``csi_error = 0``)."""
+    h, h_hat, fad_state, scale_vec = _setup_channel(cfg)
     b_max = np.full(cfg.num_devices, cfg.channel.b_max)
+    extra = dict(model_dim=model_dim, h_hat=h_hat, fad_state=fad_state,
+                 scale=scale_vec)
 
     if cfg.amplification == "bmax":
         b = b_max.copy()
-        # comparison method of Fig. 1(a): same a * sum(h b) as the optimized run
-        sol = amp.solve_problem3(h, cfg.channel.noise_var, model_dim, b_max)
+        # comparison method of Fig. 1(a): same a * sum(h_hat b) as the
+        # optimized run
+        sol = amp.solve_problem3(h_hat, cfg.channel.noise_var, model_dim,
+                                 b_max)
         if cfg.case == "I":
             s_opt = amp.optimal_S(sol.Z, cfg.smoothness_L, cfg.p, cfg.expected_loss_drop)
-            a = 1.0 / (s_opt * float(np.sum(h * sol.b)))
-            a = a * float(np.sum(h * sol.b)) / float(np.sum(h * b))
+            a = 1.0 / (s_opt * float(np.sum(h_hat * sol.b)))
+            a = a * float(np.sum(h_hat * sol.b)) / float(np.sum(h_hat * b))
             eta0 = 1.0
         else:
-            c2 = amp.optimize_case2(h, cfg.channel.noise_var, model_dim, b_max,
+            c2 = amp.optimize_case2(h_hat, cfg.channel.noise_var, model_dim,
+                                    b_max,
                                     cfg.smoothness_L, cfg.strong_convexity_M,
                                     cfg.grad_bound, cfg.theta_th,
                                     s=cfg.s_target, epsilon=cfg.epsilon_target)
-            a_eta = c2.a_eta * float(np.sum(h * c2.b)) / float(np.sum(h * b))
+            a_eta = c2.a_eta * float(np.sum(h_hat * c2.b)) / float(np.sum(h_hat * b))
             a, eta0 = a_eta / cfg.eta, cfg.eta
-        return FLState(params0, h, b, a, eta0, model_dim=model_dim)
+        return FLState(params0, h, b, a, eta0, **extra)
 
     if cfg.case == "I":
-        c1 = amp.optimize_case1(h, cfg.channel.noise_var, model_dim, b_max,
+        c1 = amp.optimize_case1(h_hat, cfg.channel.noise_var, model_dim,
+                                b_max,
                                 cfg.smoothness_L, cfg.p, cfg.expected_loss_drop)
-        return FLState(params0, h, c1.b, c1.a, 1.0, model_dim=model_dim)
-    c2 = amp.optimize_case2(h, cfg.channel.noise_var, model_dim, b_max,
+        return FLState(params0, h, c1.b, c1.a, 1.0, **extra)
+    c2 = amp.optimize_case2(h_hat, cfg.channel.noise_var, model_dim, b_max,
                             cfg.smoothness_L, cfg.strong_convexity_M,
                             cfg.grad_bound, cfg.theta_th,
                             s=cfg.s_target, epsilon=cfg.epsilon_target)
-    return FLState(params0, h, c2.b, c2.a_eta / cfg.eta, cfg.eta,
-                   model_dim=model_dim)
+    return FLState(params0, h, c2.b, c2.a_eta / cfg.eta, cfg.eta, **extra)
 
 
 def _eta_t(cfg: FLConfig, eta0, t: jax.Array) -> jax.Array:
@@ -344,13 +415,22 @@ def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch) -> PyTree:
 
 
 def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
-                batch, h, b, a, eta0, t, key,
+                batch, h, h_hat, b, a, eta0, t, key,
                 over: Optional[BatchAxes] = None):
     """One FL round (local computation -> OTA aggregate -> server optimizer
     step) plus the scalar diagnostics of ``DIAG_KEYS``.  Pure; traced
     identically by both drivers.  ``over`` carries the per-experiment traced
     scalars of a batched run (None — the single-experiment default — bakes
-    the ``cfg`` values into the trace exactly as before)."""
+    the ``cfg`` values into the trace exactly as before).
+
+    ``h`` is the TRUE channel (the air superposes with it); ``h_hat`` the
+    server's estimate — the participation rescale and the server-side
+    post-transform run on ``h_hat`` (the server cannot know ``h``).  Under
+    perfect CSI the caller passes ``h_hat=None``: the estimate aliases the
+    SAME traced value as ``h``, so every CSI term collapses exactly (the
+    ``csi_gain_err`` diagnostic is a hard 0, not a lowering residual)."""
+    if h_hat is None:
+        h_hat = h
     noise_var = cfg.channel.noise_var
     grad_bound = cfg.grad_bound
     if over is not None:
@@ -361,7 +441,7 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
     stacked = _local_transmit(cfg, grad_fn, params, batch)
     if cfg.participation < 1.0:
         mask = _participation_mask(cfg, key, t)
-        b_eff, a_eff = ota.participation_fold(h, b, a, mask)
+        b_eff, a_eff = ota.participation_fold(h_hat, b, a, mask)
     else:
         mask = None
         b_eff, a_eff = b, a
@@ -379,7 +459,7 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
                              noise_var=noise_var,
                              grad_bound=grad_bound, backend=cfg.backend)
         y = ota.aggregate(ocfg, stacked, h, b_eff,
-                          jax.random.fold_in(key, t))
+                          jax.random.fold_in(key, t), h_hat=h_hat)
     if mask is not None:
         # an empty round (possible under bernoulli draws) applies no update:
         # participation_fold zeroed the gain, but server_post schemes can
@@ -404,6 +484,18 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
     stats = schemes.compute_stats(stacked, sch, batched=True)
     norms = jnp.sqrt(stats.sq_norm)
     tx = schemes.transmit_energy(sch, stats, b_eff, grad_bound, mask)
+    if sch.baseline:
+        # the ideal reference bypasses the channel; no gain to misalign
+        csi_gain_err = jnp.zeros((), jnp.float32)
+    else:
+        # relative effective-gain misalignment: the air realizes
+        # a sum h_k b_k, the server designed a sum h_hat_k b_k.  Computed
+        # through the DIFFERENCE (h - h_hat) so equal estimates give a hard
+        # 0 (two independently-lowered sums would leave an ulp residual)
+        designed = a_eff * jnp.sum(h_hat * b_eff)
+        gap = a_eff * jnp.sum((h - h_hat) * b_eff)
+        csi_gain_err = (gap / jnp.maximum(jnp.abs(designed),
+                                          schemes.EPS)).astype(jnp.float32)
     diag = {
         "grad_norm_mean": jnp.mean(norms),
         "grad_norm_min": jnp.min(norms),
@@ -417,46 +509,76 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
         "num_participants": (jnp.sum(mask) if mask is not None
                              else jnp.asarray(float(cfg.num_devices),
                                               jnp.float32)),
+        "csi_gain_err": csi_gain_err,
     }
     return new_params, new_opt_state, diag
 
 
 def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t,
-                    over: Optional[BatchAxes] = None):
-    """Block fading (beyond the paper, which holds h_k fixed): redraw the
-    round-t channel and RE-RUN the Problem-3 optimization, entirely in JAX —
-    Algorithm 1 is cheap (O(log(1/eps)(K+1)^3)) relative to a round of local
-    training, and ``solve_problem3_jax`` makes it scan-safe (and vmap-safe,
-    which is how a batched run re-optimizes every experiment's b_t in one
-    program).  The effective receiver-side gain a*sum(h_k b_k) (what the
-    bounds see) is held at its optimized value."""
-    noise_var = cfg.channel.noise_var
-    b_max = cfg.channel.b_max
+                    fad_state, over: Optional[BatchAxes] = None):
+    """Time-varying channel (beyond the paper, which holds h_k fixed): step
+    the configured fading model to the round-t channel, form the server's
+    CSI estimate ``h_hat_t``, and RE-RUN the Problem-3 optimization on
+    ``h_hat_t``, entirely in JAX — Algorithm 1 is cheap
+    (O(log(1/eps)(K+1)^3)) relative to a round of local training, and
+    ``solve_problem3_jax`` makes it scan-safe (and vmap-safe, which is how a
+    batched run re-optimizes every experiment's b_t in one program).  The
+    effective receiver-side gain a*sum(h_hat_k b_k) — what the server can
+    design for, and what the bounds see — is held at its optimized value;
+    under imperfect CSI the AIR still applies a*sum(h_k b_k), and the gap
+    is the ``csi_gain_err`` diagnostic.
+
+    ``fad_state`` is the persistent process state (AR(1) I/Q pair; None for
+    stateless models); returns ``(h, h_hat, b, a, fad_state)``."""
+    ccfg = cfg.channel
+    model = chl.get(ccfg.model)
+    noise_var = ccfg.noise_var
+    b_max = ccfg.b_max
+    rho = ccfg.rho
+    csi_error = ccfg.csi_error
     scale = None
     if over is not None:
         if over.noise_var is not None:
             noise_var = over.noise_var
         if over.b_max is not None:
             b_max = over.b_max
+        if over.rho is not None:
+            rho = over.rho
+        if over.csi_error is not None:
+            csi_error = over.csi_error
         scale = over.rayleigh_scale
-    h = chan.channel_for_round(chan_key, cfg.channel, t,
-                               scale=scale).astype(jnp.float32)
+    if scale is None:
+        scale = ccfg.amplitude_scale()
+    h, fad_state = model.step(ccfg, scale,
+                              jax.random.fold_in(chan_key, t), fad_state,
+                              rho)
+    h = h.astype(jnp.float32)
+    h_hat = h
+    if schemes.maybe_positive(csi_error):
+        # maybe_positive: a traced csi_error (the batched sweep axis) must
+        # resolve the branch at trace time; estimation with a concrete-zero
+        # magnitude is exact (h_hat == h bitwise), so the gate is
+        # value-preserving either way
+        ck = jax.random.fold_in(jax.random.fold_in(chan_key, _CSI_SALT), t)
+        h_hat = chl.estimate(h, ck, csi_error, scale,
+                             ccfg.csi_error_model).astype(jnp.float32)
     if cfg.amplification == "optimal":
-        sol = amp.solve_problem3_jax(h, noise_var, model_dim, b_max)
+        sol = amp.solve_problem3_jax(h_hat, noise_var, model_dim, b_max)
         b = sol.b.astype(jnp.float32)
     else:
         b = jnp.broadcast_to(jnp.asarray(b_max, jnp.float32), h.shape)
-    a = (eff_gain / jnp.sum(h * b)).astype(jnp.float32)
-    return h, b, a
+    a = (eff_gain / jnp.sum(h_hat * b)).astype(jnp.float32)
+    return h, h_hat, b, a, fad_state
 
 
 @_engine_cache
 def _make_fading_refresh(cfg: FLConfig, model_dim: int):
     """Jitted per-round channel/Problem-3 refresh for the python driver
     (the scan driver inlines ``_fading_refresh`` in its scan body)."""
-    def refresh(eff_gain, chan_key, t):
+    def refresh(eff_gain, chan_key, t, fad_state, over):
         TRACE_COUNTS["fading_refresh"] += 1
-        return _fading_refresh(cfg, model_dim, eff_gain, chan_key, t)
+        return _fading_refresh(cfg, model_dim, eff_gain, chan_key, t,
+                               fad_state, over)
 
     return jax.jit(refresh)
 
@@ -465,8 +587,8 @@ def _make_fading_refresh(cfg: FLConfig, model_dim: int):
 def make_round_step(cfg: FLConfig, grad_fn: GradFn):
     """Builds the jitted one-round function (the ``python`` driver's unit).
 
-    round_step(params, opt_state, device_batches, h, b, a, eta0, t, key)
-        -> (new_params, new_opt_state, diagnostics)
+    round_step(params, opt_state, device_batches, h, h_hat, b, a, eta0, t,
+               key) -> (new_params, new_opt_state, diagnostics)
     device_batches: pytree with leading [K, ...] axis (per-device minibatches).
 
     Cached on (cfg, grad_fn) — ``FLConfig`` is a frozen dataclass and
@@ -477,10 +599,11 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
     opt = server_optimizer(cfg)
 
     @jax.jit
-    def round_step(params, opt_state, device_batches, h, b, a, eta0, t, key):
+    def round_step(params, opt_state, device_batches, h, h_hat, b, a, eta0,
+                   t, key):
         TRACE_COUNTS["round_step"] += 1
         return _round_math(cfg, sch, opt, grad_fn, params, opt_state,
-                           device_batches, h, b, a, eta0, t, key)
+                           device_batches, h, h_hat, b, a, eta0, t, key)
 
     return round_step
 
@@ -491,29 +614,37 @@ def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
     ``_round_math`` (+ the block-fading refresh) over a chunk of rounds.
     ``over=None`` bakes the config numerics into the trace (the
     single-experiment engine); a ``BatchAxes`` of traced scalars is the
-    vmapped sweep engine's per-experiment lane."""
+    vmapped sweep engine's per-experiment lane.  The carry threads the true
+    channel ``h``, the server estimate ``h_hat``, and the fading-process
+    state (None for stateless models — no carry leaf, so default traces are
+    untouched)."""
     sch = schemes.get(cfg.scheme)
     opt = server_optimizer(cfg)
-    block_fading = cfg.channel.block_fading
+    time_varying = cfg.channel.time_varying()
 
-    def run_one(params, opt_state, h, b, a, eta0, key, chan_key, eff_gain,
-                over, ts, batches):
+    def run_one(params, opt_state, h, h_hat, b, a, eta0, key, chan_key,
+                eff_gain, fad_state, over, ts, batches):
         TRACE_COUNTS[trace_counter] += 1
 
         def body(carry, xs):
-            params, opt_state, h, b, a = carry
+            params, opt_state, h, h_hat, b, a, fad_state = carry
             t, batch = xs
-            if block_fading:
-                h, b, a = _fading_refresh(cfg, model_dim, eff_gain,
-                                          chan_key, t, over)
+            if time_varying:
+                h, h_hat_t, b, a, fad_state = _fading_refresh(
+                    cfg, model_dim, eff_gain, chan_key, t, fad_state, over)
+                # perfect-CSI runs arrive with h_hat=None and keep the carry
+                # leafless: the refreshed estimate IS h there (the refresh's
+                # csi gate was off), so nothing is lost by dropping it
+                h_hat = None if h_hat is None else h_hat_t
             params, opt_state, diag = _round_math(
                 cfg, sch, opt, grad_fn, params, opt_state, batch,
-                h, b, a, eta0, t, key, over)
-            return (params, opt_state, h, b, a), diag
+                h, h_hat, b, a, eta0, t, key, over)
+            return (params, opt_state, h, h_hat, b, a, fad_state), diag
 
-        (params, opt_state, h, b, a), hist = jax.lax.scan(
-            body, (params, opt_state, h, b, a), (ts, batches))
-        return params, opt_state, h, b, a, hist
+        (params, opt_state, h, h_hat, b, a, fad_state), hist = jax.lax.scan(
+            body, (params, opt_state, h, h_hat, b, a, fad_state),
+            (ts, batches))
+        return params, opt_state, h, h_hat, b, a, fad_state, hist
 
     return run_one
 
@@ -528,10 +659,10 @@ def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
     """
     run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk")
 
-    def run_chunk(params, opt_state, h, b, a, eta0, key, chan_key, eff_gain,
-                  ts, batches):
-        return run_one(params, opt_state, h, b, a, eta0, key, chan_key,
-                       eff_gain, None, ts, batches)
+    def run_chunk(params, opt_state, h, h_hat, b, a, eta0, key, chan_key,
+                  eff_gain, fad_state, over, ts, batches):
+        return run_one(params, opt_state, h, h_hat, b, a, eta0, key,
+                       chan_key, eff_gain, fad_state, over, ts, batches)
 
     return jax.jit(run_chunk, donate_argnums=(0, 1))
 
@@ -556,8 +687,7 @@ def _make_run_chunk_batched(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
     — ``lax.while_loop``'s batching rule freezes converged lanes, so each
     lane's bisection is identical to its solo run."""
     run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk_batched")
-    batched = jax.vmap(run_one, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
-                                         None, None))
+    batched = jax.vmap(run_one, in_axes=(0,) * 12 + (None, None))
     return jax.jit(batched, donate_argnums=(0, 1))
 
 
@@ -628,7 +758,8 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     engine; ``driver='python'`` the per-round host loop (see module
     docstring).  Both evaluate ``eval_fn`` at t == 1 and every
     ``eval_every``-th round, produce the same history keys, and persist the
-    final channel state (h, b, a under block fading) plus the round counter
+    final channel state (h, h_hat, b, a under a time-varying channel, plus
+    any fading-process state) and the round counter
     back into ``state`` so a second ``run`` resumes seamlessly.
 
     ``chunk_batch_provider(ts)``, when given, supplies a whole chunk's
@@ -652,19 +783,41 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     opt_state = state.opt_state
     key = jax.random.PRNGKey(cfg.seed + 1)
     h = jnp.asarray(state.h, jnp.float32)
+    # perfect CSI is structural: h_hat = None makes the estimate alias h's
+    # traced value exactly (leafless carry, hard-zero csi_gain_err)
+    perfect_csi = cfg.channel.csi_error == 0.0
+    h_hat_np = state.h_hat if state.h_hat is not None else state.h
+    h_hat = None if perfect_csi else jnp.asarray(h_hat_np, jnp.float32)
     b = jnp.asarray(state.b, jnp.float32)
     a = jnp.asarray(state.a, jnp.float32)
     eta0 = jnp.asarray(state.eta0, jnp.float32)
-    block_fading = cfg.channel.block_fading
+    model = chl.get(cfg.channel.model)
+    time_varying = cfg.channel.time_varying()
     chan_key = jax.random.PRNGKey(cfg.seed + 2)
     eff_gain = jnp.zeros((), jnp.float32)
-    if block_fading:
+    fad_state = None
+    if model.has_state:
+        if state.fad_state is None:
+            raise ValueError(
+                f"channel model {cfg.channel.model!r} threads a persistent "
+                "fading state; FLState.fad_state is unset — build the state "
+                "via setup()")
+        fad_state = jnp.asarray(state.fad_state, jnp.float32)
+    # geometry-heterogeneous per-device scales ride through the over lane
+    # (None — the homogeneous default — keeps the baked-config trace)
+    over = None
+    if state.scale is not None:
+        over = BatchAxes(
+            rayleigh_scale=jnp.asarray(state.scale, jnp.float32))
+    if time_varying:
         if state.model_dim <= 0:
-            raise ValueError("block fading re-solves Problem 3 with the real "
-                             "model dimension; FLState.model_dim is unset — "
-                             "build the state via setup()")
+            raise ValueError("a time-varying channel re-solves Problem 3 "
+                             "with the real model dimension; "
+                             "FLState.model_dim is unset — build the state "
+                             "via setup()")
+        # the DESIGNED effective gain: what the server set on its estimate
         eff_gain = jnp.asarray(
-            state.a * float(np.sum(np.asarray(state.h, np.float64)
+            state.a * float(np.sum(np.asarray(h_hat_np, np.float64)
                                    * np.asarray(state.b, np.float64))),
             jnp.float32)
 
@@ -688,11 +841,13 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         fading_refresh = _make_fading_refresh(cfg, state.model_dim)
         params = state.params
         for t in range(t0 + 1, t0 + num_rounds + 1):
-            if block_fading:
-                h, b, a = fading_refresh(eff_gain, chan_key, jnp.asarray(t))
+            if time_varying:
+                h, h_hat_t, b, a, fad_state = fading_refresh(
+                    eff_gain, chan_key, jnp.asarray(t), fad_state, over)
+                h_hat = None if perfect_csi else h_hat_t
             batch = batch_provider(t)
             params, opt_state, diag = round_step(params, opt_state, batch,
-                                                 h, b, a, eta0,
+                                                 h, h_hat, b, a, eta0,
                                                  jnp.asarray(t), key)
             hist["round"].append(t)
             for k in DIAG_KEYS:
@@ -711,9 +866,10 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
                                chunk_size):
             batches = (chunk_batch_provider(ts) if chunk_batch_provider
                        else _stack_batches(batch_provider, ts))
-            params, opt_state, h, b, a, chunk_hist = run_chunk(
-                params, opt_state, h, b, a, eta0, key, chan_key, eff_gain,
-                jnp.asarray(ts, jnp.int32), batches)
+            params, opt_state, h, h_hat, b, a, fad_state, chunk_hist = \
+                run_chunk(params, opt_state, h, h_hat, b, a, eta0, key,
+                          chan_key, eff_gain, fad_state, over,
+                          jnp.asarray(ts, jnp.int32), batches)
             chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
             hist["round"].extend(ts)
             for k in DIAG_KEYS:
@@ -724,12 +880,17 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
 
     state.params = params
     state.opt_state = opt_state
-    if block_fading:
+    if time_varying:
         # persist the final channel/gain so a second run(cfg, state, ...)
         # resumes from round t0+num_rounds, not the stale round-0 draw
         state.h = np.asarray(jax.device_get(h), np.float64)
+        state.h_hat = (state.h if h_hat is None
+                       else np.asarray(jax.device_get(h_hat), np.float64))
         state.b = np.asarray(jax.device_get(b), np.float64)
         state.a = float(a)
+    if fad_state is not None:
+        # the correlated fading process continues where it left off
+        state.fad_state = np.asarray(jax.device_get(fad_state), np.float64)
     state.round += num_rounds
     return state, hist
 
@@ -815,42 +976,75 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
     params = _stack_trees([s.params for s in states])
     opt_state = _stack_trees([s.opt_state for s in states])
     h = jnp.asarray(np.stack([np.asarray(s.h) for s in states]), jnp.float32)
+    # perfect CSI across the whole sub-batch is structural (h_hat aliases h
+    # in-trace); ANY imperfect lane threads the stacked estimates, and the
+    # perfect lanes among them stay exact (their estimation noise term is a
+    # traced-zero multiple)
+    csi_off = all(c.channel.csi_error == 0.0 for c in cfgs)
+    h_hat = None if csi_off else jnp.asarray(
+        np.stack([np.asarray(s.h_hat if s.h_hat is not None else s.h)
+                  for s in states]), jnp.float32)
     b = jnp.asarray(np.stack([np.asarray(s.b) for s in states]), jnp.float32)
     a = jnp.asarray(np.asarray([s.a for s in states]), jnp.float32)
     eta0 = jnp.asarray(np.asarray([s.eta0 for s in states]), jnp.float32)
     keys = jnp.stack([jax.random.PRNGKey(c.seed + 1) for c in cfgs])
     chan_keys = jnp.stack([jax.random.PRNGKey(c.seed + 2) for c in cfgs])
-    block_fading = cfg0.channel.block_fading
+    model = chl.get(cfg0.channel.model)
+    time_varying = cfg0.channel.time_varying()
     eff_gain = jnp.zeros((num_exp,), jnp.float32)
-    if block_fading:
+    fad_state = None
+    if model.has_state:
+        if any(s.fad_state is None for s in states):
+            raise ValueError(
+                f"channel model {cfg0.channel.model!r} threads a persistent "
+                "fading state; build the states via setup()")
+        fad_state = jnp.asarray(
+            np.stack([np.asarray(s.fad_state) for s in states]), jnp.float32)
+    if time_varying:
         if model_dim <= 0:
-            raise ValueError("block fading re-solves Problem 3 with the real "
-                             "model dimension; FLState.model_dim is unset — "
-                             "build the states via setup()")
+            raise ValueError("a time-varying channel re-solves Problem 3 "
+                             "with the real model dimension; "
+                             "FLState.model_dim is unset — build the states "
+                             "via setup()")
         eff_gain = jnp.asarray(
-            np.asarray([s.a * float(np.sum(np.asarray(s.h, np.float64)
-                                           * np.asarray(s.b, np.float64)))
-                        for s in states]), jnp.float32)
+            np.asarray([s.a * float(np.sum(np.asarray(
+                s.h_hat if s.h_hat is not None else s.h, np.float64)
+                * np.asarray(s.b, np.float64)))
+                for s in states]), jnp.float32)
+
+    def _scales():
+        # in-scan redraw scale: [E, K] geometry-heterogeneous per-device
+        # vectors (drawn at setup, living on the states) or [E] scalars
+        if cfg0.channel.geometry is not None:
+            return jnp.asarray(np.stack([np.asarray(s.scale)
+                                         for s in states]), jnp.float32)
+        return jnp.asarray(
+            np.asarray([c.channel.amplitude_scale() for c in cfgs]),
+            jnp.float32)
+
     over = BatchAxes(
         noise_var=jnp.asarray(
             np.asarray([c.channel.noise_var for c in cfgs]), jnp.float32),
         grad_bound=(None if cfg0.grad_bound is None else jnp.asarray(
             np.asarray([c.grad_bound for c in cfgs]), jnp.float32)),
         b_max=(jnp.asarray(np.asarray([c.channel.b_max for c in cfgs]),
-                           jnp.float32) if block_fading else None),
-        rayleigh_scale=(jnp.asarray(
-            np.asarray([c.channel.rayleigh_scale() for c in cfgs]),
-            jnp.float32) if block_fading else None),
+                           jnp.float32) if time_varying else None),
+        rayleigh_scale=(_scales() if time_varying else None),
+        rho=(jnp.asarray(np.asarray([c.channel.rho for c in cfgs]),
+                         jnp.float32) if time_varying else None),
+        csi_error=(jnp.asarray(
+            np.asarray([c.channel.csi_error for c in cfgs]), jnp.float32)
+            if time_varying and not csi_off else None),
     )
 
     if shard:
         from repro.distribution import sharding as shardlib
         mesh = shardlib.experiment_mesh(num_exp)
         if mesh is not None:
-            (params, opt_state, h, b, a, eta0, keys, chan_keys, eff_gain,
-             over) = shardlib.shard_experiment_axis(
-                 (params, opt_state, h, b, a, eta0, keys, chan_keys,
-                  eff_gain, over), mesh)
+            (params, opt_state, h, h_hat, b, a, eta0, keys, chan_keys,
+             eff_gain, fad_state, over) = shardlib.shard_experiment_axis(
+                 (params, opt_state, h, h_hat, b, a, eta0, keys, chan_keys,
+                  eff_gain, fad_state, over), mesh)
 
     hist: Dict[str, Any] = {"round": [], "eval_round": []}
     diag_chunks: Dict[str, List[np.ndarray]] = {k: [] for k in DIAG_KEYS}
@@ -876,9 +1070,9 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
                            chunk_size):
         batches = (chunk_batch_provider(ts) if chunk_batch_provider
                    else _stack_batches(batch_provider, ts))
-        params, opt_state, h, b, a, chunk_hist = run_chunk(
-            params, opt_state, h, b, a, eta0, keys, chan_keys, eff_gain,
-            over, jnp.asarray(ts, jnp.int32), batches)
+        params, opt_state, h, h_hat, b, a, fad_state, chunk_hist = run_chunk(
+            params, opt_state, h, h_hat, b, a, eta0, keys, chan_keys,
+            eff_gain, fad_state, over, jnp.asarray(ts, jnp.int32), batches)
         chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
         hist["round"].extend(ts)
         for k in DIAG_KEYS:
@@ -895,9 +1089,14 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
     for e, s in enumerate(states):
         s.params = _slice_tree(params, e)
         s.opt_state = _slice_tree(opt_state, e)
-        if block_fading:
+        if time_varying:
             s.h = np.asarray(jax.device_get(h[e]), np.float64)
+            s.h_hat = (s.h if h_hat is None
+                       else np.asarray(jax.device_get(h_hat[e]), np.float64))
             s.b = np.asarray(jax.device_get(b[e]), np.float64)
             s.a = float(a[e])
+        if fad_state is not None:
+            s.fad_state = np.asarray(jax.device_get(fad_state[e]),
+                                     np.float64)
         s.round += num_rounds
     return list(states), hist

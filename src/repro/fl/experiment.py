@@ -113,16 +113,23 @@ class Experiment:
 
     def _ckpt_tree(self) -> PyTree:
         st = self.state
-        return {
-            "params": st.params,
-            "opt": st.opt_state,
-            "channel": {
-                "h": np.asarray(st.h, np.float64),
-                "b": np.asarray(st.b, np.float64),
-                "a": np.asarray(st.a, np.float64),
-                "eta0": np.asarray(st.eta0, np.float64),
-            },
+        channel = {
+            "h": np.asarray(st.h, np.float64),
+            "b": np.asarray(st.b, np.float64),
+            "a": np.asarray(st.a, np.float64),
+            "eta0": np.asarray(st.eta0, np.float64),
+            # the server's CSI estimate (== h under perfect CSI)
+            "h_hat": np.asarray(st.h_hat if st.h_hat is not None else st.h,
+                                np.float64),
         }
+        # optional wireless-environment state: present iff the spec's
+        # channel model/geometry produces it, so the tree structure is a
+        # function of the spec alone (save/load on equal specs round-trips)
+        if st.fad_state is not None:
+            channel["fad_state"] = np.asarray(st.fad_state, np.float64)
+        if st.scale is not None:
+            channel["scale"] = np.asarray(st.scale, np.float64)
+        return {"params": st.params, "opt": st.opt_state, "channel": channel}
 
     def save(self, path: str) -> str:
         """Checkpoint params + server-optimizer state + channel/round so a
@@ -143,12 +150,22 @@ class Experiment:
     def load(self, path: str) -> "Experiment":
         """Restore a checkpoint written by ``save`` (shape/dtype checked
         against this spec's params and optimizer structure) and position the
-        experiment at the checkpoint's round."""
+        experiment at the checkpoint's round.  Non-strict on the CHANNEL
+        leaves only: checkpoints from before the wireless-environment
+        subsystem lack ``h_hat``/``fad_state``/``scale`` and keep the
+        ``setup()`` values (exact for the default environment they were
+        written under); a params/optimizer structure mismatch still fails
+        loudly."""
         self._ensure_setup()
         if self.state.opt_state is None:
             self.state.opt_state = runtime.server_optimizer(
                 self.cfg).init(self.state.params)
-        restored, meta = store.restore(path, self._ckpt_tree())
+        restored, meta = store.restore(
+            path, self._ckpt_tree(),
+            # ONLY the post-subsystem leaves may be absent; a checkpoint
+            # missing h/b/a/eta0 (or params/opt leaves) still fails loudly
+            missing_ok=("['channel']['h_hat']", "['channel']['fad_state']",
+                        "['channel']['scale']"))
         st = self.state
         st.params = restored["params"]
         st.opt_state = restored["opt"]
@@ -156,5 +173,11 @@ class Experiment:
         st.b = np.asarray(restored["channel"]["b"], np.float64)
         st.a = float(restored["channel"]["a"])
         st.eta0 = float(restored["channel"]["eta0"])
+        st.h_hat = np.asarray(restored["channel"]["h_hat"], np.float64)
+        if "fad_state" in restored["channel"]:
+            st.fad_state = np.asarray(restored["channel"]["fad_state"],
+                                      np.float64)
+        if "scale" in restored["channel"]:
+            st.scale = np.asarray(restored["channel"]["scale"], np.float64)
         st.round = int(meta["round"])
         return self

@@ -135,7 +135,13 @@ class ExperimentSpec:
 # ("noise_var", "scheme", "alpha") or, to disambiguate, by dotted scope
 # ("fl.seed", "data.seed").  Scopes are searched in the order below; the
 # first hit wins, so e.g. bare "seed" is the CHANNEL/RUN seed (fl.seed) and
-# the data/init seed must be spelled "data.seed".
+# the data/init seed must be spelled "data.seed".  The wireless-environment
+# axes (repro.channels) live on the "channel" scope: "channel.model",
+# "channel.rho", "channel.csi_error", "channel.rician_k",
+# "channel.geometry" (GeometryConfig values), ... — note bare "model"
+# resolves to the CHANNEL model; the model *spec* scope is only reachable
+# dotted ("model.hidden").  rho/csi_error are batchable lanes
+# (runtime.BATCHED_CHANNEL_FIELDS); model/geometry/rician_k are structural.
 
 _SCOPE_ORDER: Tuple[Tuple[str, type], ...] = (
     ("fl", FLConfig),

@@ -15,9 +15,11 @@ Axis names address the nested spec through one flat namespace
 are batchable is owned by the runtime (``repro.fed.runtime
 .BATCHED_FL_FIELDS`` / ``BATCHED_CHANNEL_FIELDS``): they are either consumed
 by host-side ``setup`` (folded into the stacked per-experiment channel
-state) or threaded through the compiled program as traced scalars.
-Everything else — scheme, case, backend, amplification policy, scenario
-axes, any data/model field — is structural.
+state) or threaded through the compiled program as traced scalars — the
+wireless-environment lanes ``channel.rho`` (AR(1) correlation) and
+``channel.csi_error`` (imperfect CSI) included.  Everything else — scheme,
+case, backend, amplification policy, scenario axes, the channel *model* /
+geometry / Rician K-factor, any data/model field — is structural.
 
 Grid points are grouped by *structural signature* (``runtime
 .structural_config`` of the effective config + the data/model specs); each

@@ -1,0 +1,97 @@
+"""Golden-trajectory generator for the wireless-environment subsystem.
+
+The channel-model refactor must leave the DEFAULT radio environment
+(``model='rayleigh'``, ``csi_error=0``, fixed or block-fading) bitwise
+untouched on CPU for both round-loop drivers.  This script records reference
+trajectories (exact history floats + a sha256 over the final param bytes)
+so ``tests/test_channels.py::TestDefaultBitwiseGolden`` can pin that
+contract against the pre-subsystem seed.
+
+Regenerate (ONLY when an intentionally trajectory-changing PR lands):
+
+    PYTHONPATH=src python tests/golden/generate.py
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "channel_defaults.json")
+
+
+def cases():
+    from repro.core.channel import ChannelConfig
+    from repro.fed.runtime import FLConfig
+    from repro.fl import DataSpec, EvalSpec, ExperimentSpec, ModelSpec
+
+    def spec(fading, backend, driver):
+        fl = FLConfig(
+            num_devices=5, scheme="normalized", case="I", p=0.75,
+            channel=ChannelConfig(num_devices=5, channel_mean=1e-3,
+                                  noise_var=1e-7, block_fading=fading),
+            grad_bound=10.0, smoothness_L=5.0, expected_loss_drop=2.0,
+            seed=0, backend=backend)
+        return ExperimentSpec(
+            fl=fl,
+            data=DataSpec(dataset="synthetic_mnist", split="dirichlet",
+                          num_train=250, num_test=50, batch_size=16, seed=0),
+            model=ModelSpec(kind="mlp", hidden=8),
+            eval=EvalSpec(every=4), driver=driver, chunk_size=3)
+
+    out = {}
+    for fading in (False, True):
+        for backend in ("vmap", "kernels"):
+            for driver in ("scan", "python"):
+                out[f"mnist/fading={fading}/{backend}/{driver}"] = spec(
+                    fading, backend, driver)
+
+    def ridge(driver):
+        fl = FLConfig(
+            num_devices=5, scheme="normalized", case="II", eta=0.01,
+            channel=ChannelConfig(num_devices=5, channel_mean=1e-3,
+                                  noise_var=1e-7, block_fading=True),
+            grad_bound=25.0, s_target=0.995, smoothness_L=2.0,
+            strong_convexity_M=0.5, seed=1)
+        return ExperimentSpec(
+            fl=fl,
+            data=DataSpec(dataset="ridge", split="iid", num_train=200, dim=8,
+                          batch_size=16, seed=3),
+            model=ModelSpec(kind="ridge"),
+            eval=EvalSpec(every=4), driver=driver, chunk_size=3)
+
+    for driver in ("scan", "python"):
+        out[f"ridge/fading=True/vmap/{driver}"] = ridge(driver)
+    return out
+
+
+def params_digest(params) -> str:
+    buf = b"".join(np.asarray(l, np.float32).tobytes()
+                   for l in jax.tree_util.tree_leaves(params))
+    return hashlib.sha256(buf).hexdigest()
+
+
+def run_case(spec, rounds=7):
+    from repro.fl import Experiment
+    e = Experiment(spec)
+    e.run(rounds)
+    hist = {k: [float(v) for v in vals] for k, vals in e.history.items()}
+    return {"history": hist, "params_sha256": params_digest(e.state.params),
+            "h": [float(v) for v in np.asarray(e.state.h, np.float64)],
+            "b": [float(v) for v in np.asarray(e.state.b, np.float64)],
+            "a": float(e.state.a)}
+
+
+def main():
+    payload = {name: run_case(spec) for name, spec in cases().items()}
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {OUT} ({len(payload)} cases)")
+
+
+if __name__ == "__main__":
+    main()

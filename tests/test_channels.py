@@ -1,0 +1,522 @@
+"""Wireless-environment subsystem tests: the channel-model registry
+(Rayleigh / Rician / AR(1)), geometry-derived heterogeneous means, the
+imperfect-CSI h vs h_hat split, ChannelConfig validation, and the bitwise
+default contract (golden trajectories recorded from the pre-subsystem
+seed, both drivers)."""
+import dataclasses
+import hashlib
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels as chl
+from repro.channels import GeometryConfig
+from repro.core import amplification as amp
+from repro.core.channel import ChannelConfig, channel_for_round, draw_channel
+from repro.fed import runtime as rt
+from repro.fl import (DataSpec, EvalSpec, Experiment, ExperimentSpec,
+                      ModelSpec)
+
+KEY = jax.random.PRNGKey(0)
+K = 4
+
+
+def ridge_spec(driver="scan", seed=0, **chkw):
+    fl = rt.FLConfig(
+        num_devices=K, scheme="normalized", case="II", eta=0.01,
+        channel=ChannelConfig(num_devices=K, channel_mean=1e-3,
+                              noise_var=1e-7, **chkw),
+        grad_bound=25.0, s_target=0.995, smoothness_L=2.0,
+        strong_convexity_M=0.5, seed=seed)
+    return ExperimentSpec(
+        fl=fl,
+        data=DataSpec(dataset="ridge", split="iid", num_train=200, dim=8,
+                      batch_size=16, seed=3),
+        model=ModelSpec(kind="ridge"), eval=EvalSpec(every=4),
+        driver=driver, chunk_size=3)
+
+
+class TestChannelConfigValidation:
+    """Satellite: constructor-time validation matching the FLConfig
+    pattern, with error messages naming the offending field."""
+
+    @pytest.mark.parametrize("kw,match", [
+        (dict(channel_mean=0.0), "channel_mean must be positive"),
+        (dict(channel_mean=-1e-5), "channel_mean must be positive"),
+        (dict(noise_var=-1e-7), "noise_var must be >= 0"),
+        (dict(b_max=0.0), "b_max must be positive"),
+        (dict(b_max=-2.0), "b_max must be positive"),
+        (dict(num_devices=0), "num_devices must be >= 1"),
+        (dict(rician_k=-1.0), "rician_k must be >= 0"),
+        (dict(rho=1.0), r"rho must lie in \[0, 1\)"),
+        (dict(rho=-0.1), r"rho must lie in \[0, 1\)"),
+        (dict(csi_error=-0.5), "csi_error must be >= 0"),
+        (dict(model="nope"), "unknown channel model 'nope'"),
+        (dict(csi_error_model="nope"), "unknown csi_error_model 'nope'"),
+    ])
+    def test_rejects(self, kw, match):
+        base = dict(num_devices=K)
+        base.update(kw)
+        with pytest.raises(ValueError, match=match):
+            ChannelConfig(**base)
+
+    def test_geometry_validation(self):
+        with pytest.raises(ValueError, match="min_distance"):
+            GeometryConfig(min_distance=0.0)
+        with pytest.raises(ValueError, match="min_distance"):
+            GeometryConfig(min_distance=600.0, cell_radius=500.0)
+        with pytest.raises(ValueError, match="path_loss_exp"):
+            GeometryConfig(path_loss_exp=-1.0)
+        with pytest.raises(ValueError, match="shadowing_std_db"):
+            GeometryConfig(shadowing_std_db=-2.0)
+
+    def test_defaults_valid(self):
+        cfg = ChannelConfig(num_devices=K)
+        assert cfg.model == "rayleigh" and cfg.csi_error == 0.0
+        assert not cfg.time_varying()
+        assert dataclasses.replace(cfg, block_fading=True).time_varying()
+        assert dataclasses.replace(cfg, model="ar1").time_varying()
+
+
+class TestDrawChannelScale:
+    """Satellite: ``draw_channel`` accepts per-device [K] scale arrays;
+    scalar behavior stays bitwise."""
+
+    def test_scalar_explicit_matches_default_bitwise(self):
+        cfg = ChannelConfig(num_devices=8, channel_mean=1e-3)
+        np.testing.assert_array_equal(
+            np.asarray(draw_channel(KEY, cfg)),
+            np.asarray(draw_channel(KEY, cfg, scale=cfg.rayleigh_scale())))
+
+    def test_per_device_scale_vector(self):
+        cfg = ChannelConfig(num_devices=6, channel_mean=1e-3)
+        scales = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0, 6.0]) * 1e-4
+        h = draw_channel(KEY, cfg, scale=scales)
+        assert h.shape == (6,)
+        # each coordinate is the scalar draw rescaled: h_k = scale_k * r_k
+        base = draw_channel(KEY, cfg, scale=1.0)
+        np.testing.assert_allclose(np.asarray(h),
+                                   np.asarray(scales * base), rtol=1e-6)
+
+    def test_wrong_length_scale_raises(self):
+        cfg = ChannelConfig(num_devices=6)
+        with pytest.raises(ValueError, match="per-device scale"):
+            draw_channel(KEY, cfg, scale=jnp.ones((4,)))
+
+    def test_block_fading_respects_vector_scale(self):
+        cfg = ChannelConfig(num_devices=3, block_fading=True)
+        s = jnp.asarray([1e-4, 2e-4, 3e-4])
+        h1 = channel_for_round(KEY, cfg, 1, scale=s)
+        h2 = channel_for_round(KEY, cfg, 2, scale=s)
+        assert not np.allclose(np.asarray(h1), np.asarray(h2))
+
+
+class TestRegistry:
+    def test_names_and_get(self):
+        assert {"rayleigh", "rician", "ar1"} <= set(chl.names())
+        assert chl.get("ar1").has_state and chl.get("ar1").time_varying
+        assert not chl.get("rayleigh").has_state
+        with pytest.raises(ValueError, match="unknown channel model"):
+            chl.get("missing")
+
+    def test_register_custom_model_runs_end_to_end(self):
+        """The one-module extension contract (mirroring the scheme
+        registry's ``clipped`` proof): a model registered here — constant
+        unit-envelope "channel" — immediately validates in ChannelConfig
+        and runs through the compiled engine."""
+        name = "_test_const"
+        if name not in chl.names():
+            chl.register(chl.ChannelModel(
+                name=name,
+                init=lambda cfg, scale, key: (
+                    scale * jnp.ones((cfg.num_devices,)), None),
+                step=lambda cfg, scale, key_t, state, rho: (
+                    scale * jnp.ones((cfg.num_devices,)), None),
+            ))
+        e = Experiment(ridge_spec(model=name))
+        e.run(2)
+        np.testing.assert_allclose(
+            e.state.h, np.full(K, ChannelConfig(
+                num_devices=K, channel_mean=1e-3).amplitude_scale()),
+            rtol=1e-6)
+
+
+class TestChannelStatistics:
+    """Satellite: empirical means of the registered models match the
+    configured ``channel_mean``, and AR(1)'s stationary marginal is the
+    i.i.d. Rayleigh."""
+
+    def test_rayleigh_mean(self):
+        cfg = ChannelConfig(num_devices=200_000, channel_mean=1e-3)
+        h, _ = chl.get("rayleigh").init(cfg, cfg.amplitude_scale(), KEY)
+        assert abs(float(jnp.mean(h)) - 1e-3) / 1e-3 < 0.02
+
+    @pytest.mark.parametrize("k_factor", [0.0, 1.0, 5.0, 20.0])
+    def test_rician_mean_calibrated(self, k_factor):
+        cfg = ChannelConfig(num_devices=200_000, channel_mean=1e-3,
+                            model="rician", rician_k=k_factor)
+        h, _ = chl.get("rician").init(cfg, cfg.amplitude_scale(), KEY)
+        assert abs(float(jnp.mean(h)) - 1e-3) / 1e-3 < 0.02
+        assert float(jnp.min(h)) >= 0.0
+
+    def test_rician_k0_is_rayleigh_bitwise(self):
+        cfg = ChannelConfig(num_devices=64, channel_mean=1e-3,
+                            model="rician", rician_k=0.0)
+        h_ric, _ = chl.get("rician").init(cfg, cfg.amplitude_scale(), KEY)
+        h_ray, _ = chl.get("rayleigh").init(cfg, cfg.amplitude_scale(), KEY)
+        np.testing.assert_array_equal(np.asarray(h_ric), np.asarray(h_ray))
+
+    def test_rician_concentrates_with_k(self):
+        """Larger K-factor -> more LOS -> smaller relative spread at the
+        same mean."""
+        stds = []
+        for k_factor in (0.0, 10.0):
+            cfg = ChannelConfig(num_devices=100_000, channel_mean=1e-3,
+                                model="rician", rician_k=k_factor)
+            h, _ = chl.get("rician").init(cfg, cfg.amplitude_scale(), KEY)
+            stds.append(float(jnp.std(h)))
+        assert stds[1] < 0.5 * stds[0]
+
+    @pytest.mark.parametrize("rho", [0.3, 0.9])
+    def test_ar1_stationary_matches_iid_marginal(self, rho):
+        """Run the Gauss-Markov recursion from its stationary init for many
+        steps: mean AND variance of h_t must match the i.i.d. Rayleigh of
+        the same scale at every lag."""
+        cfg = ChannelConfig(num_devices=20_000, channel_mean=1e-3,
+                            model="ar1", rho=rho)
+        model = chl.get("ar1")
+        scale = cfg.amplitude_scale()
+        h, state = model.init(cfg, scale, KEY)
+        means, stds = [float(jnp.mean(h))], [float(jnp.std(h))]
+        for t in range(1, 6):
+            h, state = model.step(cfg, scale, jax.random.fold_in(KEY, t),
+                                  state, rho)
+            means.append(float(jnp.mean(h)))
+            stds.append(float(jnp.std(h)))
+        # Rayleigh(sigma): mean sigma sqrt(pi/2), var sigma^2 (2 - pi/2)
+        want_mean = 1e-3
+        want_std = scale * math.sqrt(2.0 - math.pi / 2.0)
+        for m, s in zip(means, stds):
+            assert abs(m - want_mean) / want_mean < 0.03
+            assert abs(s - want_std) / want_std < 0.03
+
+    def test_ar1_correlates_rounds(self):
+        """rho close to 1 keeps consecutive draws close; rho = 0 does not."""
+        cfg = ChannelConfig(num_devices=5_000, channel_mean=1e-3,
+                            model="ar1")
+        model = chl.get("ar1")
+        scale = cfg.amplitude_scale()
+        h0, state = model.init(cfg, scale, KEY)
+        k1 = jax.random.fold_in(KEY, 1)
+        h_corr, _ = model.step(cfg, scale, k1, state, 0.99)
+        h_iid, _ = model.step(cfg, scale, k1, state, 0.0)
+        corr_rel = float(jnp.mean(jnp.abs(h_corr - h0))) / 1e-3
+        iid_rel = float(jnp.mean(jnp.abs(h_iid - h0))) / 1e-3
+        assert corr_rel < 0.2 < iid_rel
+
+    def test_ar1_rho0_is_block_fading_bitwise(self):
+        """rho = 0 degenerates the AR(1) step to exactly the i.i.d. block-
+        fading redraw (same innovation key stream)."""
+        cfg = ChannelConfig(num_devices=16, channel_mean=1e-3, model="ar1")
+        fading = ChannelConfig(num_devices=16, channel_mean=1e-3,
+                               block_fading=True)
+        model = chl.get("ar1")
+        scale = cfg.amplitude_scale()
+        _, state = model.init(cfg, scale, KEY)
+        for t in (1, 2, 7):
+            h_ar, state = model.step(cfg, scale, jax.random.fold_in(KEY, t),
+                                     state, 0.0)
+            h_bf = channel_for_round(KEY, fading, t, scale=scale)
+            np.testing.assert_array_equal(np.asarray(h_ar), np.asarray(h_bf))
+
+
+class TestGeometry:
+    def test_distances_in_annulus_and_deterministic(self):
+        geo = GeometryConfig(cell_radius=400.0, min_distance=80.0)
+        d = chl.draw_distances(KEY, geo, 1000)
+        assert (d >= 80.0).all() and (d <= 400.0).all()
+        np.testing.assert_array_equal(d, chl.draw_distances(KEY, geo, 1000))
+
+    def test_path_loss_formula(self):
+        """No shadowing: the relative gain is exactly the distance power
+        law (checked against the drawn distances)."""
+        geo = GeometryConfig(path_loss_exp=3.0, shadowing_std_db=0.0)
+        d = chl.draw_distances(KEY, geo, 50)
+        g = chl.relative_gains(KEY, geo, 50)
+        np.testing.assert_allclose(
+            g, (d / geo.ref_distance) ** (-1.5), rtol=1e-12)
+
+    def test_shadowing_spreads_gains(self):
+        geo0 = GeometryConfig(shadowing_std_db=0.0)
+        geo8 = GeometryConfig(shadowing_std_db=8.0)
+        g0 = chl.relative_gains(KEY, geo0, 2000)
+        g8 = chl.relative_gains(KEY, geo8, 2000)
+        assert np.std(np.log(g8)) > np.std(np.log(g0))
+
+    def test_setup_produces_heterogeneous_means(self):
+        spec = ridge_spec(geometry=GeometryConfig(shadowing_std_db=4.0))
+        e = Experiment(spec)
+        e.setup()
+        assert e.state.scale is not None and e.state.scale.shape == (K,)
+        assert np.std(e.state.scale) > 0
+        # distinct seeds draw distinct geometries
+        e2 = Experiment(ridge_spec(seed=1,
+                                   geometry=GeometryConfig(
+                                       shadowing_std_db=4.0)))
+        e2.setup()
+        assert not np.allclose(e.state.scale, e2.state.scale)
+
+    def test_geometry_mean_scales_with_channel_mean(self):
+        """channel_mean stays the single batchable knob: doubling it doubles
+        every per-device mean."""
+        geo = GeometryConfig()
+        e1 = Experiment(ridge_spec(geometry=geo))
+        e1.setup()
+        spec2 = ridge_spec(geometry=geo)
+        spec2 = dataclasses.replace(
+            spec2, fl=dataclasses.replace(
+                spec2.fl, channel=dataclasses.replace(
+                    spec2.fl.channel, channel_mean=2e-3)))
+        e2 = Experiment(spec2)
+        e2.setup()
+        np.testing.assert_allclose(e2.state.scale, 2.0 * e1.state.scale,
+                                   rtol=1e-12)
+
+
+class TestImperfectCSI:
+    def test_perfect_csi_is_h_bitwise(self):
+        """Satellite: h_hat == h bitwise when csi_error = 0, for both error
+        models, including a traced zero (the batched sweep's mixed lanes)."""
+        h = draw_channel(KEY, ChannelConfig(num_devices=32,
+                                            channel_mean=1e-3))
+        for model in chl.CSI_ERROR_MODELS:
+            np.testing.assert_array_equal(
+                np.asarray(chl.estimate(h, KEY, 0.0, 1e-3, model)),
+                np.asarray(h))
+            traced = jax.jit(lambda hh, e: chl.estimate(hh, KEY, e, 1e-3,
+                                                        model))
+            np.testing.assert_array_equal(
+                np.asarray(traced(h, jnp.asarray(0.0))), np.asarray(h))
+
+    def test_estimate_nonnegative_and_scaled(self):
+        cfg = ChannelConfig(num_devices=50_000, channel_mean=1e-3)
+        h = draw_channel(KEY, cfg)
+        for model in chl.CSI_ERROR_MODELS:
+            for err in (0.1, 0.5):
+                hh = chl.estimate(h, jax.random.fold_in(KEY, 1), err,
+                                  cfg.amplitude_scale(), model)
+                assert float(jnp.min(hh)) >= 0.0
+                spread = float(jnp.std(hh - h))
+                assert spread > 0
+            # larger csi_error -> larger deviation
+            d1 = float(jnp.std(chl.estimate(h, KEY, 0.1,
+                                            cfg.amplitude_scale(), model)
+                               - h))
+            d2 = float(jnp.std(chl.estimate(h, KEY, 0.5,
+                                            cfg.amplitude_scale(), model)
+                               - h))
+            assert d2 > 3.0 * d1
+
+    def test_additive_error_std_matches(self):
+        cfg = ChannelConfig(num_devices=100_000, channel_mean=1e-3)
+        h = draw_channel(KEY, cfg)
+        err = 0.25
+        hh = chl.estimate(h, jax.random.fold_in(KEY, 2), err,
+                          cfg.amplitude_scale(), "additive")
+        # |h + e| folds a negligible mass at this SNR: std(hh - h) ~ err*scale
+        want = err * cfg.amplitude_scale()
+        assert abs(float(jnp.std(hh - h)) - want) / want < 0.05
+
+    def test_unknown_model_raises(self):
+        with pytest.raises(ValueError, match="unknown csi_error_model"):
+            chl.estimate(jnp.ones((3,)), KEY, 0.1, 1.0, "nope")
+
+    def test_setup_solves_on_h_hat(self):
+        """Algorithm 1 runs on the server's estimate: the optimized b of an
+        imperfect-CSI setup equals the reference solve on h_hat (and NOT
+        the solve on the true h)."""
+        e = Experiment(ridge_spec(csi_error=0.4))
+        e.setup()
+        st = e.state
+        assert st.h_hat is not None
+        assert not np.allclose(st.h_hat, st.h)
+        n = e.task.model_dim
+        ref_hat = amp.solve_problem3(st.h_hat, 1e-7, n, math.sqrt(5.0))
+        np.testing.assert_allclose(st.b, ref_hat.b, rtol=1e-6, atol=1e-9)
+        ref_true = amp.solve_problem3(st.h, 1e-7, n, math.sqrt(5.0))
+        assert not np.allclose(st.b, ref_true.b)
+
+    def test_csi_gain_err_diagnostic(self):
+        """Perfect CSI: the misalignment diagnostic is a hard 0 every
+        round; imperfect CSI moves it, and a time-varying channel re-rolls
+        it round to round."""
+        e0 = Experiment(ridge_spec())
+        e0.run(4)
+        assert e0.history["csi_gain_err"] == [0.0] * 4
+        e1 = Experiment(ridge_spec(csi_error=0.3))
+        e1.run(4)
+        assert all(v != 0.0 for v in e1.history["csi_gain_err"])
+        # fixed channel, fixed estimate: constant misalignment
+        assert len(set(e1.history["csi_gain_err"])) == 1
+        e2 = Experiment(ridge_spec(csi_error=0.3, block_fading=True))
+        e2.run(4)
+        assert len(set(e2.history["csi_gain_err"])) == 4
+
+
+class TestEngineIntegration:
+    """Scan-vs-python driver parity on the new environment axes, resume
+    semantics of the AR(1) state, and checkpoint round-trips."""
+
+    AXES = [
+        dict(model="ar1", rho=0.9),
+        dict(model="ar1", rho=0.9, csi_error=0.3),
+        dict(model="rician", rician_k=3.0, block_fading=True),
+        dict(block_fading=True, csi_error=0.2),
+        dict(csi_error=0.2),
+        dict(geometry=GeometryConfig(shadowing_std_db=4.0)),
+        dict(geometry=GeometryConfig(), block_fading=True, csi_error=0.1),
+    ]
+
+    @pytest.mark.parametrize("chkw", AXES,
+                             ids=lambda a: ",".join(f"{k}={getattr(v, 'cell_radius', v)}"
+                                                    for k, v in a.items()))
+    def test_driver_parity(self, chkw):
+        hists = {}
+        for driver in ("python", "scan"):
+            e = Experiment(ridge_spec(driver, **chkw))
+            e.run(7)
+            hists[driver] = e.history
+        assert set(hists["python"]) == set(hists["scan"])
+        for k in hists["python"]:
+            np.testing.assert_allclose(hists["scan"][k], hists["python"][k],
+                                       rtol=2e-6, atol=1e-9, err_msg=k)
+
+    @pytest.mark.parametrize("driver", ["scan", "python"])
+    def test_ar1_resume_continues_process(self, driver):
+        """run(3); run(3) == run(6): the Gauss-Markov state persists in
+        FLState so the correlated channel continues, not restarts."""
+        spec = ridge_spec(driver, model="ar1", rho=0.8, csi_error=0.1)
+        e_once = Experiment(spec)
+        e_once.run(6)
+        e_twice = Experiment(spec)
+        e_twice.run(3)
+        e_twice.run(3)
+        np.testing.assert_allclose(e_twice.state.h, e_once.state.h,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(e_twice.state.fad_state,
+                                   e_once.state.fad_state, rtol=1e-6)
+        for k in rt.DIAG_KEYS:
+            np.testing.assert_allclose(e_twice.history[k],
+                                       e_once.history[k], rtol=2e-6,
+                                       atol=1e-9, err_msg=k)
+
+    def test_checkpoint_roundtrip_ar1_csi_geometry(self, tmp_path):
+        """save at round 3, load into a fresh Experiment, run 3 more —
+        equals an unbroken 6-round run, with the full environment state
+        (h_hat, fading state, geometry scales) restored."""
+        spec = ridge_spec(model="ar1", rho=0.8, csi_error=0.2,
+                          geometry=GeometryConfig(shadowing_std_db=3.0))
+        e_once = Experiment(spec)
+        e_once.run(6)
+        e = Experiment(spec)
+        e.run(3)
+        path = str(tmp_path / "ck.msgpack")
+        e.save(path)
+        e2 = Experiment(spec)
+        e2.load(path)
+        np.testing.assert_array_equal(e2.state.fad_state, e.state.fad_state)
+        np.testing.assert_array_equal(e2.state.h_hat, e.state.h_hat)
+        np.testing.assert_array_equal(e2.state.scale, e.state.scale)
+        e2.run(3)
+        np.testing.assert_allclose(e2.state.h, e_once.state.h, rtol=1e-6)
+        for g, w in zip(jax.tree_util.tree_leaves(e2.state.params),
+                        jax.tree_util.tree_leaves(e_once.state.params)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-6, atol=1e-8)
+
+    def test_load_pre_subsystem_checkpoint(self, tmp_path):
+        """Non-strict restore: a checkpoint missing the new channel leaves
+        (written before this subsystem) still loads, keeping setup()'s
+        values for them."""
+        from repro.checkpoint import store
+        spec = ridge_spec()
+        e = Experiment(spec)
+        e.run(2)
+        path = str(tmp_path / "old.msgpack")
+        e.save(path)
+        # strip the new leaf as an old writer would have
+        import msgpack
+        with open(path, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False)
+        assert any("h_hat" in k for k in payload["leaves"])
+        payload["leaves"] = {k: v for k, v in payload["leaves"].items()
+                             if "h_hat" not in k}
+        with open(path, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        e2 = Experiment(spec)
+        e2.load(path)
+        assert e2.round == 2
+        np.testing.assert_allclose(e2.state.h, e.state.h)
+        # strict restore still refuses
+        with pytest.raises(KeyError, match="h_hat"):
+            store.restore(path, e2._ckpt_tree())
+
+    def test_ar1_rho0_matches_block_fading_trajectory(self):
+        """The whole-engine version of the rho = 0 degeneracy: an 'ar1'
+        run at rho = 0 produces the block-fading run's exact history."""
+        e_ar = Experiment(ridge_spec(model="ar1", rho=0.0))
+        e_bf = Experiment(ridge_spec(block_fading=True))
+        e_ar.run(5)
+        e_bf.run(5)
+        assert e_ar.history == e_bf.history
+
+    def test_setup_requires_fad_state_for_ar1(self):
+        spec = ridge_spec(model="ar1", rho=0.5)
+        e = Experiment(spec)
+        e.setup()
+        e.state.fad_state = None
+        with pytest.raises(ValueError, match="fading state"):
+            e.run(1)
+
+
+class TestDefaultBitwiseGolden:
+    """Acceptance: the default environment (model='rayleigh', csi_error=0,
+    fixed or block-fading) reproduces the PRE-subsystem trajectories
+    bitwise on CPU — golden data recorded at the pre-PR seed by
+    tests/golden/generate.py."""
+
+    GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden", "channel_defaults.json")
+
+    @pytest.fixture(scope="class")
+    def golden(self):
+        with open(self.GOLDEN) as f:
+            return json.load(f)
+
+    @pytest.fixture(scope="class")
+    def cases(self):
+        import sys
+        sys.path.insert(0, os.path.dirname(self.GOLDEN))
+        try:
+            import generate
+        finally:
+            sys.path.pop(0)
+        return generate
+
+    def test_all_cases_bitwise(self, golden, cases):
+        specs = cases.cases()
+        assert set(specs) == set(golden)
+        for name, spec in specs.items():
+            got = cases.run_case(spec)
+            want = golden[name]
+            assert got["params_sha256"] == want["params_sha256"], name
+            assert got["h"] == want["h"], name
+            assert got["b"] == want["b"], name
+            assert got["a"] == want["a"], name
+            for key, vals in want["history"].items():
+                assert got["history"][key] == vals, (name, key)

@@ -138,14 +138,25 @@ class TestSweepSpecGeometry:
             {"seed": (0, 1), "noise_var": (0.0, 1e-7), "eta": (0.01, 0.02),
              "s_target": (0.98, 0.99), "grad_bound": (10.0, 25.0),
              "b_max": (1.0, 2.0), "channel_mean": (1e-3, 2e-3),
+             "rho": (0.0, 0.9), "csi_error": (0.0, 0.2),
              "scheme": ("normalized", "benchmark1"),
+             "channel.model": ("rayleigh", "ar1"),
+             "rician_k": (0.0, 5.0),
              "participation": (0.5, 1.0), "alpha": (0.5, 1.0)})
         cls = sweep.classification()
         for name in ("seed", "noise_var", "eta", "s_target", "grad_bound",
-                     "b_max", "channel_mean"):
+                     "b_max", "channel_mean", "rho", "csi_error"):
             assert cls[name] == BATCHABLE, name
-        for name in ("scheme", "participation", "alpha"):
+        for name in ("scheme", "participation", "alpha", "channel.model",
+                     "rician_k"):
             assert cls[name] == STRUCTURAL, name
+
+    def test_bare_model_axis_is_the_channel_model(self):
+        assert resolve_axis("model") == ("channel", "model")
+        assert resolve_axis("channel.model") == ("channel", "model")
+        assert resolve_axis("model.hidden") == ("model", "hidden")
+        spec = apply_axis(ridge_spec(), "model", "ar1")
+        assert spec.fl.channel.model == "ar1"
 
     def test_composite_classification(self):
         sweep = SweepSpec(ridge_spec(), {
@@ -233,6 +244,73 @@ class TestBatchedSequentialParity:
         # hosts its ops are the XLA oracles, which vmap like the rest
         assert_parity(SweepSpec(ridge_spec(backend="kernels"),
                                 {"seed": (0, 1), "noise_var": (1e-7, 1e-6)}))
+
+    def _env_spec(self, **chkw):
+        """ridge_spec with wireless-environment channel fields folded in."""
+        spec = ridge_spec()
+        channel = dataclasses.replace(spec.fl.channel, **chkw)
+        return dataclasses.replace(
+            spec, fl=dataclasses.replace(spec.fl, channel=channel))
+
+    def test_rho_axis_parity(self):
+        """AR(1) correlation is a batchable lane: lanes at different rho
+        (including the rho = 0 block-fading degeneracy) share one vmapped
+        program whose Gauss-Markov state rides the scan carry."""
+        res = assert_parity(SweepSpec(self._env_spec(model="ar1"),
+                                      {"rho": (0.0, 0.5, 0.95),
+                                       "seed": (0, 1)}))
+        assert res.history["csi_gain_err"].max() == 0.0
+
+    def test_csi_error_axis_parity_fixed_channel(self):
+        assert_parity(SweepSpec(self._env_spec(),
+                                {"csi_error": (0.0, 0.1, 0.3),
+                                 "seed": (0, 1)}))
+
+    def test_csi_error_axis_parity_fading(self):
+        """Imperfect-CSI lanes under block fading: the in-scan re-solve of
+        Problem 3 runs on every lane's own per-round estimate."""
+        res = assert_parity(SweepSpec(self._env_spec(block_fading=True),
+                                      {"csi_error": (0.0, 0.2)}))
+        err = res.grid("csi_gain_err")
+        np.testing.assert_array_equal(err[0], 0.0)     # perfect lane: hard 0
+        assert np.all(err[1] != 0.0)                   # imperfect lane moves
+
+    def test_env_axes_composed_with_kernels_backend(self):
+        """The acceptance composition: AR(1) + imperfect CSI + the kernels
+        backend + batchable seed/noise lanes, batched == sequential."""
+        spec = self._env_spec(model="ar1", rho=0.7, csi_error=0.2)
+        spec = dataclasses.replace(
+            spec, fl=dataclasses.replace(spec.fl, backend="kernels"))
+        assert_parity(SweepSpec(spec, {"seed": (0, 1),
+                                       "noise_var": (1e-7, 1e-6)}))
+
+    def test_rho_x_csi_grid_parity(self):
+        assert_parity(SweepSpec(self._env_spec(model="ar1"),
+                                {"rho": (0.0, 0.8),
+                                 "csi_error": (0.0, 0.2)}))
+
+    def test_channel_model_axis_is_structural_and_groups(self):
+        """A channel-model axis splits into per-model sub-batches (rayleigh
+        lanes stay fixed-channel programs, ar1 lanes carry fading state);
+        both still match their sequential twins."""
+        sweep = SweepSpec(self._env_spec(),
+                          {"channel.model": ("rayleigh", "ar1"),
+                           "seed": (0, 1)})
+        assert sweep.classification()["channel.model"] == STRUCTURAL
+        res = assert_parity(sweep)
+        grid = res.grid("grad_norm_mean")
+        assert not np.allclose(grid[0, 0], grid[1, 0])
+
+    def test_geometry_axis_runs_and_matches(self):
+        """GeometryConfig values sweep structurally; the per-device scale
+        vectors ride the batched program's stacked state."""
+        from repro.channels import GeometryConfig
+        sweep = SweepSpec(
+            self._env_spec(block_fading=True),
+            {"channel.geometry": (None, GeometryConfig(shadowing_std_db=3.0)),
+             "seed": (0, 1)})
+        assert sweep.classification()["channel.geometry"] == STRUCTURAL
+        assert_parity(sweep)
 
     def test_seeds_parity_mnist_composed_scenario_axes(self):
         # partial participation + adamw + H=2 local steps are structural;
