@@ -188,6 +188,15 @@ def engine_rounds_per_sec(rounds: int = 64,
             rows.append((f"engine/{task}/{driver}", dt / n * 1e6,
                          f"rounds_per_sec={rps[driver]:.2f}"))
         speedup = rps["scan"] / rps["python"]
+        if speedup < 1.0:
+            # the engine's whole premise: the compiled scan must never lose
+            # to the host loop.  The MLP (compute-bound) side regressed once
+            # when chunk batches were host-gathered feature rows; the
+            # index-batch providers (repro.fl.tasks) fixed it — this guard
+            # keeps it fixed
+            raise AssertionError(
+                f"scan driver is {speedup:.2f}x the python driver on "
+                f"{task} (< 1.0x) — the compiled engine regressed")
         rows.append((f"engine/{task}/speedup", 0.0,
                      f"scan_over_python={speedup:.2f}x"))
         dump[task] = {"rounds_per_sec": rps, "speedup": speedup, "rounds": n}
@@ -400,6 +409,88 @@ def csi_robustness(rounds: int = 400,
                          f"final_gap={mean[i, j][-1]:.5f}"
                          f"+-{std[i, j][-1]:.5f}"))
     _dump("csi_robustness", curves)
+    return rows
+
+
+def kscale_flat_memory(quick: bool = False) -> List[Tuple[str, float, str]]:
+    """Streaming K-scale headline (the PR-6 tentpole deliverable): a
+    100,000-device OTA round on the ``k_block`` streaming engine, with peak
+    RSS held FLAT against the dense path's linear growth in K.
+
+    Three subprocess cases (``benchmarks.kscale_case``; each owns a process
+    because peak RSS is a lifetime high-water mark — measured via the
+    exec-fresh ``VmHWM``, not the fork-inherited ``ru_maxrss``): the dense
+    engine at
+    two small K to fit its MB-per-device slope, then the streaming engine at
+    the target K.  Asserted: streaming peak RSS < 0.5x the dense
+    extrapolation at the same K (the measured ratio is ~0.04) AND under an
+    absolute pin that catches an accidental [K, N] / [K, B, d]
+    materialization even if the extrapolation is noisy.  Quick mode shrinks
+    every K by 5x for the CI smoke — same shape, same guards."""
+    import json as _json
+    import subprocess
+    import sys
+
+    # the dense slope is fit from the SAME two K in both modes: smaller
+    # points would shave seconds but leave the fit inside RSS noise (tens of
+    # MB) — only the streaming K shrinks for the CI smoke
+    if quick:
+        rounds, dense_ks, stream_k, stream_kb = 2, (1000, 2000), 20_000, 500
+    else:
+        rounds, dense_ks, stream_k, stream_kb = 4, (1000, 2000), 100_000, 1000
+    RSS_PIN_MB = 2048.0
+
+    def case(devices: int, k_block: int) -> dict:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.kscale_case",
+             "--devices", str(devices), "--k-block", str(k_block),
+             "--rounds", str(rounds)],
+            capture_output=True, text=True)
+        if out.returncode != 0:
+            raise AssertionError(
+                f"kscale case K={devices} k_block={k_block} failed:\n"
+                f"{out.stderr[-2000:]}")
+        return _json.loads(out.stdout.strip().splitlines()[-1])
+
+    rows, dense = [], []
+    for kdev in dense_ks:
+        r = case(kdev, 0)
+        dense.append(r)
+        rows.append((f"kscale/dense/K={kdev}", 1e6 / r["rounds_per_sec"],
+                     f"peak_rss_mb={r['peak_rss_mb']:.0f};"
+                     f"rounds_per_sec={r['rounds_per_sec']:.2f}"))
+    stream = case(stream_k, stream_kb)
+    rows.append((f"kscale/streaming/K={stream_k}",
+                 1e6 / stream["rounds_per_sec"],
+                 f"peak_rss_mb={stream['peak_rss_mb']:.0f};"
+                 f"rounds_per_sec={stream['rounds_per_sec']:.2f};"
+                 f"k_block={stream_kb}"))
+
+    (k1, m1), (k2, m2) = [(r["devices"], r["peak_rss_mb"]) for r in dense]
+    slope = (m2 - m1) / (k2 - k1)                   # MB per device, dense
+    extrapolated = m2 + slope * (stream_k - k2)
+    ratio = stream["peak_rss_mb"] / extrapolated
+    if stream["peak_rss_mb"] > 0.5 * extrapolated:
+        raise AssertionError(
+            f"streaming peak RSS {stream['peak_rss_mb']:.0f} MB at "
+            f"K={stream_k} exceeds half the dense extrapolation "
+            f"{extrapolated:.0f} MB — the K axis is leaking into memory")
+    if stream["peak_rss_mb"] > RSS_PIN_MB:
+        raise AssertionError(
+            f"streaming peak RSS {stream['peak_rss_mb']:.0f} MB exceeds the "
+            f"{RSS_PIN_MB:.0f} MB pin — something materializes O(K)")
+    rows.append(("kscale/memory_ratio", 0.0,
+                 f"stream_over_dense_extrapolated={ratio:.3f};"
+                 f"dense_extrapolated_mb={extrapolated:.0f}"))
+    _dump("kscale", {
+        "rounds": rounds,
+        "dense": dense,
+        "streaming": stream,
+        "dense_slope_mb_per_device": slope,
+        "dense_extrapolated_mb_at_stream_k": extrapolated,
+        "stream_over_dense_extrapolated": ratio,
+        "rss_pin_mb": RSS_PIN_MB,
+    })
     return rows
 
 

@@ -57,6 +57,10 @@ def main() -> None:
         # CSI re-solve must stay within 2x of plain fading, asserted) and
         # the CSI-robustness figure (scheme x csi_error x seed bands)
         ("channel", lambda: figures.channel_rounds_per_sec(r(256, 96))),
+        # the streaming K-scale engine: a 100,000-device round (k_block
+        # lax.scan superposition) vs the dense path's linear peak-RSS growth
+        # — subprocess cases, flat-memory + absolute-pin guards asserted
+        ("kscale", lambda: figures.kscale_flat_memory(quick=args.quick)),
         ("csi_robustness", lambda: figures.csi_robustness(r(400, 60))),
         # the declarative spec axes: server optimizer / local steps /
         # partial participation, each one field on the baseline spec

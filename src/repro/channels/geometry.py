@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -74,5 +75,26 @@ def relative_gains(key: jax.Array, geo: GeometryConfig,
         x_db = geo.shadowing_std_db * np.asarray(
             jax.random.normal(jax.random.fold_in(key, 1), (num_devices,)),
             np.float64)
+        gains = gains * 10.0 ** (x_db / 20.0)
+    return gains
+
+
+def relative_gains_block(key: jax.Array, geo: GeometryConfig,
+                         dev_idx: jax.Array) -> jax.Array:
+    """Lazy per-K-block twin of ``relative_gains``: device i's distance (and
+    shadowing) draw folds from its own index, so ANY blocking of ``[0, K)``
+    concatenates to the same gain vector — the 100k-device path samples one
+    K-block of geometry at a time, jit-side, instead of materializing a [K]
+    host array up front.  A device-indexed key schedule, deliberately NOT
+    the same stream as ``relative_gains``'s single [K] draw (which has no
+    per-device lazy form): pick one schedule per experiment."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(dev_idx)
+    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+    r2 = geo.min_distance ** 2 + u * (geo.cell_radius ** 2
+                                      - geo.min_distance ** 2)
+    gains = (jnp.sqrt(r2) / geo.ref_distance) ** (-geo.path_loss_exp / 2.0)
+    if geo.shadowing_std_db > 0.0:
+        x_db = geo.shadowing_std_db * jax.vmap(
+            lambda k: jax.random.normal(jax.random.fold_in(k, 1), ()))(keys)
         gains = gains * 10.0 ** (x_db / 20.0)
     return gains

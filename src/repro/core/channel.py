@@ -164,6 +164,30 @@ def draw_channel(key: jax.Array, cfg: ChannelConfig,
     return envelope(draw_fading_state(key, cfg.num_devices), sigma_r)
 
 
+def draw_fading_state_block(key: jax.Array, dev_idx: jax.Array) -> jax.Array:
+    """[len(dev_idx), 2] I/Q pairs with a DEVICE-INDEXED key schedule:
+    device i's pair folds from ``fold_in(key, i)``, so any blocking of
+    ``[0, K)`` concatenates to the same state — the lazy sampler behind the
+    100k-device streaming path, which draws one K-block of channel at a time
+    instead of materializing a [K, 2] array it mostly won't touch this
+    block.  Deliberately a different stream from ``draw_fading_state`` (one
+    monolithic [K, 2] draw has no per-device lazy form), so pick one
+    schedule per experiment and stay with it."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(dev_idx)
+    return jax.vmap(lambda k: jax.random.normal(k, (2,)))(keys)
+
+
+def draw_channel_block(key: jax.Array, cfg: ChannelConfig,
+                       dev_idx: jax.Array,
+                       scale: Optional[jax.Array] = None) -> jax.Array:
+    """Rayleigh draw of ``h`` restricted to the devices ``dev_idx`` — the
+    blocking-invariant twin of ``draw_channel`` (device-indexed key
+    schedule, see ``draw_fading_state_block``).  ``scale`` is a scalar or
+    the ALREADY-GATHERED [len(dev_idx)] per-device scale."""
+    sigma_r = cfg.rayleigh_scale() if scale is None else scale
+    return envelope(draw_fading_state_block(key, dev_idx), sigma_r)
+
+
 def channel_for_round(key: jax.Array, cfg: ChannelConfig, round_idx,
                       scale: Optional[jax.Array] = None) -> jax.Array:
     """Channel draw for a given round honouring the block-fading switch.

@@ -66,11 +66,25 @@ class OTAConfig:
     noiseless: bool = False
     # which execution backend aggregate() routes through
     backend: str = "vmap"
+    # Streaming superposition: aggregate the device axis in K-blocks of this
+    # size (``None`` = dense, the bitwise-pinned default).  The vmap backend
+    # runs a ``lax.scan`` over K-blocks into a single fp32 accumulator; the
+    # kernels backend grids the K-way reduction itself ((N-block, K-block)
+    # Pallas grid).  Streaming == dense up to float associativity of the
+    # blocked sums (the noise draw is bitwise-shared).
+    k_block: Optional[int] = None
 
     def __post_init__(self):
         schemes.validate_config(self.scheme, self.grad_bound)
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; one of {BACKENDS}")
+        if self.k_block is not None:
+            if self.k_block < 1:
+                raise ValueError(f"k_block must be >= 1, got {self.k_block}")
+            if self.backend == "mesh":
+                raise ValueError("the mesh backend's device axis IS the mesh "
+                                 "— k_block streaming applies to the stacked "
+                                 "(vmap/kernels) backends only")
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +166,218 @@ def server_post(scheme: str, y: PyTree, side: dict, h: jax.Array,
     return sch.server_post(y, schemes.fold_side_stacked(side, h, b))
 
 
+# ---------------------------------------------------------------------------
+# streaming superposition (K-blocked accumulation; OTAConfig.k_block)
+#
+# The carry API below is the single definition of "accumulate one K-block of
+# transmit signals into a running fp32 aggregate": ``aggregate`` drives it
+# with a ``lax.scan`` over a reshaped stacked pytree, and the FL runtime
+# drives it with per-block *gradient computation* inside its own scan (the
+# flat-memory 100k-device round, where a dense [K, ...] stack never exists).
+# Parity with the dense path is exact up to float associativity of the
+# blocked sums; the channel-noise draw is bitwise-shared (same key schedule
+# on the same single-device template).
+
+
+def _device_template(stacked: PyTree) -> PyTree:
+    """Single-device fp32 zeros with the stacked tree's per-device shapes."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape[1:], jnp.float32), stacked)
+
+
+def _side_parts(sch: schemes.Scheme, count: int):
+    """Split a scheme's side info into (array-valued names, number-valued
+    dict) using dummy stats — the array parts are hb-weighted running sums in
+    the streaming carry, the numbers (dimension constants) pass through."""
+    if sch.collect_side is None:
+        return (), {}
+    z = jnp.zeros((1,), jnp.float32)
+    dummy = schemes.DeviceStats(count=count, sq_norm=z,
+                                total=z if sch.needs_moments else None)
+    side = sch.collect_side(dummy)
+    arrays = tuple(k for k, v in side.items() if isinstance(v, jax.Array))
+    numbers = {k: v for k, v in side.items() if not isinstance(v, jax.Array)}
+    return arrays, numbers
+
+
+def streaming_carry(cfg: OTAConfig, template: PyTree) -> dict:
+    """Zero accumulator carry for a K-blocked aggregation.  ``template`` is a
+    single-device gradient pytree (shapes only).  The carry holds the running
+    fp32 superposition (a pytree on the vmap backend, the raveled flat vector
+    on the kernels backend), the hb-weighted side-info sums, the running
+    server-side hb mass, and the kernels path's scalar shift correction."""
+    sch = schemes.get(cfg.scheme)
+    n = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(template))
+    if cfg.backend == "kernels" and not sch.baseline:
+        acc = jnp.zeros((n,), jnp.float32)
+    else:
+        acc = jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), template)
+    side_names, _ = _side_parts(sch, n)
+    zero = jnp.zeros((), jnp.float32)
+    return {"acc": acc, "hb_srv": zero, "shift": zero,
+            "side": {name: zero for name in side_names}}
+
+
+def streaming_block(cfg: OTAConfig, carry: dict, block_tree: PyTree,
+                    hb_air: jax.Array, hb_srv: jax.Array, *,
+                    stats: Optional[schemes.DeviceStats] = None,
+                    grad_bound=None,
+                    baseline_weights: Optional[jax.Array] = None) -> dict:
+    """Accumulate one K-block of device gradients into the streaming carry.
+
+    ``hb_air`` is the true-channel superposition weight h_k b_k of the block
+    (the air); ``hb_srv`` the server-known weight h_hat_k b_k (side-info
+    folding).  ``stats`` lets a caller that already computed the block's
+    per-device statistics (the runtime's diagnostics pass) share them.
+    ``grad_bound`` overrides ``cfg.grad_bound`` with a traced value (the
+    batched sweep lane).  ``baseline_weights`` (baseline schemes only) turns
+    the running plain sum into a weighted one — the FL runtime's masked
+    participant mean — in which case the caller passes ``num_devices=1`` at
+    finish."""
+    sch = schemes.get(cfg.scheme)
+    if grad_bound is None:
+        grad_bound = cfg.grad_bound
+    if stats is None:
+        stats = schemes.compute_stats(block_tree, sch, batched=True)
+    hb_air = hb_air.astype(jnp.float32)
+    hb_srv = hb_srv.astype(jnp.float32)
+
+    if sch.baseline:
+        # ideal reference: running (optionally weighted) sum — the caller
+        # divides at finish
+        if baseline_weights is None:
+            acc = jax.tree_util.tree_map(
+                lambda A, l: A + jnp.sum(l.astype(jnp.float32), axis=0),
+                carry["acc"], block_tree)
+        else:
+            w = baseline_weights.astype(jnp.float32)
+            acc = jax.tree_util.tree_map(
+                lambda A, l: A + jnp.tensordot(w, l.astype(jnp.float32),
+                                               axes=(0, 0)),
+                carry["acc"], block_tree)
+        return {**carry, "acc": acc,
+                "hb_srv": carry["hb_srv"] + jnp.sum(hb_srv)}
+
+    shift = carry["shift"]
+    if cfg.backend == "kernels":
+        from repro.kernels import ops
+        leaves = jax.tree_util.tree_leaves(block_tree)
+        kb = leaves[0].shape[0]
+        flat2d = [l.astype(jnp.float32).reshape(kb, -1) for l in leaves]
+        if sch.per_tensor:
+            pre_fn = schemes.PRE_TRANSFORMS[sch.pre]
+            scales = sch.tensor_scale(stats, grad_bound)
+            flat = jnp.concatenate(
+                [pre_fn(l2) * s[:, None] for l2, s in zip(flat2d, scales)],
+                axis=1)
+            scale = hb_air
+            kernel_pre = "identity"
+        else:
+            flat = jnp.concatenate(flat2d, axis=1)
+            scale = sch.device_scale(stats, grad_bound) * hb_air
+            if sch.device_shift is not None:
+                shift = shift + jnp.sum(
+                    scale * sch.device_shift(stats, grad_bound))
+            kernel_pre = sch.pre
+        zeros = jnp.zeros((flat.shape[1],), jnp.float32)
+        partial = ops.ota_superpose(flat, scale, zeros, 1.0, pre=kernel_pre)
+        acc = carry["acc"] + partial
+    else:
+        x = schemes.transform(sch, block_tree, stats, grad_bound,
+                              batched=True, out_dtype=jnp.float32)
+        acc = jax.tree_util.tree_map(
+            lambda A, l: A + jnp.tensordot(hb_air, l, axes=(0, 0)),
+            carry["acc"], x)
+
+    side = carry["side"]
+    if side:
+        collected = sch.collect_side(stats)
+        side = {name: side[name] + jnp.sum(hb_srv * collected[name])
+                for name in side}
+    return {"acc": acc, "hb_srv": carry["hb_srv"] + jnp.sum(hb_srv),
+            "shift": shift, "side": side}
+
+
+def streaming_finish(cfg: OTAConfig, carry: dict, template: PyTree, a,
+                     key: Optional[jax.Array], *, noise_var=None,
+                     num_devices: Optional[jax.Array] = None) -> PyTree:
+    """Close a K-blocked aggregation: add the channel noise ONCE (bitwise the
+    dense draw — same key schedule, same single-device template), apply the
+    receiver gain and the scheme's server post-transform with the
+    accumulated side-info fold.  For baseline schemes ``num_devices`` (or
+    the participant count) divides the running sum into the mean."""
+    sch = schemes.get(cfg.scheme)
+    if noise_var is None:
+        noise_var = cfg.noise_var
+    if sch.baseline:
+        inv = 1.0 / num_devices
+        return jax.tree_util.tree_map(
+            lambda l: l * jnp.asarray(inv, l.dtype), carry["acc"])
+
+    if cfg.backend == "kernels":
+        from jax.flatten_util import ravel_pytree
+        _, unravel = ravel_pytree(template)
+        n = carry["acc"].shape[0]
+        if (key is not None and not cfg.noiseless
+                and schemes.maybe_positive(noise_var)):
+            noise, _ = ravel_pytree(
+                schemes.add_channel_noise(
+                    jax.tree_util.tree_map(jnp.zeros_like, template),
+                    key, noise_var))
+        else:
+            noise = jnp.zeros((n,), jnp.float32)
+        af = jnp.asarray(a, jnp.float32)
+        y_flat = af * (carry["acc"] + noise) + af * carry["shift"]
+        y = unravel(y_flat)
+    else:
+        summed = carry["acc"]
+        if (key is not None and not cfg.noiseless
+                and schemes.maybe_positive(noise_var)):
+            summed = schemes.add_channel_noise(summed, key, noise_var)
+        y = jax.tree_util.tree_map(
+            lambda l: jnp.asarray(a, l.dtype) * l, summed)
+
+    if sch.server_post is None:
+        return y
+    n = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(template))
+    _, numbers = _side_parts(sch, n)
+    folded = dict(numbers)
+    denom = carry["hb_srv"] + _EPS
+    for name, total in carry["side"].items():
+        folded[name] = total / denom
+    return sch.server_post(y, folded)
+
+
+def _aggregate_streaming(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array,
+                         b: jax.Array, key: Optional[jax.Array],
+                         h_hat: jax.Array) -> PyTree:
+    """``lax.scan`` K-block fallback behind ``aggregate`` (vmap backend, and
+    the kernels backend's per-block ops): the stacked input is viewed as
+    [num_blocks, k_block, ...] and folded block-by-block through the carry
+    API — the [K, N] transmit matrix is never formed."""
+    leaves = jax.tree_util.tree_leaves(stacked_grads)
+    k = leaves[0].shape[0]
+    kb = min(cfg.k_block, k)
+    if k % kb != 0:
+        raise ValueError(f"k_block {kb} must divide the device count {k}")
+    nb = k // kb
+    template = _device_template(stacked_grads)
+    blocks = jax.tree_util.tree_map(
+        lambda l: l.reshape((nb, kb) + l.shape[1:]), stacked_grads)
+    hb_air = (h * b).astype(jnp.float32).reshape(nb, kb)
+    hb_srv = (h_hat * b).astype(jnp.float32).reshape(nb, kb)
+
+    def body(carry, xs):
+        blk, ha, hs = xs
+        return streaming_block(cfg, carry, blk, ha, hs), None
+
+    carry, _ = jax.lax.scan(body, streaming_carry(cfg, template),
+                            (blocks, hb_air, hb_srv))
+    return streaming_finish(cfg, carry, template, cfg.a, key,
+                            num_devices=float(k))
+
+
 def aggregate(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
               key: Optional[jax.Array] = None,
               h_hat: Optional[jax.Array] = None) -> PyTree:
@@ -164,15 +390,22 @@ def aggregate(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
     means perfect CSI (``h_hat = h``), which is bitwise the historical
     behavior.  Returns the update direction ``y`` such that
     ``w <- w - eta * y``.
+
+    ``cfg.k_block`` streams the device axis: the kernels backend grids the
+    K-way reduction itself ((N-block, K-block) Pallas kernels / lax.scan
+    oracles), the vmap backend scans the carry API above.
     """
     if h_hat is None:
         h_hat = h
     if cfg.backend == "kernels":
         from repro.fed.kernel_path import aggregate_kernels
-        return aggregate_kernels(cfg, stacked_grads, h, b, key, h_hat=h_hat)
+        return aggregate_kernels(cfg, stacked_grads, h, b, key, h_hat=h_hat,
+                                 k_block=cfg.k_block)
     if cfg.backend == "mesh":
         from repro.distribution.ota_collectives import aggregate_mesh
         return aggregate_mesh(cfg, stacked_grads, h, b, key, h_hat=h_hat)
+    if cfg.k_block is not None:
+        return _aggregate_streaming(cfg, stacked_grads, h, b, key, h_hat)
 
     if schemes.get(cfg.scheme).baseline:
         return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), stacked_grads)

@@ -52,7 +52,8 @@ def _template_unravel(stacked: PyTree):
 def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
                       key: Optional[jax.Array] = None, *,
                       h_hat: Optional[jax.Array] = None,
-                      interpret: Optional[bool] = None) -> PyTree:
+                      interpret: Optional[bool] = None,
+                      k_block: Optional[int] = None) -> PyTree:
     """Pallas-kernel implementation of ``aggregate`` for any registered
     norm-scaling scheme.  stacked_grads: pytree with leading device axis K;
     returns the update direction y with the single-device pytree structure.
@@ -60,6 +61,11 @@ def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
     ``h`` is the true channel (folded into the superpose kernel's composite
     scale — the air); ``h_hat`` the server's CSI estimate, used only by the
     server-side side-info folding (None = perfect CSI).
+
+    ``k_block`` routes both the moments and the superpose launch through the
+    streaming (K-block, N-block)-grid kernels: the per-device statistics and
+    the K-way reduction accumulate block-by-block in fp32, so VMEM only ever
+    holds (k_block, block)-sized tiles of the stacked gradients.
     """
     if h_hat is None:
         h_hat = h
@@ -70,6 +76,8 @@ def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
 
     leaves = jax.tree_util.tree_leaves(stacked_grads)
     k = leaves[0].shape[0]
+    if k_block is not None:
+        k_block = min(k_block, k)
     flat2d = [l.astype(jnp.float32).reshape(k, -1) for l in leaves]
     hb = (h * b).astype(jnp.float32)
     template, unravel = _template_unravel(stacked_grads)
@@ -86,7 +94,8 @@ def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
         pre_fn = schemes.PRE_TRANSFORMS[sch.pre]
         kernel_pre = "identity"
         tensor_sq = tuple(
-            ops.batched_moments(l2, interpret=interpret)[0] for l2 in flat2d)
+            ops.batched_moments(l2, interpret=interpret, k_block=k_block)[0]
+            for l2 in flat2d)
         stats = schemes.DeviceStats(
             count=sum(l2.shape[1] for l2 in flat2d),
             sq_norm=sum(tensor_sq), tensor_sq_norms=tensor_sq)
@@ -96,7 +105,8 @@ def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
         scale = hb
     else:
         flat = jnp.concatenate(flat2d, axis=1)
-        sumsq, total = ops.batched_moments(flat, interpret=interpret)
+        sumsq, total = ops.batched_moments(flat, interpret=interpret,
+                                           k_block=k_block)
         stats = schemes.DeviceStats(
             count=flat.shape[1], sq_norm=sumsq,
             total=total if sch.needs_moments else None)
@@ -115,7 +125,7 @@ def aggregate_kernels(cfg, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
         noise = jnp.zeros((n,), jnp.float32)
 
     y_flat = ops.ota_superpose(flat, scale, noise, cfg.a, pre=kernel_pre,
-                               interpret=interpret)
+                               interpret=interpret, k_block=k_block)
     if shift is not None:
         # sum_k scale_k (g_k + shift_k) = kernel result + a * sum_k scale_k shift_k
         y_flat = y_flat + jnp.asarray(cfg.a, jnp.float32) * jnp.sum(scale * shift)

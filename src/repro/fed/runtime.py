@@ -215,6 +215,20 @@ class FLConfig:
     # device independently, 'fixed' schedules exactly round(p*K) devices
     participation: float = 1.0
     participation_mode: str = "bernoulli"
+    # --- K-scale axes -------------------------------------------------------
+    # Streaming round: compute gradients and fold them into the OTA
+    # accumulator k_block devices at a time (lax.scan), so the round's
+    # working set is O(k_block * N) instead of O(K * N).  None (default)
+    # keeps the dense round bitwise-pinned.  Streaming == dense up to float
+    # associativity of the blocked sums (tests/test_streaming.py).
+    k_block: Optional[int] = None
+    # Under fixed-mode partial participation, gather the scheduled
+    # participants' batches BEFORE the local gradient computation, so
+    # per-round compute scales with the active set m = round(p K), not K.
+    # Bitwise-identical to the dense masked round (params, tx_energy,
+    # num_participants); the grad-norm diagnostics then cover the
+    # participants only (non-participants never compute a gradient).
+    active_gather: bool = False
 
     def __post_init__(self):
         if self.channel is None:
@@ -241,6 +255,36 @@ class FLConfig:
             raise ValueError(
                 f"unknown participation_mode {self.participation_mode!r}; "
                 f"one of {PARTICIPATION_MODES}")
+        if self.active_gather:
+            if self.participation_mode != "fixed":
+                raise ValueError(
+                    "active_gather needs a static active-set size: use "
+                    "participation_mode='fixed' (bernoulli draws a random "
+                    "count per round)")
+            if self.participation >= 1.0:
+                raise ValueError(
+                    "active_gather requires participation < 1 (at p = 1 the "
+                    "gather is a random permutation that reorders the K-way "
+                    "sum; the dense path is the right tool)")
+        if self.k_block is not None:
+            if self.k_block < 1:
+                raise ValueError(f"k_block must be >= 1, got {self.k_block}")
+            if self.backend == "mesh":
+                raise ValueError("the mesh backend's device axis IS the mesh "
+                                 "— k_block streaming applies to the stacked "
+                                 "(vmap/kernels) backends only")
+            s = self.stream_length()
+            if s % min(self.k_block, s) != 0:
+                raise ValueError(
+                    f"k_block {self.k_block} must divide the streamed device "
+                    f"axis ({s} = {'the active set' if self.active_gather else 'num_devices'})")
+
+    def stream_length(self) -> int:
+        """Length of the streamed device axis: the fixed active-set size
+        ``round(p K)`` under ``active_gather``, else the full cohort K."""
+        if self.active_gather:
+            return max(1, int(round(self.participation * self.num_devices)))
+        return self.num_devices
 
 
 def structural_config(cfg: FLConfig) -> FLConfig:
@@ -390,6 +434,54 @@ def _participation_mask(cfg: FLConfig, key, t) -> jax.Array:
     return jnp.zeros((k,), jnp.float32).at[perm[:m]].set(1.0)
 
 
+def _participation_mask_block(cfg: FLConfig, key, t, lo: int,
+                              hi: int) -> jax.Array:
+    """Lazy per-K-block participation draw for ``bernoulli`` mode: device
+    ``i``'s coin folds from its own index, so any blocking of ``[0, K)``
+    concatenates to the same mask — the 100k+-device path never materializes
+    a [K] draw it won't use this block.  ``fixed`` mode needs the global
+    permutation and has no lazy form (use ``active_gather`` there)."""
+    if cfg.participation_mode != "bernoulli":
+        raise ValueError("lazy per-block participation draws exist for "
+                         "'bernoulli' only ('fixed' draws one global "
+                         "permutation)")
+    mk = jax.random.fold_in(jax.random.fold_in(key, t), _MASK_SALT)
+    keys = jax.vmap(lambda i: jax.random.fold_in(mk, i))(jnp.arange(lo, hi))
+    u = jax.vmap(lambda k_: jax.random.uniform(k_, ()))(keys)
+    return (u < cfg.participation).astype(jnp.float32)
+
+
+def _active_indices(cfg: FLConfig, key, t) -> jax.Array:
+    """Sorted [m] indices of the round's fixed-mode participant set — the
+    SAME permutation draw as ``_participation_mask``, so ``mask[idx] == 1``
+    by construction, and ascending order keeps the gathered K-way sums in
+    the dense path's reduction order (the bitwise-parity contract)."""
+    mk = jax.random.fold_in(jax.random.fold_in(key, t), _MASK_SALT)
+    m = max(1, int(round(cfg.participation * cfg.num_devices)))
+    perm = jax.random.permutation(mk, cfg.num_devices)
+    return jnp.sort(perm[:m])
+
+
+@jax.custom_batching.custom_vmap
+def _fence_leaf(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@_fence_leaf.def_vmap
+def _fence_leaf_vmap(axis_size, in_batched, x):
+    # the fence is an identity: under vmap it is the SAME barrier on the
+    # batched value (optimization_barrier itself has no batching rule, so
+    # the vmapped sweep engine needs this indirection)
+    return jax.lax.optimization_barrier(x), in_batched[0]
+
+
+def _fusion_fence(tree: PyTree) -> PyTree:
+    """Per-leaf ``optimization_barrier``: forces XLA to materialize the tree
+    before any consumer, so downstream reductions compile independently of
+    how the values were produced.  vmap-safe (see ``_fence_leaf``)."""
+    return jax.tree_util.tree_map(_fence_leaf, tree)
+
+
 def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch) -> PyTree:
     """The quantity each device hands to the scheme's transform: its local
     gradient for ``local_steps == 1`` (the paper), else the accumulated model
@@ -438,13 +530,43 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
             noise_var = over.noise_var
         if over.grad_bound is not None:
             grad_bound = over.grad_bound
-    stacked = _local_transmit(cfg, grad_fn, params, batch)
     if cfg.participation < 1.0:
         mask = _participation_mask(cfg, key, t)
         b_eff, a_eff = ota.participation_fold(h_hat, b, a, mask)
     else:
         mask = None
         b_eff, a_eff = b, a
+    if cfg.active_gather:
+        # fixed-mode active set: gather the scheduled participants' batches
+        # BEFORE the local computation so gradient compute scales with
+        # m = round(p K), then scatter the m gradients back into a zero
+        # [K, ...] stack and run the UNCHANGED dense aggregation.  A masked
+        # device's superposition / side-info / energy weight is an exact
+        # zero either way (b_eff = 0, and 0 * x == 0 * 0 in every K-way
+        # reduction term), so the round is bitwise the dense masked round —
+        # the participants are just the only devices that ever run grad_fn.
+        idx = _active_indices(cfg, key, t)
+        active = _local_transmit(
+            cfg, grad_fn, params,
+            jax.tree_util.tree_map(lambda l: l[idx], batch))
+        stacked = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((cfg.num_devices,) + l.shape[1:],
+                                l.dtype).at[idx].set(l), active)
+        b_air = b_eff[idx]
+    else:
+        idx = None
+        active = stacked = _local_transmit(cfg, grad_fn, params, batch)
+        b_air = b_eff
+    if mask is not None:
+        # fence the gradient stack so the aggregation below consumes a
+        # materialized [K, ...] value: without it XLA fuses the aggregate's
+        # K-way reductions into the (round-shape-dependent) gradient
+        # producer, and the dense-masked and active-gather programs — whose
+        # reduction TERMS are identical, masked devices contributing exact
+        # zeros — would associate them differently, breaking the bitwise
+        # gather contract.  Full-participation rounds (the golden-pinned
+        # default) never take this branch.
+        stacked = _fusion_fence(stacked)
     if mask is not None and sch.baseline:
         # baseline schemes bypass the channel (plain mean on every backend),
         # so the mask cannot reach them through b_eff — average over the
@@ -460,6 +582,46 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
                              grad_bound=grad_bound, backend=cfg.backend)
         y = ota.aggregate(ocfg, stacked, h, b_eff,
                           jax.random.fold_in(key, t), h_hat=h_hat)
+    # one stats pass feeds BOTH diagnostics (grad norms and the eq. 8
+    # transmit-energy accounting); the aggregate above keeps its own internal
+    # stats — folding the two would need aggregate() to return them.  Under
+    # active_gather the stats cover the participants only (the scattered
+    # zero rows are channel inputs, not computed gradients): the grad-norm
+    # diagnostics shrink to the active set, while tx_energy is unchanged
+    # (masked devices spent nothing — their dense energy terms were b_k = 0)
+    stats = schemes.compute_stats(active, sch, batched=True)
+    norms = jnp.sqrt(stats.sq_norm)
+    tx = schemes.transmit_energy(sch, stats, b_air, grad_bound,
+                                 None if idx is not None else mask)
+    if idx is not None:
+        # scatter the active set's energies back to the [K] layout (masked
+        # devices spent exactly 0) and fence, so the eq.-8 total below runs
+        # the same [K]-way sum as the dense masked round (per-device
+        # energies can still carry ulp noise: [m]-row reductions vectorize
+        # differently than [K]-row ones)
+        tx = jnp.zeros((cfg.num_devices,), tx.dtype).at[idx].set(tx)
+    if mask is not None:
+        tx = _fusion_fence(tx)
+    diag_core = {
+        "grad_norm_mean": jnp.mean(norms),
+        "grad_norm_min": jnp.min(norms),
+        "grad_norm_max": jnp.max(norms),
+        # total transmit energy sum_k b_k^2 ||x_k||^2 (eq. 8 budget) via the
+        # scheme's analytic accounting; masked-out devices spend nothing
+        "tx_energy": jnp.sum(tx),
+    }
+    return _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
+                       diag_core, a_eff, h, h_hat, b_eff)
+
+
+def _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
+                diag_core, a_eff, h, h_hat, b_eff):
+    """Post-aggregation tail shared by the dense and streaming rounds:
+    empty-round gating, the server-optimizer step, and the ``DIAG_KEYS``
+    assembly.  ``diag_core`` carries the grad-norm/energy numbers, which the
+    two rounds compute differently (one dense stats pass vs a blocked
+    running reduction); everything here sees only full-[K] channel vectors
+    and the round's update direction, so it is layout-agnostic."""
     if mask is not None:
         # an empty round (possible under bernoulli draws) applies no update:
         # participation_fold zeroed the gain, but server_post schemes can
@@ -478,12 +640,6 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
             lambda n, o: jnp.where(keep, n, o), new_params, params)
         new_opt_state = jax.tree_util.tree_map(
             lambda n, o: jnp.where(keep, n, o), new_opt_state, opt_state)
-    # one stats pass feeds BOTH diagnostics (grad norms and the eq. 8
-    # transmit-energy accounting); the aggregate above keeps its own internal
-    # stats — folding the two would need aggregate() to return them
-    stats = schemes.compute_stats(stacked, sch, batched=True)
-    norms = jnp.sqrt(stats.sq_norm)
-    tx = schemes.transmit_energy(sch, stats, b_eff, grad_bound, mask)
     if sch.baseline:
         # the ideal reference bypasses the channel; no gain to misalign
         csi_gain_err = jnp.zeros((), jnp.float32)
@@ -497,21 +653,126 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
         csi_gain_err = (gap / jnp.maximum(jnp.abs(designed),
                                           schemes.EPS)).astype(jnp.float32)
     diag = {
-        "grad_norm_mean": jnp.mean(norms),
-        "grad_norm_min": jnp.min(norms),
-        "grad_norm_max": jnp.max(norms),
+        **diag_core,
         "eta": eta,
         "update_norm": jnp.sqrt(sum(jnp.sum(jnp.square(l))
                                     for l in jax.tree_util.tree_leaves(y))),
-        # total transmit energy sum_k b_k^2 ||x_k||^2 (eq. 8 budget) via the
-        # scheme's analytic accounting; masked-out devices spend nothing
-        "tx_energy": jnp.sum(tx),
         "num_participants": (jnp.sum(mask) if mask is not None
                              else jnp.asarray(float(cfg.num_devices),
                                               jnp.float32)),
         "csi_gain_err": csi_gain_err,
     }
     return new_params, new_opt_state, diag
+
+
+def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
+                          opt_state, batch, h, h_hat, b, a, eta0, t, key,
+                          over: Optional[BatchAxes] = None,
+                          block_batch_fn=None):
+    """The flat-memory round (``cfg.k_block``): local gradients are computed
+    and folded into the OTA accumulator ``k_block`` devices at a time through
+    the streaming carry API (``ota.streaming_carry/_block/_finish``) inside a
+    ``lax.scan`` over K-blocks — the [K, ...] transmit stack never exists, so
+    the round's working set is O(k_block * N) plus O(K) channel vectors.
+
+    ``batch`` is the dense per-device batch pytree over the streamed axis
+    (the active set under ``active_gather``, else all K), or ``None`` — then
+    ``block_batch_fn(t, dev_idx)`` materializes one block's [k_block, ...]
+    batches from its [k_block] device indices, the 100k-device path where
+    even a round's batch stack would not fit.
+
+    Parity with the dense round: every per-device term (grad, scale, energy)
+    is computed identically; the K-way sums re-associate into block partials
+    (documented-ulp, tests/test_streaming.py), the channel-noise draw is
+    bitwise-shared, and grad_norm_min/max are exact (min/max associate)."""
+    if h_hat is None:
+        h_hat = h
+    noise_var = cfg.channel.noise_var
+    grad_bound = cfg.grad_bound
+    if over is not None:
+        if over.noise_var is not None:
+            noise_var = over.noise_var
+        if over.grad_bound is not None:
+            grad_bound = over.grad_bound
+    if cfg.participation < 1.0:
+        mask = _participation_mask(cfg, key, t)
+        b_eff, a_eff = ota.participation_fold(h_hat, b, a, mask)
+    else:
+        mask = None
+        b_eff, a_eff = b, a
+    if cfg.active_gather:
+        idx = _active_indices(cfg, key, t)
+        if batch is not None:
+            batch = jax.tree_util.tree_map(lambda l: l[idx], batch)
+        h_air, h_srv, b_air = h[idx], h_hat[idx], b_eff[idx]
+        dev = idx
+    else:
+        idx = None
+        h_air, h_srv, b_air = h, h_hat, b_eff
+        dev = jnp.arange(cfg.num_devices)
+    s = cfg.stream_length()
+    kb = min(cfg.k_block, s)
+    nb = s // kb
+
+    def blk(v):
+        return v.reshape((nb, kb) + v.shape[1:])
+
+    xs = {"ha": blk((h_air * b_air).astype(jnp.float32)),
+          "hs": blk((h_srv * b_air).astype(jnp.float32)),
+          "b": blk(b_air), "dev": blk(dev)}
+    if mask is not None and idx is None:
+        xs["mask"] = blk(mask)
+    weighted = mask is not None and sch.baseline
+    if weighted:
+        # masked baseline: the participant mean, accumulated as the SAME
+        # hb-free weighted sum the dense round takes (see _round_math)
+        w = mask / jnp.maximum(jnp.sum(mask), 1.0)
+        xs["w"] = blk(w if idx is None else w[idx])
+    if batch is not None:
+        xs["batch"] = jax.tree_util.tree_map(blk, batch)
+    elif block_batch_fn is None:
+        raise ValueError("streaming round got batch=None and no "
+                         "block_batch_fn — pass run(..., "
+                         "block_batch_provider=...) for the lazy-batch path")
+    ocfg = ota.OTAConfig(scheme=cfg.scheme, a=a_eff, noise_var=noise_var,
+                         grad_bound=grad_bound, backend=cfg.backend,
+                         k_block=kb)
+    template = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zero = jnp.zeros((), jnp.float32)
+    carry0 = (ota.streaming_carry(ocfg, template), zero,
+              jnp.asarray(jnp.inf, jnp.float32),
+              jnp.asarray(-jnp.inf, jnp.float32), zero)
+
+    def body(carry, x):
+        oc, nsum, nmin, nmax, txsum = carry
+        bat = x["batch"] if "batch" in x else block_batch_fn(t, x["dev"])
+        g_blk = _local_transmit(cfg, grad_fn, params, bat)
+        stats = schemes.compute_stats(g_blk, sch, batched=True)
+        norms = jnp.sqrt(stats.sq_norm)
+        tx = schemes.transmit_energy(sch, stats, x["b"], grad_bound,
+                                     x.get("mask"))
+        oc = ota.streaming_block(ocfg, oc, g_blk, x["ha"], x["hs"],
+                                 stats=stats, grad_bound=grad_bound,
+                                 baseline_weights=x.get("w"))
+        return (oc, nsum + jnp.sum(norms),
+                jnp.minimum(nmin, jnp.min(norms)),
+                jnp.maximum(nmax, jnp.max(norms)),
+                txsum + jnp.sum(tx)), None
+
+    (oc, nsum, nmin, nmax, txsum), _ = jax.lax.scan(body, carry0, xs)
+    y = ota.streaming_finish(ocfg, oc, template, a_eff,
+                             jax.random.fold_in(key, t),
+                             noise_var=noise_var,
+                             num_devices=1.0 if weighted else float(s))
+    diag_core = {
+        "grad_norm_mean": nsum / s,
+        "grad_norm_min": nmin,
+        "grad_norm_max": nmax,
+        "tx_energy": txsum,
+    }
+    return _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
+                       diag_core, a_eff, h, h_hat, b_eff)
 
 
 def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t,
@@ -584,12 +845,14 @@ def _make_fading_refresh(cfg: FLConfig, model_dim: int):
 
 
 @_engine_cache
-def make_round_step(cfg: FLConfig, grad_fn: GradFn):
+def make_round_step(cfg: FLConfig, grad_fn: GradFn, block_batch_fn=None):
     """Builds the jitted one-round function (the ``python`` driver's unit).
 
     round_step(params, opt_state, device_batches, h, h_hat, b, a, eta0, t,
                key) -> (new_params, new_opt_state, diagnostics)
-    device_batches: pytree with leading [K, ...] axis (per-device minibatches).
+    device_batches: pytree with leading [K, ...] axis (per-device
+    minibatches) — or None under ``cfg.k_block`` with a ``block_batch_fn``
+    (the lazy-batch streaming round; see ``_round_math_streaming``).
 
     Cached on (cfg, grad_fn) — ``FLConfig`` is a frozen dataclass and
     functions/bound methods hash stably — so repeated ``run`` calls (resume,
@@ -602,6 +865,11 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
     def round_step(params, opt_state, device_batches, h, h_hat, b, a, eta0,
                    t, key):
         TRACE_COUNTS["round_step"] += 1
+        if cfg.k_block is not None:
+            return _round_math_streaming(cfg, sch, opt, grad_fn, params,
+                                         opt_state, device_batches, h, h_hat,
+                                         b, a, eta0, t, key,
+                                         block_batch_fn=block_batch_fn)
         return _round_math(cfg, sch, opt, grad_fn, params, opt_state,
                            device_batches, h, h_hat, b, a, eta0, t, key)
 
@@ -609,7 +877,7 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn):
 
 
 def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
-                     trace_counter: str):
+                     trace_counter: str, block_batch_fn=None):
     """The one chunk-scan body BOTH engine builders share: ``lax.scan`` of
     ``_round_math`` (+ the block-fading refresh) over a chunk of rounds.
     ``over=None`` bakes the config numerics into the trace (the
@@ -636,9 +904,15 @@ def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
                 # leafless: the refreshed estimate IS h there (the refresh's
                 # csi gate was off), so nothing is lost by dropping it
                 h_hat = None if h_hat is None else h_hat_t
-            params, opt_state, diag = _round_math(
-                cfg, sch, opt, grad_fn, params, opt_state, batch,
-                h, h_hat, b, a, eta0, t, key, over)
+            if cfg.k_block is not None:
+                params, opt_state, diag = _round_math_streaming(
+                    cfg, sch, opt, grad_fn, params, opt_state, batch,
+                    h, h_hat, b, a, eta0, t, key, over,
+                    block_batch_fn=block_batch_fn)
+            else:
+                params, opt_state, diag = _round_math(
+                    cfg, sch, opt, grad_fn, params, opt_state, batch,
+                    h, h_hat, b, a, eta0, t, key, over)
             return (params, opt_state, h, h_hat, b, a, fad_state), diag
 
         (params, opt_state, h, h_hat, b, a, fad_state), hist = jax.lax.scan(
@@ -650,14 +924,16 @@ def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
 
 
 @_engine_cache
-def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
+def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
+                    block_batch_fn=None):
     """Builds the compiled multi-round engine: one ``lax.scan`` over a chunk
     of rounds.  Param and server-optimizer buffers are donated (in-place
     across chunks) and the per-round diagnostics come back as [chunk] device
     arrays — one host transfer per chunk, not one per round.  Cached like
     ``make_round_step``.
     """
-    run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk")
+    run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk",
+                               block_batch_fn)
 
     def run_chunk(params, opt_state, h, h_hat, b, a, eta0, key, chan_key,
                   eff_gain, fad_state, over, ts, batches):
@@ -750,6 +1026,7 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         eval_every: int = 10, *, driver: str = "scan",
         chunk_size: int = 16,
         chunk_batch_provider: Optional[Callable[[Sequence[int]], Any]] = None,
+        block_batch_provider: Optional[Callable[[Any, Any], Any]] = None,
         ) -> Tuple[FLState, Dict[str, List]]:
     """Run ``num_rounds`` FL rounds on the selected driver.
 
@@ -766,6 +1043,13 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     batches as one [T, K, ...] pytree (a single gather + transfer), replacing
     the scan driver's default of stacking T ``batch_provider`` calls.
 
+    ``block_batch_provider(t, dev_idx)`` is the streaming round's lazy-batch
+    hook (requires ``cfg.k_block``): a traced function returning one
+    K-block's [k_block, ...] batch pytree from its [k_block] device indices,
+    called inside the round's block scan — the 100k-device path where no
+    [K, ...] (or even [k_block-free]) batch stack ever exists on the host.
+    ``batch_provider`` may then be ``None``.
+
     This signature is the stable compatibility surface; new scenario axes
     (server optimizer, local steps, participation) are ``FLConfig`` fields,
     and ``repro.fl.Experiment`` is the declarative front door that builds
@@ -773,6 +1057,9 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     """
     if driver not in DRIVERS:
         raise ValueError(f"unknown driver {driver!r}; one of {DRIVERS}")
+    if block_batch_provider is not None and cfg.k_block is None:
+        raise ValueError("block_batch_provider streams per-K-block batches "
+                         "inside the round scan; set cfg.k_block")
     opt = server_optimizer(cfg)
     if state.opt_state is None:
         # states built before the server-optimizer axis (or restored from
@@ -837,7 +1124,7 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
 
     t0 = state.round
     if driver == "python":
-        round_step = make_round_step(cfg, grad_fn)
+        round_step = make_round_step(cfg, grad_fn, block_batch_provider)
         fading_refresh = _make_fading_refresh(cfg, state.model_dim)
         params = state.params
         for t in range(t0 + 1, t0 + num_rounds + 1):
@@ -845,7 +1132,8 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
                 h, h_hat_t, b, a, fad_state = fading_refresh(
                     eff_gain, chan_key, jnp.asarray(t), fad_state, over)
                 h_hat = None if perfect_csi else h_hat_t
-            batch = batch_provider(t)
+            batch = (None if block_batch_provider is not None
+                     else batch_provider(t))
             params, opt_state, diag = round_step(params, opt_state, batch,
                                                  h, h_hat, b, a, eta0,
                                                  jnp.asarray(t), key)
@@ -855,7 +1143,8 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
             if eval_fn is not None and (t % eval_every == 0 or t == 1):
                 record_eval(params, t)
     else:
-        run_chunk = _make_run_chunk(cfg, grad_fn, state.model_dim)
+        run_chunk = _make_run_chunk(cfg, grad_fn, state.model_dim,
+                                    block_batch_provider)
         # params and optimizer state are donated chunk-to-chunk; copy once so
         # the CALLER's pytrees (often reused across runs, e.g. the benchmark
         # experiments) survive
@@ -864,8 +1153,11 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         for ts in _plan_chunks(t0, num_rounds,
                                eval_every if eval_fn is not None else None,
                                chunk_size):
-            batches = (chunk_batch_provider(ts) if chunk_batch_provider
-                       else _stack_batches(batch_provider, ts))
+            if block_batch_provider is not None:
+                batches = None     # drawn per (round, K-block) in-scan
+            else:
+                batches = (chunk_batch_provider(ts) if chunk_batch_provider
+                           else _stack_batches(batch_provider, ts))
             params, opt_state, h, h_hat, b, a, fad_state, chunk_hist = \
                 run_chunk(params, opt_state, h, h_hat, b, a, eta0, key,
                           chan_key, eff_gain, fad_state, over,

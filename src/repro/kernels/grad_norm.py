@@ -88,3 +88,56 @@ def batched_blocked_moments(x: jax.Array, *, block_rows: int = 256,
         interpret=interpret,
     )(x)
     return sumsq, sums
+
+
+def _stream_moments_kernel(x_ref, sq_ref, s_ref, *, num_blocks):
+    """(K-block, N-block) grid step: the N-block axis is the fast grid
+    dimension, so the per-device output tiles are revisited ``num_blocks``
+    times and act as fp32 accumulators — the final block-sum happens
+    in-kernel instead of materializing [K, num_blocks] partials."""
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)            # [kb, br, cols]
+    sq = jnp.sum(x * x, axis=(1, 2))              # [kb]
+    s = jnp.sum(x, axis=(1, 2))
+
+    @pl.when(j == 0)
+    def _init():
+        sq_ref[:, 0] = sq
+        s_ref[:, 0] = s
+
+    @pl.when(j > 0)
+    def _accumulate():
+        sq_ref[:, 0] += sq
+        s_ref[:, 0] += s
+
+
+def streaming_blocked_moments(x: jax.Array, *, k_block: int,
+                              block_rows: int = 256,
+                              interpret: bool = True):
+    """Per-device moments over a (K-block, N-block) grid with in-kernel
+    accumulation: only a ``(k_block, block_rows, C)`` tile is resident and
+    the outputs come back fully reduced.
+
+    x: [K, R, C].  Returns ``(sumsq, sums)`` each [K] f32.  Accumulation
+    order differs from ``batched_blocked_moments`` + wrapper block-sum by
+    float associativity only (documented-ulp)."""
+    k, rows, cols = x.shape
+    kb = min(k_block, k)
+    if k % kb != 0:
+        raise ValueError(f"k_block {kb} must divide K {k}")
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        raise ValueError(f"block_rows {br} must divide rows {rows}")
+    nb = rows // br
+    grid = (k // kb, nb)
+    out_shape = jax.ShapeDtypeStruct((k, 1), jnp.float32)
+    sumsq, sums = pl.pallas_call(
+        functools.partial(_stream_moments_kernel, num_blocks=nb),
+        grid=grid,
+        in_specs=[pl.BlockSpec((kb, br, cols), lambda i, j: (i, j, 0))],
+        out_specs=[pl.BlockSpec((kb, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((kb, 1), lambda i, j: (i, 0))],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(x)
+    return sumsq[:, 0], sums[:, 0]

@@ -26,8 +26,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_blocked
-from repro.kernels.grad_norm import batched_blocked_moments, blocked_sumsq
-from repro.kernels.ota_aggregate import ota_aggregate_blocked
+from repro.kernels.grad_norm import (batched_blocked_moments, blocked_sumsq,
+                                     streaming_blocked_moments)
+from repro.kernels.ota_aggregate import (ota_aggregate_blocked,
+                                         ota_aggregate_streaming)
 
 
 def _default_interpret() -> bool:
@@ -90,15 +92,31 @@ def _pack_flat_batched(g: jax.Array, lanes: int = LANES,
     return g.reshape(k, rows, lanes), n, br
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "k_block"))
 def batched_moments(g: jax.Array, *, block_rows: int = 256,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None,
+                    k_block: Optional[int] = None):
     """Per-device (sum of squares, sum) of stacked flat gradients.
 
     g: [K, N].  One batched Pallas reduction over a (K, blocks) grid — this
     replaces K separate ``grad_norm`` launches.  Returns ([K], [K]) f32.
+
+    ``k_block`` selects the streaming variant: a (K-block, N-block) grid
+    with in-kernel fp32 accumulation (the oracle is a ``lax.scan`` over
+    K-blocks), so the working set is one (k_block, N) tile — the 100k-device
+    path.  ``None`` keeps the dense kernel bitwise-unchanged.
     """
     interpret = _resolve_interpret(interpret)
+    if k_block is not None:
+        kb = min(k_block, g.shape[0])
+        if g.shape[0] % kb != 0:
+            raise ValueError(f"k_block {kb} must divide K {g.shape[0]}")
+        if interpret == "ref":
+            return ref.streaming_moments_ref(g, kb)
+        g3, _, br = _pack_flat_batched(g, block_rows=block_rows)
+        return streaming_blocked_moments(g3, k_block=kb, block_rows=br,
+                                         interpret=interpret)
     if interpret == "ref":
         return ref.batched_moments_ref(g)
     g3, _, br = _pack_flat_batched(g, block_rows=block_rows)
@@ -114,29 +132,48 @@ def batched_grad_norms(g: jax.Array, *, block_rows: int = 256,
     return jnp.sqrt(sumsq)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "pre"))
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "pre", "k_block"))
 def ota_superpose(g: jax.Array, scale: jax.Array, noise: jax.Array, a, *,
                   pre: str = "identity", block: int = LANES,
-                  interpret: Optional[bool] = None) -> jax.Array:
+                  interpret: Optional[bool] = None,
+                  k_block: Optional[int] = None) -> jax.Array:
     """Fused superposition y = a (sum_k scale_k pre(g_k) + z) (paper eq. 10).
 
     g: [K, N]; scale: [K] composite per-device scale (h_k b_k x scheme
     scale); noise: [N]; a: scalar; pre: 'identity' | 'sign'.  Every
     norm-scaling scheme in the registry lowers to this one kernel.
     Returns y [N] f32.
+
+    ``k_block`` selects the streaming kernel: the K-way reduction runs over
+    an (N-block, K-block) grid whose output tile is the fp32 accumulator
+    (oracle: sequential ``lax.scan`` over K-blocks), so VMEM holds
+    (k_block, block) tiles instead of full-K columns.  ``None`` keeps the
+    dense kernel bitwise-unchanged.
     """
     interpret = _resolve_interpret(interpret)
-    if interpret == "ref":
-        return ref.ota_superpose_ref(g, scale, noise,
-                                     jnp.asarray(a, jnp.float32), pre=pre)
+    a = jnp.asarray(a, jnp.float32)
+    if k_block is not None:
+        kb = min(k_block, g.shape[0])
+        if g.shape[0] % kb != 0:
+            raise ValueError(f"k_block {kb} must divide K {g.shape[0]}")
+        if interpret == "ref":
+            return ref.ota_superpose_streaming_ref(g, scale, noise, a,
+                                                   pre=pre, k_block=kb)
+    elif interpret == "ref":
+        return ref.ota_superpose_ref(g, scale, noise, a, pre=pre)
     k, n = g.shape
     pad_rows = -(-n // block) * block - n
     if pad_rows:
         g = jnp.concatenate([g, jnp.zeros((k, pad_rows), g.dtype)], axis=1)
         noise = jnp.concatenate([noise, jnp.zeros((pad_rows,), noise.dtype)])
-    y = ota_aggregate_blocked(g, scale.astype(jnp.float32), noise,
-                              jnp.asarray(a, jnp.float32), block=block,
-                              interpret=interpret, pre=pre)
+    if k_block is not None:
+        y = ota_aggregate_streaming(g, scale.astype(jnp.float32), noise, a,
+                                    k_block=min(k_block, k), block=block,
+                                    interpret=interpret, pre=pre)
+    else:
+        y = ota_aggregate_blocked(g, scale.astype(jnp.float32), noise, a,
+                                  block=block, interpret=interpret, pre=pre)
     return y[:n]
 
 

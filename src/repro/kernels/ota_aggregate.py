@@ -72,3 +72,67 @@ def ota_aggregate_blocked(g: jax.Array, scale: jax.Array, noise: jax.Array,
         interpret=interpret,
     )(g, scale.reshape(k, 1), noise.reshape(1, n), a.reshape(1, 1))
     return out[0]
+
+
+def _ota_stream_kernel(g_ref, scale_ref, noise_ref, a_ref, out_ref, *,
+                       pre, num_k_blocks):
+    """One (N-block, K-block) grid step: the device axis is the FAST grid
+    dimension, so the output tile is revisited ``num_k_blocks`` times in a
+    row and serves as the fp32 accumulator — only a ``(k_block, blk)`` tile
+    of the stacked gradients is ever resident."""
+    kb = pl.program_id(1)
+    g = g_ref[...].astype(jnp.float32)              # [kb, blk]
+    if pre == "sign":
+        g = jnp.sign(g)
+    scale = scale_ref[...].astype(jnp.float32)      # [kb, 1]
+    partial = jnp.sum(g * scale, axis=0)            # this K-block's share
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[0, :] = partial
+
+    @pl.when(kb > 0)
+    def _accumulate():
+        out_ref[0, :] += partial
+
+    @pl.when(kb == num_k_blocks - 1)
+    def _finish():
+        z = noise_ref[...].astype(jnp.float32)[0]
+        out_ref[0, :] = a_ref[0, 0] * (out_ref[0, :] + z)
+
+
+def ota_aggregate_streaming(g: jax.Array, scale: jax.Array, noise: jax.Array,
+                            a: jax.Array, *, k_block: int,
+                            block: int = 2048, interpret: bool = True,
+                            pre: str = "identity") -> jax.Array:
+    """Streaming variant of ``ota_aggregate_blocked``: the K-way reduction
+    itself is gridded, so VMEM holds ``(k_block, block)`` tiles instead of
+    full-K columns — the kernel-level half of the 100k-device path.  The
+    accumulation order (K-blocks summed sequentially per N-block) differs
+    from the dense kernel's single K-way sum by float-associativity only
+    (documented-ulp parity, tests/test_streaming.py)."""
+    if pre not in PRE_KINDS:
+        raise ValueError(f"unknown pre-transform {pre!r}; one of {PRE_KINDS}")
+    k, n = g.shape
+    kb = min(k_block, k)
+    if k % kb != 0:
+        raise ValueError(f"K={k} must be divisible by k_block={kb}")
+    blk = min(block, n)
+    if n % blk != 0:
+        raise ValueError(f"N={n} must be divisible by block={blk}")
+    nk = k // kb
+    grid = (n // blk, nk)
+    out = pl.pallas_call(
+        functools.partial(_ota_stream_kernel, pre=pre, num_k_blocks=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((kb, blk), lambda i, j: (j, i)),
+            pl.BlockSpec((kb, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, blk), lambda i, j: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(g, scale.reshape(k, 1), noise.reshape(1, n), a.reshape(1, 1))
+    return out[0]

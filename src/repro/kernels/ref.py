@@ -44,6 +44,52 @@ def ota_superpose_ref(g: jax.Array, scale: jax.Array, noise: jax.Array,
     return a * (acc + noise.astype(jnp.float32))
 
 
+def streaming_moments_ref(g: jax.Array, k_block: int):
+    """Oracle for the streaming moments path: per-device (sum of squares,
+    sum) computed K-block by K-block with a ``lax.scan`` — the XLA lowering
+    the non-TPU wrappers route to.  g: [K, N]; returns ([K], [K]) f32.
+    The working set is one [k_block, N] view per step."""
+    k, n = g.shape
+    kb = min(k_block, k)
+    if k % kb != 0:
+        raise ValueError(f"k_block {kb} must divide K {k}")
+    gb = g.reshape(k // kb, kb, n)
+
+    def step(_, blk):
+        bf = blk.astype(jnp.float32)
+        return None, (jnp.sum(bf * bf, axis=1), jnp.sum(bf, axis=1))
+
+    _, (sumsq, sums) = jax.lax.scan(step, None, gb)
+    return sumsq.reshape(k), sums.reshape(k)
+
+
+def ota_superpose_streaming_ref(g: jax.Array, scale: jax.Array,
+                                noise: jax.Array, a: jax.Array,
+                                pre: str = "identity", *,
+                                k_block: int) -> jax.Array:
+    """Oracle for the streaming superposition: the K-way reduction runs as a
+    sequential ``lax.scan`` over K-blocks into a single fp32 [N] accumulator
+    — the same association order as the (N-block, K-block) Pallas grid, and
+    the XLA lowering the non-TPU wrappers use.  Never materializes the
+    [K, N] product."""
+    k, n = g.shape
+    kb = min(k_block, k)
+    if k % kb != 0:
+        raise ValueError(f"k_block {kb} must divide K {k}")
+    gb = g.reshape(k // kb, kb, n)
+    sb = scale.astype(jnp.float32).reshape(k // kb, kb)
+
+    def step(acc, xs):
+        blk, s = xs
+        bf = blk.astype(jnp.float32)
+        if pre == "sign":
+            bf = jnp.sign(bf)
+        return acc + jnp.einsum("k,kn->n", s, bf), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((n,), jnp.float32), (gb, sb))
+    return a * (acc + noise.astype(jnp.float32))
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: Optional[int] = None) -> jax.Array:
     """q/k/v: [B, H, S, d].  Plain softmax attention, fp32 math."""

@@ -236,6 +236,69 @@ class TestScenarioAxesParity:
         assert h_a == h_b
 
 
+class TestActiveGather:
+    """Fixed-mode active-set gather (``FLConfig.active_gather``): gradient
+    compute shrinks to the m = round(p K) scheduled devices, but the round
+    must stay BITWISE the dense masked round on params and the participant
+    count (the scatter-back + fusion-fence contract).  The eq.-8 tx_energy
+    total is held to fp32 resolution instead: per-device N-reductions
+    vectorize shape-dependently ([m]- vs [K]-row stacks pick different lane
+    tilings), so individual energies can carry 1-ulp noise even though the
+    masked sum runs over the identical scattered [K] layout."""
+
+    @pytest.mark.parametrize("backend", ["vmap", "kernels"])
+    @pytest.mark.parametrize("scheme", ["normalized", "benchmark2", "mean"])
+    def test_bitwise_vs_dense_masked(self, task, backend, scheme):
+        import dataclasses
+        dense = _cfg(task, backend=backend, scheme=scheme, participation=0.5,
+                     participation_mode="fixed")
+        gather = dataclasses.replace(dense, active_gather=True)
+        s_d, h_d = _run_driver(task, dense, "scan")
+        s_g, h_g = _run_driver(task, gather, "scan")
+        assert_params_equal(s_g.params, s_d.params, rtol=0, atol=0)
+        np.testing.assert_allclose(h_g["tx_energy"], h_d["tx_energy"],
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(h_g["num_participants"],
+                                      h_d["num_participants"])
+
+    def test_exact_participant_accounting(self, task):
+        cfg = _cfg(task, participation=0.5, participation_mode="fixed",
+                   active_gather=True)
+        state = setup(cfg, task["params0"], task["dim"])
+        full = float(np.sum(np.square(state.b)))
+        _, hist = _run_driver(task, cfg, "scan")
+        assert all(n == K // 2 for n in hist["num_participants"])
+        # eq. 8: every scheduled device spends b_k^2 (normalized scheme), so
+        # a half cohort spends strictly less than the full-cohort sum
+        assert all(0 < e < full for e in hist["tx_energy"])
+
+    def test_requires_fixed_mode(self, task):
+        with pytest.raises(ValueError, match="fixed"):
+            _cfg(task, participation=0.5, active_gather=True)
+        with pytest.raises(ValueError, match="participation"):
+            _cfg(task, active_gather=True)
+
+    def test_streaming_empty_round_is_a_true_noop(self, task, monkeypatch):
+        """The streaming round's empty-round gate: zero masks everywhere
+        must leave params and optimizer state untouched, exactly like the
+        dense empty round."""
+        monkeypatch.setattr(rt, "_participation_mask",
+                            lambda cfg, key, t: jnp.zeros((cfg.num_devices,),
+                                                          jnp.float32))
+        monkeypatch.setattr(
+            rt, "_participation_mask_block",
+            lambda cfg, key, t, lo, hi: jnp.zeros((hi - lo,), jnp.float32))
+        cfg = _cfg(task, server_opt="adamw", server_weight_decay=0.1,
+                   participation=0.321, k_block=3)
+        state = setup(cfg, task["params0"], task["dim"])
+        state, hist = run(cfg, state, task["grad_fn"], task["provider"], 2,
+                          driver="python")
+        assert_params_equal(state.params, task["params0"], rtol=0, atol=0)
+        assert int(state.opt_state.step) == 0
+        assert hist["update_norm"] == [0.0, 0.0]
+        assert hist["num_participants"] == [0.0, 0.0]
+
+
 class TestChunkPlan:
     def test_eval_rounds_end_chunks(self):
         chunks = rt._plan_chunks(0, 10, eval_every=4, chunk_size=100)
