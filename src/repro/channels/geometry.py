@@ -95,6 +95,6 @@ def relative_gains_block(key: jax.Array, geo: GeometryConfig,
     gains = (jnp.sqrt(r2) / geo.ref_distance) ** (-geo.path_loss_exp / 2.0)
     if geo.shadowing_std_db > 0.0:
         x_db = geo.shadowing_std_db * jax.vmap(
-            lambda k: jax.random.normal(jax.random.fold_in(k, 1), ()))(keys)
+            lambda k: jax.random.normal(jax.random.fold_in(k, 1), ()))(keys)  # tracelint: disable=TL002 the vmapped lambda fold_ins each key to slot 1 first; the shadowing draw is a disjoint stream
         gains = gains * 10.0 ** (x_db / 20.0)
     return gains

@@ -85,6 +85,18 @@ class OTAConfig:
                 raise ValueError("the mesh backend's device axis IS the mesh "
                                  "— k_block streaming applies to the stacked "
                                  "(vmap/kernels) backends only")
+        # the sweep engine constructs OTAConfig with a traced noise_var
+        # inside the compiled round program; validate concrete values only
+        if isinstance(self.noise_var, (int, float)) and self.noise_var < 0.0:
+            raise ValueError(f"noise_var must be >= 0, got {self.noise_var}")
+
+
+# OTAConfig has no batched sweep lanes (the sweep engine batches FLConfig /
+# ChannelConfig and derives per-round OTA parameters); every field is a
+# structural axis.  tracelint TL005 checks this table stays exhaustive so a
+# new field cannot be added without deciding its sweep classification.
+STRUCTURAL_OTA_FIELDS = ("scheme", "a", "noise_var", "grad_bound",
+                         "noiseless", "backend", "k_block")
 
 
 # ---------------------------------------------------------------------------
@@ -291,7 +303,7 @@ def streaming_block(cfg: OTAConfig, carry: dict, block_tree: PyTree,
             carry["acc"], x)
 
     side = carry["side"]
-    if side:
+    if side:  # tracelint: disable=TL003 side is the carry's static dict STRUCTURE (empty for sideless schemes); emptiness is fixed at trace time
         collected = sch.collect_side(stats)
         side = {name: side[name] + jnp.sum(hb_srv * collected[name])
                 for name in side}

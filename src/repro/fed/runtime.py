@@ -158,6 +158,21 @@ BATCHED_FL_FIELDS = ("seed", "eta", "s_target", "epsilon_target",
 BATCHED_CHANNEL_FIELDS = ("noise_var", "channel_mean", "b_max", "rho",
                           "csi_error")
 
+# The structural complement: every FLConfig / ChannelConfig field must be
+# claimed by exactly one of the BATCHED_* tables above or these tables
+# (tracelint TL005 enforces the partition and that structural_config
+# collapses precisely the batched lanes).  A new field that lands in neither
+# is the "silently unbatched" bug: run_batched would accept configs that
+# differ in it and fold them into one compiled program.
+STRUCTURAL_FL_FIELDS = (
+    "num_devices", "scheme", "backend", "case", "p", "channel",
+    "amplification", "server_opt", "server_momentum", "server_b1",
+    "server_b2", "server_eps", "server_weight_decay", "local_steps",
+    "local_lr", "participation", "participation_mode", "k_block",
+    "active_gather")
+STRUCTURAL_CHANNEL_FIELDS = ("num_devices", "block_fading", "model",
+                             "rician_k", "csi_error_model", "geometry")
+
 
 class BatchAxes(NamedTuple):
     """Per-experiment traced scalars of a batched run (each field is [E] at
@@ -545,7 +560,7 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
         # zero either way (b_eff = 0, and 0 * x == 0 * 0 in every K-way
         # reduction term), so the round is bitwise the dense masked round —
         # the participants are just the only devices that ever run grad_fn.
-        idx = _active_indices(cfg, key, t)
+        idx = _active_indices(cfg, key, t)  # tracelint: disable=TL002 mask and active-set draws fold in distinct salts inside the helpers; streams are disjoint by construction
         active = _local_transmit(
             cfg, grad_fn, params,
             jax.tree_util.tree_map(lambda l: l[idx], batch))
@@ -701,7 +716,7 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
         mask = None
         b_eff, a_eff = b, a
     if cfg.active_gather:
-        idx = _active_indices(cfg, key, t)
+        idx = _active_indices(cfg, key, t)  # tracelint: disable=TL002 same salt discipline as the dense round: helpers fold_in _MASK_SALT vs the gather salt
         if batch is not None:
             batch = jax.tree_util.tree_map(lambda l: l[idx], batch)
         h_air, h_srv, b_air = h[idx], h_hat[idx], b_eff[idx]

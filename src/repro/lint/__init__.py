@@ -1,0 +1,26 @@
+"""tracelint: repo-native static analysis for the OTA-FL engine's contracts.
+
+Run as ``PYTHONPATH=src python -m repro.lint src/ tests/ benchmarks/``.
+
+The engine's correctness contracts (bitwise backend parity, scan-vs-python,
+streamed-vs-dense, the sweep engine's batchable/structural split, PRNG
+fold_in discipline) are enforced at runtime by the test tiers — but a stray
+host ``np.`` call in a scan body or an unclassified config field produces
+*plausible wrong numbers* long before a test names it.  tracelint turns those
+implicit invariants into AST-checked rules that run in milliseconds.
+
+Rules live in a registry mirroring ``core.schemes``; importing this package
+registers the full set.  See each ``rules_*`` module for the hazards and the
+parity contract each rule protects.
+"""
+from .base import Finding, Rule, all_rules, get, names, register  # noqa: F401
+
+# importing the rule modules populates the registry (same idiom as
+# repro.channels importing its model modules)
+from . import rules_trace      # noqa: F401  TL001-TL003
+from . import rules_pallas     # noqa: F401  TL004
+from . import rules_contracts  # noqa: F401  TL005-TL006
+from . import rules_buffers    # noqa: F401  TL007-TL008
+
+from .engine import (apply_fixes, build_project, lint, render_human,  # noqa: F401
+                     render_json, self_test)

@@ -1,0 +1,67 @@
+"""CLI entry point: ``python -m repro.lint [paths...] [--json] [--fix]
+[--self-test]``.
+
+Exit codes: 0 clean, 1 unsuppressed findings (or self-test failure),
+2 usage errors.  ``--fix`` applies the mechanical fixes (TL001 np.->jnp.
+where a drop-in spelling exists, TL000 reason normalization) and re-lints,
+so the exit code reflects the post-fix state.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from . import engine
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="tracelint: static checks for the engine's trace-purity, "
+                    "PRNG, and config-classification contracts")
+    parser.add_argument("paths", nargs="*",
+                        default=["src", "tests", "benchmarks"],
+                        help="files or directories to lint "
+                             "(default: src tests benchmarks)")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable report on stdout")
+    parser.add_argument("--fix", action="store_true",
+                        help="apply mechanical fixes in place, then re-lint")
+    parser.add_argument("--self-test", action="store_true",
+                        help="run every rule against tests/lint_corpus/ and "
+                             "exit nonzero if any rule misses its fixture")
+    parser.add_argument("--root", default=".",
+                        help="repo root for relative paths (default: cwd)")
+    args = parser.parse_args(argv)
+
+    root = pathlib.Path(args.root).resolve()
+
+    if args.self_test:
+        corpus = root / "tests" / "lint_corpus"
+        if not corpus.is_dir():
+            print(f"tracelint: corpus directory not found: {corpus}",
+                  file=sys.stderr)
+            return 2
+        ok, report = engine.self_test(corpus, root)
+        print(report)
+        return 0 if ok else 1
+
+    project, active, suppressed = engine.lint(args.paths, root=root)
+    if args.fix:
+        touched = engine.apply_fixes(project, active)
+        if touched:
+            print(f"tracelint: fixed {len(touched)} file(s): "
+                  f"{', '.join(touched)}", file=sys.stderr)
+        project, active, suppressed = engine.lint(args.paths, root=root)
+
+    n_files = len(project.modules)
+    if args.json:
+        print(engine.render_json(active, suppressed, n_files))
+    else:
+        print(engine.render_human(active, suppressed, n_files))
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

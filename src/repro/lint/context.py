@@ -1,0 +1,321 @@
+"""Traced-context discovery and value-taint analysis.
+
+The trace rules (TL001-TL003) only apply inside code that JAX traces: scan
+bodies, jitted functions, Pallas kernel bodies, and the callables stored in
+``register(Scheme(...))`` / ``register(ChannelModel(...))`` blocks.  This
+module finds those functions statically by seeding a per-module call graph
+and walking it to a fixed point, and provides a light taint analysis that
+distinguishes tracer-derived values from static (Python-time) configuration
+so that e.g. ``float(cfg.num_devices)`` inside a scan body is not a finding
+while ``float(grad_norm)`` is.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+# jax.lax / jax primitives whose callable arguments are traced.  Maps the
+# attribute name to the positional indices holding callables.
+_TRACING_CALLS = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "switch": (1, 2, 3, 4),
+    "vmap": (0,),
+    "pmap": (0,),
+    "jit": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "custom_jvp": (0,),
+    "custom_vjp": (0,),
+    "pallas_call": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+}
+
+# Attribute accesses that always concretize to static Python values even on
+# tracers (shape metadata), so they never carry taint.
+_META_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+# Calls that concretize or inspect without tracing hazards.
+_CONCRETIZING_CALLS = {"len", "isinstance", "type", "getattr", "hasattr",
+                       "maybe_positive", "static_broadcasted_argnums"}
+
+# Parameter names that conventionally carry static Python configuration into
+# traced helpers in this codebase (dataclass configs, scheme records, sizes
+# closed over via static_argnames).  Attributes read off them stay untainted.
+STATIC_PARAM_NAMES = {
+    "cfg", "config", "fl_cfg", "ota_cfg", "chan_cfg", "channel_cfg", "self",
+    "scheme", "sch", "model", "loss_fn", "grad_fn", "opt", "optimizer",
+    "axes", "batch_axes", "interpret", "backend", "mesh", "spec", "geo",
+    "ocfg",
+}
+
+
+def _decorator_is_jit(dec: ast.expr) -> bool:
+    """@jax.jit, @jit, @functools.partial(jax.jit, ...) forms."""
+    if isinstance(dec, ast.Call):
+        fn = dec.func
+        if _dotted(fn) in ("functools.partial", "partial") and dec.args:
+            return _dotted(dec.args[0]) in ("jax.jit", "jit")
+        return _dotted(fn) in ("jax.jit", "jit")
+    return _dotted(dec) in ("jax.jit", "jit")
+
+
+def _dotted(node: Optional[ast.expr]) -> str:
+    """Best-effort dotted-name rendering of an expression ('' if complex)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _callable_name(node: ast.expr) -> Optional[str]:
+    """Resolve a callable argument to a local function name if possible."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):
+        fn = _dotted(node.func)
+        if fn in ("functools.partial", "partial") and node.args:
+            return _callable_name(node.args[0])
+    return None
+
+
+@dataclasses.dataclass
+class TracedInfo:
+    """Traced functions of one module."""
+
+    # function name -> FunctionDef (module and nested functions, by bare name;
+    # later definitions shadow earlier ones which matches runtime semantics
+    # closely enough for this codebase's flat helper style)
+    functions: Dict[str, ast.FunctionDef]
+    traced: Set[str]            # names of functions reached from trace seeds
+    kernels: Set[str]           # subset: Pallas kernel bodies
+    lambdas: List[ast.Lambda]   # traced lambdas (scheme/channel callables)
+
+
+def collect_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    funcs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            funcs[node.name] = node
+    return funcs
+
+
+def find_traced(tree: ast.Module) -> TracedInfo:
+    funcs = collect_functions(tree)
+    seeds: Set[str] = set()
+    kernels: Set[str] = set()
+    lambdas: List[ast.Lambda] = []
+
+    for name, fn in funcs.items():
+        if name.startswith("_round_math"):
+            seeds.add(name)
+        if any(_decorator_is_jit(d) for d in fn.decorator_list):
+            seeds.add(name)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn_name = _dotted(node.func)
+        tail = fn_name.rsplit(".", 1)[-1]
+        if tail in _TRACING_CALLS:
+            for idx in _TRACING_CALLS[tail]:
+                if idx < len(node.args):
+                    arg = node.args[idx]
+                    if isinstance(arg, ast.Lambda):
+                        lambdas.append(arg)
+                    else:
+                        target = _callable_name(arg)
+                        if target and target in funcs:
+                            seeds.add(target)
+                            if tail == "pallas_call":
+                                kernels.add(target)
+        # register(Scheme(...)) / register(ChannelModel(...)): every callable
+        # keyword on the record is executed under trace by the engine.  Other
+        # registries (lint rules, benchmark suites) hold host-side callables.
+        if tail == "register" and node.args:
+            rec = node.args[0]
+            if isinstance(rec, ast.Call) and _dotted(rec.func).rsplit(
+                    ".", 1)[-1] in ("Scheme", "ChannelModel"):
+                for kw in rec.keywords:
+                    if kw.value is None:
+                        continue
+                    if isinstance(kw.value, ast.Lambda):
+                        lambdas.append(kw.value)
+                    else:
+                        target = _callable_name(kw.value)
+                        if target and target in funcs:
+                            seeds.add(target)
+
+    # Fixed-point walk: a local function called from a traced function is
+    # itself traced.  (Cross-module edges are not followed; each module seeds
+    # its own traced set via jit/pallas_call/register markers.)
+    traced = set(seeds)
+    changed = True
+    while changed:
+        changed = False
+        for name in list(traced):
+            fn = funcs.get(name)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                    callee = node.func.id
+                    if callee in funcs and callee not in traced:
+                        traced.add(callee)
+                        changed = True
+    return TracedInfo(functions=funcs, traced=traced, kernels=kernels,
+                      lambdas=lambdas)
+
+
+class Taint:
+    """Per-function forward taint pass over names.
+
+    A name is *tainted* when it (may) hold a tracer.  Parameters are tainted
+    unless their name marks them as static config (``STATIC_PARAM_NAMES``) or
+    they carry a scalar/str annotation.  Assignments propagate expression
+    taint; attribute reads off untainted bases stay untainted; shape metadata
+    never taints.
+    """
+
+    def __init__(self, fn: ast.FunctionDef):
+        self.tainted: Set[str] = set()
+        args = list(fn.args.posonlyargs) + list(fn.args.args)
+        static_names = set(STATIC_PARAM_NAMES)
+        for dec in fn.decorator_list:
+            static_names |= _static_argnames(dec)
+        # keyword-only params are static in this codebase: pallas kernels
+        # take refs positionally and bind compile-time knobs after `*`, and
+        # jitted functions mark traced-vs-static via static_argnames anyway
+        defaulted = {a.arg for a, d in zip(
+            reversed(args), reversed(fn.args.defaults))
+            if isinstance(d, ast.Constant)}
+        for a in args:
+            if a.arg in static_names or a.arg in defaulted:
+                continue
+            if a.annotation is not None and _dotted(a.annotation) in (
+                    "int", "float", "bool", "str", "Optional[int]"):
+                continue
+            self.tainted.add(a.arg)
+
+    def is_tainted(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _META_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # `is` / `is not` always compare Python identity (None checks);
+            # they concretize regardless of operand taint.
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self.is_tainted(node.left)
+                    or any(self.is_tainted(c) for c in node.comparators))
+        if isinstance(node, ast.IfExp):
+            return (self.is_tainted(node.body) or self.is_tainted(node.orelse)
+                    or self.is_tainted(node.test))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_tainted(node)
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, (ast.Dict,)):
+            return any(v is not None and self.is_tainted(v)
+                       for v in list(node.keys) + list(node.values))
+        # Unknown expression kinds: assume tainted only if any child name is.
+        return any(isinstance(n, ast.Name) and n.id in self.tainted
+                   for n in ast.walk(node))
+
+    def _call_tainted(self, node: ast.Call) -> bool:
+        fn = _dotted(node.func)
+        tail = fn.rsplit(".", 1)[-1]
+        if tail in _CONCRETIZING_CALLS:
+            return False
+        root = fn.split(".", 1)[0]
+        if root in ("jnp", "jax", "lax", "pl", "plgpu", "optax"):
+            return True
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            return False  # .item() concretizes (flagged separately by TL001)
+        if fn in ("float", "int", "bool", "str", "tuple"):
+            # Concretization call: result is a host scalar.  Whether the CALL
+            # itself is legal is TL001's question, not a taint question.
+            return False
+        # Unknown callee: conservative — tainted if any argument is.
+        return (any(self.is_tainted(a) for a in node.args)
+                or any(kw.value is not None and self.is_tainted(kw.value)
+                       for kw in node.keywords))
+
+    def assign(self, targets: List[ast.expr], value: ast.expr) -> None:
+        tainted = self.is_tainted(value)
+        for t in targets:
+            for name in _target_names(t):
+                if tainted:
+                    self.tainted.add(name)
+                else:
+                    self.tainted.discard(name)
+
+
+def _target_names(target: ast.expr) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in target.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return []
+
+
+def _static_argnames(dec: ast.expr) -> Set[str]:
+    """Pull static_argnames out of @functools.partial(jax.jit, ...) forms."""
+    if not isinstance(dec, ast.Call):
+        return set()
+    out: Set[str] = set()
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames" and isinstance(kw.value, (ast.Tuple, ast.List)):
+            for e in kw.value.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    out.add(e.value)
+        elif kw.arg == "static_argnames" and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, str):
+            out.add(kw.value.value)
+    return out
+
+
+def walk_statements(fn: ast.FunctionDef):
+    """Yield statements of ``fn`` in source order, skipping nested defs
+    (they get their own traced/taint treatment)."""
+
+    def _walk(body):
+        for stmt in body:
+            yield stmt
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if sub:
+                    yield from _walk(sub)
+            for handler in getattr(stmt, "handlers", ()) or ():
+                yield from _walk(handler.body)
+
+    yield from _walk(fn.body)

@@ -1,0 +1,281 @@
+"""tracelint driver: file collection, suppressions, output, self-test, --fix.
+
+Suppression syntax (checked by the TL000 meta-rule):
+
+    x = np.sum(v)   # tracelint: disable=TL001 host-side setup path
+    # tracelint: disable=TL002,TL003 fixture reuses one key on purpose
+    y = draw(key)
+
+An inline comment suppresses its own line; a comment-only line suppresses the
+next line.  The free text after the rule list is the *reason* and is
+mandatory: a reasonless suppression is itself a finding (TL000), fixable by
+``--fix`` into a canonical ``TODO: justify`` placeholder so the gap stays
+visible in review.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from . import base
+from .base import Finding
+
+# directories never linted as part of a normal run: the corpus is known-bad
+# by design and only consulted by --self-test / the unit tests.
+EXCLUDED_PARTS = {"lint_corpus", "__pycache__", ".git"}
+
+SUPPRESS_RE = re.compile(
+    r"#\s*tracelint:\s*disable=([A-Za-z0-9,\s]*?[A-Za-z0-9])(?:\s+(.+))?\s*$")
+CANONICAL_SUPPRESS = "# tracelint: disable={ids} {reason}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int              # the line the suppression APPLIES to
+    comment_line: int      # the line the comment sits on
+    rule_ids: Tuple[str, ...]
+    reason: Optional[str]
+    raw: str               # full original line text (for --fix)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: pathlib.Path
+    relpath: str
+    text: str
+    lines: List[str]
+    tree: ast.Module
+    suppressions: List[Suppression]
+
+
+@dataclasses.dataclass
+class Project:
+    root: pathlib.Path
+    modules: List[ModuleInfo]
+
+    def suppressions_for(self, relpath: str) -> Dict[int, List[Suppression]]:
+        for mod in self.modules:
+            if mod.relpath == relpath:
+                out: Dict[int, List[Suppression]] = {}
+                for sup in mod.suppressions:
+                    out.setdefault(sup.line, []).append(sup)
+                return out
+        return {}
+
+
+def parse_suppressions(lines: List[str]) -> List[Suppression]:
+    out: List[Suppression] = []
+    for i, line in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        ids = tuple(s.strip().upper() for s in m.group(1).split(",") if s.strip())
+        reason = m.group(2).strip() if m.group(2) else None
+        # comment-only line guards the NEXT line; inline guards its own
+        code_before = line[:m.start()].strip()
+        target = i + 1 if code_before == "" else i
+        out.append(Suppression(line=target, comment_line=i, rule_ids=ids,
+                               reason=reason, raw=line))
+    return out
+
+
+def load_module(path: pathlib.Path, root: pathlib.Path) -> Optional[ModuleInfo]:
+    try:
+        text = path.read_text()
+        tree = ast.parse(text, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError) as exc:
+        print(f"tracelint: skipping unparsable {path}: {exc}", file=sys.stderr)
+        return None
+    try:
+        rel = str(path.relative_to(root))
+    except ValueError:
+        rel = str(path)
+    lines = text.splitlines()
+    return ModuleInfo(path=path, relpath=rel, text=text, lines=lines,
+                      tree=tree, suppressions=parse_suppressions(lines))
+
+
+def collect_files(paths: Sequence[str], root: pathlib.Path,
+                  include_corpus: bool = False) -> List[pathlib.Path]:
+    files: List[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if not path.is_absolute():
+            path = root / path
+        if path.is_file() and path.suffix == ".py":
+            files.append(path)
+        elif path.is_dir():
+            files.extend(sorted(path.rglob("*.py")))
+    excluded = EXCLUDED_PARTS - ({"lint_corpus"} if include_corpus else set())
+    return [f for f in files if not (set(f.parts) & excluded)]
+
+
+def build_project(paths: Sequence[str], root: Optional[pathlib.Path] = None,
+                  include_corpus: bool = False) -> Project:
+    root = root or pathlib.Path.cwd()
+    modules = []
+    for f in collect_files(paths, root, include_corpus=include_corpus):
+        mod = load_module(f, root)
+        if mod is not None:
+            modules.append(mod)
+    return Project(root=root, modules=modules)
+
+
+def _tl000(project: Project) -> List[Finding]:
+    """Meta-rule: every suppression must carry a reason string."""
+    findings: List[Finding] = []
+    for mod in project.modules:
+        for sup in mod.suppressions:
+            if sup.reason:
+                continue
+            canonical = CANONICAL_SUPPRESS.format(
+                ids=",".join(sup.rule_ids), reason="TODO: justify")
+            m = SUPPRESS_RE.search(sup.raw)
+            fixed = sup.raw[:m.start()] + canonical if m else sup.raw
+            findings.append(Finding(
+                "TL000", mod.relpath, sup.comment_line,
+                f"suppression of {','.join(sup.rule_ids)} has no reason; "
+                f"`# tracelint: disable=TLxxx <why>` documents the waiver",
+                fix=(sup.raw, fixed)))
+    return findings
+
+
+def run_rules(project: Project,
+              only: Optional[Set[str]] = None) -> List[Finding]:
+    findings = [] if (only and "TL000" not in only) else _tl000(project)
+    for rule in base.all_rules():
+        if only and rule.id not in only:
+            continue
+        findings.extend(rule.check(project))
+    return findings
+
+
+def split_suppressed(project: Project, findings: List[Finding]
+                     ) -> Tuple[List[Finding], List[Finding]]:
+    """(active, suppressed).  TL000 is never suppressible by itself — a
+    reasonless suppression cannot waive its own hygiene finding."""
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    by_path: Dict[str, Dict[int, List[Suppression]]] = {}
+    for f in findings:
+        sups = by_path.setdefault(f.path, project.suppressions_for(f.path))
+        hit = any(f.rule_id in s.rule_ids
+                  for s in sups.get(f.line, ()))
+        if hit and f.rule_id != "TL000":
+            suppressed.append(f)
+        else:
+            active.append(f)
+    return active, suppressed
+
+
+def lint(paths: Sequence[str], root: Optional[pathlib.Path] = None,
+         include_corpus: bool = False,
+         only: Optional[Set[str]] = None
+         ) -> Tuple[Project, List[Finding], List[Finding]]:
+    project = build_project(paths, root, include_corpus=include_corpus)
+    findings = run_rules(project, only=only)
+    active, suppressed = split_suppressed(project, findings)
+    active.sort(key=lambda f: (f.path, f.line, f.rule_id))
+    return project, active, suppressed
+
+
+def apply_fixes(project: Project, findings: Iterable[Finding]) -> List[str]:
+    """Apply whole-line fixes whose original text still matches on disk.
+    Returns the relpaths that were rewritten."""
+    by_path: Dict[str, List[Finding]] = {}
+    for f in findings:
+        if f.fix is not None:
+            by_path.setdefault(f.path, []).append(f)
+    touched: List[str] = []
+    for relpath, fs in sorted(by_path.items()):
+        mod = next((m for m in project.modules if m.relpath == relpath), None)
+        if mod is None:
+            continue
+        lines = mod.path.read_text().splitlines(keepends=True)
+        changed = False
+        for f in fs:
+            idx = f.line - 1
+            orig, new = f.fix
+            if 0 <= idx < len(lines) and lines[idx].rstrip("\n") == orig:
+                eol = "\n" if lines[idx].endswith("\n") else ""
+                lines[idx] = new + eol
+                changed = True
+        if changed:
+            mod.path.write_text("".join(lines))
+            touched.append(relpath)
+    return touched
+
+
+def render_human(active: List[Finding], suppressed: List[Finding],
+                 n_files: int) -> str:
+    out = []
+    for f in active:
+        tag = " [fixable]" if f.fix is not None else ""
+        out.append(f"{f.path}:{f.line}: {f.rule_id} {f.message}{tag}")
+    out.append(f"tracelint: {len(active)} finding(s) "
+               f"({len(suppressed)} suppressed) across {n_files} file(s), "
+               f"{len(base.names())} rules")
+    return "\n".join(out)
+
+
+def render_json(active: List[Finding], suppressed: List[Finding],
+                n_files: int) -> str:
+    return json.dumps({
+        "rules": [{"id": r.id, "name": r.name, "summary": r.summary,
+                   "contract": r.contract, "fixable": r.fixable}
+                  for r in base.all_rules()],
+        "files": n_files,
+        "findings": [f.to_json() for f in active],
+        "suppressed": [f.to_json() for f in suppressed],
+    }, indent=2)
+
+
+def self_test(corpus_dir: pathlib.Path, root: pathlib.Path) -> Tuple[bool, str]:
+    """Prove every registered rule fires on its known-bad fixture and stays
+    quiet on its known-good twin; prove suppressions suppress.  Returns
+    (ok, report)."""
+    report: List[str] = []
+    ok = True
+    rule_ids = ["TL000"] + base.names()
+    for rule_id in rule_ids:
+        low = rule_id.lower()
+        bad = corpus_dir / f"{low}_bad.py"
+        good = corpus_dir / f"{low}_ok.py"
+        if not bad.exists():
+            ok = False
+            report.append(f"FAIL {rule_id}: missing corpus fixture {bad.name}")
+            continue
+        _, active, _ = lint([str(bad)], root=root, include_corpus=True)
+        fired = [f for f in active if f.rule_id == rule_id]
+        if fired:
+            report.append(f"ok   {rule_id}: fires on {bad.name} "
+                          f"({len(fired)} finding(s))")
+        else:
+            ok = False
+            report.append(f"FAIL {rule_id}: no finding on {bad.name}")
+        if good.exists():
+            _, active_g, _ = lint([str(good)], root=root, include_corpus=True)
+            noise = [f for f in active_g if f.rule_id == rule_id]
+            if noise:
+                ok = False
+                report.append(f"FAIL {rule_id}: false positive on "
+                              f"{good.name}:{noise[0].line}")
+    sup = corpus_dir / "suppressed_ok.py"
+    if sup.exists():
+        _, active_s, suppressed_s = lint([str(sup)], root=root,
+                                         include_corpus=True)
+        if active_s:
+            ok = False
+            report.append(f"FAIL suppressions: {len(active_s)} finding(s) "
+                          f"leaked through {sup.name} "
+                          f"(first: {active_s[0].rule_id}:{active_s[0].line})")
+        else:
+            report.append(f"ok   suppressions: {len(suppressed_s)} "
+                          f"finding(s) suppressed in {sup.name}")
+    report.append("self-test: " + ("PASS" if ok else "FAIL"))
+    return ok, "\n".join(report)

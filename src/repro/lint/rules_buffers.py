@@ -1,0 +1,222 @@
+"""Buffer-lifetime and scan-carry rules: TL007, TL008.
+
+TL007: ``jax.jit(..., donate_argnums=...)`` invalidates the donated operand
+buffers.  The engine's pattern — ``params, opt_state, ... = run_chunk(params,
+opt_state, ...)`` — rebinds the donated names in the same statement, which is
+safe; reading a donated name afterward without rebinding dereferences a
+deleted buffer.  The rule tracks donating callables (direct ``jax.jit``
+assignments and factory functions that *return* a donating jit) and flags
+reads of donated names after the call.
+
+TL008: ``lax.scan`` requires the carry pytree to be stable.  When the init,
+the body's carry unpacking, the body's returned carry, and the call-site
+destructuring are all tuple literals, their arities must agree — a 6-leaf
+init against a 7-leaf unpack fails only at trace time with an opaque pytree
+error; here it is a one-line diagnostic.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .base import Finding, Rule, register
+from .context import _callable_name, _dotted, walk_statements
+from .rules_trace import _stmt_exprs, _walk_expr
+
+
+def _donating_jit(call: ast.expr) -> Optional[Tuple[int, ...]]:
+    """Donated positions if ``call`` is jax.jit(..., donate_argnums=...)."""
+    if not (isinstance(call, ast.Call) and _dotted(call.func).endswith("jit")):
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            val = kw.value
+            if isinstance(val, (ast.Tuple, ast.List)):
+                nums = tuple(e.value for e in val.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+                return nums
+            if isinstance(val, ast.Constant) and isinstance(val.value, int):
+                return (val.value,)
+            return ()
+    return None
+
+
+def _donating_factories(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """Functions whose return value is a donating jit (engine builders)."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return) and node.value is not None:
+                nums = _donating_jit(node.value)
+                if nums:
+                    out[fn.name] = nums
+    return out
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    out: Set[str] = set()
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Name):
+                out.add(node.id)
+    return out
+
+
+def _tl007(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        factories = _donating_factories(mod.tree)
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            # donating callables visible in this function
+            donating: Dict[str, Tuple[int, ...]] = {}
+            dead: Dict[str, int] = {}   # name -> line its buffer was donated
+            for stmt in walk_statements(fn):
+                rebound = _assigned_names(stmt)
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name) \
+                        and isinstance(stmt.value, ast.Call):
+                    name = stmt.targets[0].id
+                    nums = _donating_jit(stmt.value)
+                    if nums is None:
+                        callee = _dotted(stmt.value.func)
+                        nums = factories.get(callee)
+                    if nums:
+                        donating[name] = nums
+
+                # reads of dead names anywhere in this statement's exprs
+                for expr in _stmt_exprs(stmt):
+                    for node in _walk_expr(expr):
+                        if isinstance(node, ast.Name) \
+                                and isinstance(node.ctx, ast.Load) \
+                                and node.id in dead:
+                            # the donating call itself re-consumes its args;
+                            # skip names donated by THIS statement (added
+                            # below), only prior donations count
+                            findings.append(Finding(
+                                "TL007", mod.relpath, node.lineno,
+                                f"`{node.id}` was donated at line "
+                                f"{dead[node.id]} (donate_argnums) and its "
+                                f"buffer is deleted; rebind it from the "
+                                f"call's results before reuse"))
+                            dead.pop(node.id)  # one report per donation
+
+                # donation by calls in this statement
+                newly_dead: Dict[str, int] = {}
+                for expr in _stmt_exprs(stmt):
+                    for node in _walk_expr(expr):
+                        if isinstance(node, ast.Call) \
+                                and isinstance(node.func, ast.Name) \
+                                and node.func.id in donating:
+                            for pos in donating[node.func.id]:
+                                if pos < len(node.args) \
+                                        and isinstance(node.args[pos], ast.Name):
+                                    newly_dead[node.args[pos].id] = node.lineno
+                for name in rebound:
+                    dead.pop(name, None)
+                    newly_dead.pop(name, None)
+                dead.update(newly_dead)
+    return findings
+
+
+def _tuple_arity(node: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _resolve_name(fn: ast.AST, name: str) -> Optional[ast.expr]:
+    value = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    value = node.value
+    return value
+
+
+def _tl008(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            local_funcs = {n.name: n for n in ast.walk(fn)
+                           if isinstance(n, ast.FunctionDef)}
+            for stmt in walk_statements(fn):
+                for expr in _stmt_exprs(stmt):
+                    for node in _walk_expr(expr):
+                        if not (isinstance(node, ast.Call)
+                                and _dotted(node.func).endswith("lax.scan")
+                                and len(node.args) >= 2):
+                            continue
+                        arities: List[Tuple[int, int, str]] = []  # (arity, line, what)
+                        init = node.args[1]
+                        if isinstance(init, ast.Name):
+                            init = _resolve_name(fn, init.id)
+                        a = _tuple_arity(init)
+                        if a is not None:
+                            arities.append((a, node.lineno, "scan init carry"))
+                        body_name = _callable_name(node.args[0])
+                        body = local_funcs.get(body_name) if body_name else None
+                        if body is not None and body.args.args:
+                            carry_param = body.args.args[0].arg
+                            for inner in ast.walk(body):
+                                if isinstance(inner, ast.Assign) \
+                                        and isinstance(inner.value, ast.Name) \
+                                        and inner.value.id == carry_param:
+                                    ua = _tuple_arity(inner.targets[0])
+                                    if ua is not None:
+                                        arities.append(
+                                            (ua, inner.lineno,
+                                             "body carry unpack"))
+                                if isinstance(inner, ast.Return) \
+                                        and isinstance(inner.value, ast.Tuple) \
+                                        and len(inner.value.elts) == 2:
+                                    ra = _tuple_arity(inner.value.elts[0])
+                                    if ra is not None:
+                                        arities.append(
+                                            (ra, inner.lineno,
+                                             "body returned carry"))
+                        # call-site destructuring: (a, b, ...), ys = scan(...)
+                        if isinstance(stmt, ast.Assign) \
+                                and stmt.value is node \
+                                and isinstance(stmt.targets[0], ast.Tuple) \
+                                and len(stmt.targets[0].elts) == 2:
+                            da = _tuple_arity(stmt.targets[0].elts[0])
+                            if da is not None:
+                                arities.append(
+                                    (da, stmt.lineno, "call-site unpack"))
+                        if len({a for a, _, _ in arities}) > 1:
+                            detail = "; ".join(f"{what}={a} (line {ln})"
+                                               for a, ln, what in arities)
+                            findings.append(Finding(
+                                "TL008", mod.relpath, node.lineno,
+                                f"scan carry leaf-set mismatch: {detail}; "
+                                f"the carry pytree must be identical in "
+                                f"init, body unpack, and body return"))
+    return findings
+
+
+register(Rule(
+    id="TL007", name="donated-buffer-reuse",
+    summary="read of a buffer after a donate_argnums call invalidated it",
+    contract="chunked multi-round engine's donation discipline (PR 2/6)",
+    check=_tl007))
+
+register(Rule(
+    id="TL008", name="scan-carry-stability",
+    summary="lax.scan carry arity must agree across init/unpack/return",
+    contract="chunk-scan carry layout (_make_chunk_scan, streaming rounds)",
+    check=_tl008))

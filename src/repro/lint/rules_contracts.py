@@ -1,0 +1,262 @@
+"""Config-classification and diagnostics-sync contracts: TL005, TL006.
+
+TL005 guards the sweep engine's batchable/structural split (PR 4): every
+dataclass field of ``FLConfig`` / ``ChannelConfig`` must be claimed by
+exactly one of the ``BATCHED_*_FIELDS`` tables or the ``STRUCTURAL_*_FIELDS``
+exemption tables, every batched field must actually be collapsed by
+``structural_config`` (else two configs that differ in it would silently
+share one compiled program), and the collapse set must not touch structural
+fields.  ``OTAConfig`` has no batched lanes, so its whole field set must be
+claimed by ``STRUCTURAL_OTA_FIELDS``.
+
+TL006 keeps ``DIAG_KEYS`` and the history dicts assembled in
+``fed/runtime.py`` in lockstep: each ``diag_core`` literal must be a subset,
+and each final ``diag`` literal (with ``**diag_core`` expanded) must equal
+``DIAG_KEYS`` exactly — a key present in one but not the other either drops a
+diagnostic on the floor or KeyErrors deep inside the scan driver.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .base import Finding, Rule, register
+from .context import _dotted
+
+
+@dataclasses.dataclass(frozen=True)
+class _ClassSpec:
+    class_name: str
+    batched_table: Optional[str]
+    structural_table: str
+    # how structural_config collapses this class: 'fl' = replace(cfg, ...),
+    # 'channel' = replace(cfg.channel, ...), None = no collapse machinery
+    collapse: Optional[str]
+
+
+_SPECS = (
+    _ClassSpec("FLConfig", "BATCHED_FL_FIELDS", "STRUCTURAL_FL_FIELDS", "fl"),
+    _ClassSpec("ChannelConfig", "BATCHED_CHANNEL_FIELDS",
+               "STRUCTURAL_CHANNEL_FIELDS", "channel"),
+    _ClassSpec("OTAConfig", None, "STRUCTURAL_OTA_FIELDS", None),
+)
+
+
+def _is_dataclass_def(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        name = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+        if name.endswith("dataclass"):
+            return True
+    return False
+
+
+def _dataclass_fields(node: ast.ClassDef) -> List[Tuple[str, int, str]]:
+    """(field, lineno, annotation) for every annotated field."""
+    out = []
+    for stmt in node.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            ann = _dotted(stmt.annotation)
+            if ann.startswith("ClassVar") or "ClassVar[" in ast.dump(stmt.annotation):
+                continue
+            out.append((stmt.target.id, stmt.lineno, ann))
+    return out
+
+
+def _string_tuple_assign(tree: ast.Module, name: str
+                         ) -> Optional[Tuple[List[str], int]]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name \
+                        and isinstance(node.value, (ast.Tuple, ast.List)):
+                    vals = [e.value for e in node.value.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)]
+                    return vals, node.lineno
+    return None
+
+
+def _collapse_kwargs(tree: ast.Module) -> Dict[str, Set[str]]:
+    """Keyword names of the dataclasses.replace calls in structural_config,
+    keyed by 'fl' (first arg a bare Name) / 'channel' (first arg an
+    Attribute like cfg.channel)."""
+    out: Dict[str, Set[str]] = {"fl": set(), "channel": set()}
+    for fn in ast.walk(tree):
+        if not (isinstance(fn, ast.FunctionDef)
+                and fn.name == "structural_config"):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and _dotted(node.func).endswith("replace") and node.args:
+                kind = "fl" if isinstance(node.args[0], ast.Name) else "channel"
+                out[kind] |= {kw.arg for kw in node.keywords if kw.arg}
+    return out
+
+
+def _tl005(project) -> List[Finding]:
+    findings: List[Finding] = []
+    # project-wide discovery: classes, tables, and collapse sets may live in
+    # different modules (runtime.py holds the FL/channel tables, ota.py the
+    # OTA one, channel.py the ChannelConfig dataclass)
+    classes: Dict[str, Tuple[str, ast.ClassDef]] = {}
+    tables: Dict[str, Tuple[str, List[str], int]] = {}
+    collapse: Dict[str, Set[str]] = {"fl": set(), "channel": set()}
+    collapse_mod = None
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef) and _is_dataclass_def(node):
+                if node.name in {s.class_name for s in _SPECS}:
+                    classes[node.name] = (mod.relpath, node)
+        for spec in _SPECS:
+            for tname in (spec.batched_table, spec.structural_table):
+                if tname and tname not in tables:
+                    hit = _string_tuple_assign(mod.tree, tname)
+                    if hit is not None:
+                        tables[tname] = (mod.relpath, hit[0], hit[1])
+        got = _collapse_kwargs(mod.tree)
+        if got["fl"] or got["channel"]:
+            collapse = got
+            collapse_mod = mod.relpath
+
+    for spec in _SPECS:
+        if spec.class_name not in classes:
+            continue
+        cls_path, cls_node = classes[spec.class_name]
+        fields = _dataclass_fields(cls_node)
+        field_names = {f for f, _, _ in fields}
+        batched = tables.get(spec.batched_table or "", ("", [], 0))[1]
+        structural = tables.get(spec.structural_table, ("", [], 0))[1]
+
+        for fname, lineno, ann in fields:
+            in_b, in_s = fname in batched, fname in structural
+            if not in_b and not in_s:
+                findings.append(Finding(
+                    "TL005", cls_path, lineno,
+                    f"{spec.class_name}.{fname} is unclassified: add it to "
+                    f"{spec.batched_table or 'a batched table'} (sweep lane) "
+                    f"or {spec.structural_table} (structural axis)"))
+            elif in_b and in_s:
+                findings.append(Finding(
+                    "TL005", cls_path, lineno,
+                    f"{spec.class_name}.{fname} is claimed by BOTH "
+                    f"{spec.batched_table} and {spec.structural_table}; "
+                    f"a field has exactly one classification"))
+
+        for tname in (spec.batched_table, spec.structural_table):
+            if tname and tname in tables:
+                tpath, tvals, tline = tables[tname]
+                for stale in [v for v in tvals if v not in field_names]:
+                    findings.append(Finding(
+                        "TL005", tpath, tline,
+                        f"{tname} lists {stale!r} which is not a field of "
+                        f"{spec.class_name} (stale classification entry)"))
+
+        if spec.collapse is not None and collapse_mod is not None:
+            ckw = collapse[spec.collapse]
+            for fname in batched:
+                if fname in field_names and fname not in ckw:
+                    findings.append(Finding(
+                        "TL005", collapse_mod, 1,
+                        f"batched field {spec.class_name}.{fname} is not "
+                        f"collapsed by structural_config; two configs "
+                        f"differing only in it would batch into one compiled "
+                        f"program with distinct structure"))
+            for kname in sorted(ckw):
+                if kname in field_names and kname not in batched \
+                        and not (spec.collapse == "fl" and kname == "channel"):
+                    findings.append(Finding(
+                        "TL005", collapse_mod, 1,
+                        f"structural_config collapses {spec.class_name}."
+                        f"{kname} which is not in {spec.batched_table}; "
+                        f"structurally-distinct configs would alias"))
+    return findings
+
+
+def _dict_assigns(tree: ast.Module, names: Tuple[str, ...]
+                  ) -> List[Tuple[str, ast.Dict, int]]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id in names:
+                    out.append((t.id, node.value, node.lineno))
+    return out
+
+
+def _dict_keys(d: ast.Dict) -> Tuple[Set[str], List[str]]:
+    """(string keys, names of **-unpacked dicts)."""
+    keys: Set[str] = set()
+    unpacked: List[str] = []
+    for k, v in zip(d.keys, d.values):
+        if k is None:
+            if isinstance(v, ast.Name):
+                unpacked.append(v.id)
+        elif isinstance(k, ast.Constant) and isinstance(k.value, str):
+            keys.add(k.value)
+    return keys, unpacked
+
+
+def _tl006(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        hit = _string_tuple_assign(mod.tree, "DIAG_KEYS")
+        if hit is None:
+            continue
+        diag_keys, dk_line = set(hit[0]), hit[1]
+        assigns = _dict_assigns(mod.tree, ("diag", "diag_core"))
+        core_sets = [_dict_keys(d)[0] for n, d, _ in assigns if n == "diag_core"]
+        produced: Set[str] = set()
+        for name, d, lineno in assigns:
+            keys, unpacked = _dict_keys(d)
+            if name == "diag_core":
+                extra = keys - diag_keys
+                if extra:
+                    findings.append(Finding(
+                        "TL006", mod.relpath, lineno,
+                        f"diag_core writes keys {sorted(extra)} that are not "
+                        f"in DIAG_KEYS (line {dk_line})"))
+                produced |= keys
+                continue
+            # final diag dict: expand **diag_core against every diag_core
+            # variant (dense and streaming must BOTH complete the key set)
+            variants = core_sets if ("diag_core" in unpacked and core_sets) \
+                else [set()]
+            for core in variants:
+                full = keys | core
+                missing, extra = diag_keys - full, full - diag_keys
+                if missing:
+                    findings.append(Finding(
+                        "TL006", mod.relpath, lineno,
+                        f"diag dict is missing DIAG_KEYS entries "
+                        f"{sorted(missing)}; the history recorder indexes "
+                        f"every key each round"))
+                if extra:
+                    findings.append(Finding(
+                        "TL006", mod.relpath, lineno,
+                        f"diag dict writes keys {sorted(extra)} that are not "
+                        f"in DIAG_KEYS; they would be dropped silently"))
+            produced |= keys
+        if assigns:
+            never = diag_keys - produced - set().union(*core_sets) \
+                if core_sets else diag_keys - produced
+            for key in sorted(never):
+                findings.append(Finding(
+                    "TL006", mod.relpath, dk_line,
+                    f"DIAG_KEYS entry {key!r} is never written by any diag "
+                    f"dict in this module"))
+    return findings
+
+
+register(Rule(
+    id="TL005", name="config-classification-completeness",
+    summary="every config field claimed by batched tables, structural tables,"
+            " and the structural_config collapse consistently",
+    contract="sweep-engine batchable/structural split (PR 4 run_batched)",
+    check=_tl005))
+
+register(Rule(
+    id="TL006", name="diag-keys-sync",
+    summary="history-dict keys in fed/runtime.py match DIAG_KEYS exactly",
+    contract="per-round diagnostics recorder (both drivers, PR 2/6)",
+    check=_tl006))

@@ -1,0 +1,151 @@
+"""Pallas kernel constraints: TL004.
+
+Two checks on kernels that *accumulate* (AugAssign into an output ref, the
+``pl.when(kb == 0)`` init / ``+=`` pattern used by the streaming kernels):
+
+1. every ``jax.ShapeDtypeStruct`` in the call's ``out_shape`` must be fp32 —
+   accumulating partial block sums in bf16/f16 loses the paper's normalized
+   magnitudes;
+2. no full-axis (axis-less) ``jnp`` reductions inside the body when the grid
+   is multi-dimensional — a bare ``jnp.sum(x)`` inside a (K-block, N-block)
+   grid collapses the block axes the grid is supposed to keep separate.
+
+Non-accumulating kernels (one output tile per grid step) may legally reduce
+their whole tile, so they are exempt from check 2.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from .base import Finding, Rule, register
+from .context import _callable_name, _dotted, collect_functions
+
+_REDUCTIONS = {"sum", "max", "min", "mean", "prod", "amax", "amin"}
+
+
+def _enclosing_function_map(tree: ast.Module) -> Dict[int, ast.FunctionDef]:
+    """Map pallas_call lineno -> function whose body contains the call."""
+    out: Dict[int, ast.FunctionDef] = {}
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and _dotted(node.func).endswith("pallas_call"):
+                out[node.lineno] = fn
+    return out
+
+
+def _local_assignment(fn: Optional[ast.FunctionDef], name: str) -> Optional[ast.expr]:
+    if fn is None:
+        return None
+    value = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    value = node.value
+    return value
+
+
+def _resolve(node: Optional[ast.expr], fn: Optional[ast.FunctionDef]) -> Optional[ast.expr]:
+    if isinstance(node, ast.Name):
+        return _local_assignment(fn, node.id)
+    return node
+
+
+def _kernel_accumulates(kernel: ast.FunctionDef) -> bool:
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.AugAssign) \
+                and isinstance(node.target, ast.Subscript):
+            base = node.target.value
+            if isinstance(base, ast.Name) and base.id.endswith("_ref"):
+                return True
+    return False
+
+
+def _shape_structs(node: ast.expr) -> List[ast.Call]:
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) \
+                and _dotted(n.func).endswith("ShapeDtypeStruct"):
+            out.append(n)
+    return out
+
+
+def _struct_dtype(call: ast.Call) -> Optional[str]:
+    dtype: Optional[ast.expr] = None
+    if len(call.args) >= 2:
+        dtype = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            dtype = kw.value
+    if dtype is None:
+        return None
+    name = _dotted(dtype)
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def _tl004(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        funcs = collect_functions(mod.tree)
+        encl = _enclosing_function_map(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and _dotted(node.func).endswith("pallas_call")
+                    and node.args):
+                continue
+            kernel_name = _callable_name(node.args[0])
+            kernel = funcs.get(kernel_name) if kernel_name else None
+            if kernel is None or not _kernel_accumulates(kernel):
+                continue
+            caller = encl.get(node.lineno)
+
+            # check 1: accumulator out_shape dtypes must be float32
+            out_shape = None
+            for kw in node.keywords:
+                if kw.arg == "out_shape":
+                    out_shape = _resolve(kw.value, caller)
+            if out_shape is not None:
+                for struct in _shape_structs(out_shape):
+                    dt = _struct_dtype(struct)
+                    if dt is not None and dt != "float32":
+                        findings.append(Finding(
+                            "TL004", mod.relpath, struct.lineno,
+                            f"accumulating kernel `{kernel_name}` declares a "
+                            f"{dt} out_shape; block accumulators must be "
+                            f"float32"))
+
+            # check 2: axis-less reductions inside multi-dim gridded bodies
+            grid = None
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    grid = _resolve(kw.value, caller)
+            if isinstance(grid, ast.Tuple) and len(grid.elts) >= 2:
+                for inner in ast.walk(kernel):
+                    if not isinstance(inner, ast.Call):
+                        continue
+                    fn = _dotted(inner.func)
+                    parts = fn.split(".")
+                    if len(parts) == 2 and parts[0] in ("jnp", "np", "lax") \
+                            and parts[1] in _REDUCTIONS:
+                        has_axis = any(kw.arg == "axis"
+                                       for kw in inner.keywords) \
+                            or len(inner.args) >= 2
+                        if not has_axis:
+                            findings.append(Finding(
+                                "TL004", mod.relpath, inner.lineno,
+                                f"full-axis `{fn}` reduction inside "
+                                f"accumulating kernel `{kernel_name}` with a "
+                                f"{len(grid.elts)}-d grid; reduce with an "
+                                f"explicit axis so block axes stay separate"))
+    return findings
+
+
+register(Rule(
+    id="TL004", name="pallas-kernel-constraints",
+    summary="fp32 accumulators and explicit-axis reductions in gridded kernels",
+    contract="kernel-vs-reference numerics parity (PR 3/6 streaming kernels)",
+    check=_tl004))

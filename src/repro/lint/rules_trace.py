@@ -1,0 +1,298 @@
+"""Trace-purity rules: TL001 host coercion, TL002 key reuse, TL003 branching.
+
+All three work on the traced-function sets produced by ``context.find_traced``
+and share a light linear taint pass; see that module for the model.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from .base import Finding, Rule, register
+from .context import (Taint, _dotted, find_traced, walk_statements)
+
+# np.<name> calls that have a drop-in jnp.<name> spelling; these get an
+# automatic --fix rewrite.  Anything else is flagged without a fix.
+NP_TO_JNP_SAFE = {
+    "sum", "mean", "sqrt", "abs", "maximum", "minimum", "exp", "log",
+    "clip", "where", "concatenate", "stack", "zeros", "ones", "asarray",
+    "arange", "dot", "square", "prod", "cumsum", "sort", "argmin", "argmax",
+}
+
+# jax.random draws: consuming a key twice through these without an
+# intervening split/fold_in correlates streams.
+_KEY_DERIVING = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                 "wrap_key_data", "clone"}
+
+
+def _stmt_exprs(stmt: ast.stmt) -> Iterable[ast.expr]:
+    """Expressions belonging to ``stmt`` itself, not to nested statements.
+
+    ``walk_statements`` already yields nested statements separately, so rules
+    scanning expressions per-statement must not descend into child blocks or
+    they would report each finding once per nesting level.
+    """
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return
+    for field in ("value", "test", "msg", "exc", "iter", "target", "targets"):
+        val = getattr(stmt, field, None)
+        if val is None:
+            continue
+        if isinstance(val, list):
+            yield from (v for v in val if isinstance(v, ast.expr))
+        elif isinstance(val, ast.expr):
+            yield val
+    for item in getattr(stmt, "items", ()) or ():
+        yield item.context_expr
+
+
+def _walk_expr(expr: ast.expr) -> Iterable[ast.AST]:
+    """ast.walk that does not descend into lambdas (checked separately)."""
+    stack = [expr]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Lambda):
+                continue
+            stack.append(child)
+
+
+def _check_host_calls(expr: ast.expr, taint: Taint, path: str,
+                      findings: List[Finding], lines: List[str]) -> None:
+    for node in _walk_expr(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = _dotted(node.func)
+        args = list(node.args) + [kw.value for kw in node.keywords
+                                  if kw.value is not None]
+        any_tainted = any(taint.is_tainted(a) for a in args)
+        if fn.startswith("np.") and any_tainted:
+            fix = None
+            tail = fn.split(".", 1)[1]
+            if tail in NP_TO_JNP_SAFE and node.lineno - 1 < len(lines):
+                orig = lines[node.lineno - 1]
+                col = node.func.value.col_offset  # type: ignore[union-attr]
+                if orig[col:col + 3] == "np.":
+                    fix = (orig, orig[:col] + "jnp." + orig[col + 3:])
+            findings.append(Finding(
+                "TL001", path, node.lineno,
+                f"host numpy call `{fn}` on a traced value inside a traced "
+                f"context; use the jnp equivalent", fix=fix))
+        elif fn in ("float", "int", "bool") and args \
+                and any(taint.is_tainted(a) for a in node.args):
+            findings.append(Finding(
+                "TL001", path, node.lineno,
+                f"`{fn}()` coerces a traced value to a host scalar inside a "
+                f"traced context (concretization error or silent constant)"))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "tolist") \
+                and taint.is_tainted(node.func.value):
+            findings.append(Finding(
+                "TL001", path, node.lineno,
+                f"`.{node.func.attr}()` on a traced value inside a traced "
+                f"context forces a host sync / concretization"))
+
+
+def _run_taint(fn: ast.FunctionDef, path: str, lines: List[str],
+               on_stmt) -> List[Finding]:
+    findings: List[Finding] = []
+    taint = Taint(fn)
+    for stmt in walk_statements(fn):
+        on_stmt(stmt, taint, findings)
+        if isinstance(stmt, ast.Assign):
+            taint.assign(stmt.targets, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            taint.assign([stmt.target], stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            taint.assign([stmt.target], stmt.value)
+        elif isinstance(stmt, ast.For):
+            taint.assign([stmt.target], stmt.iter)
+    return findings
+
+
+def _tl001(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        info = find_traced(mod.tree)
+
+        def on_stmt(stmt, taint, out, _path=mod.relpath, _lines=mod.lines):
+            for expr in _stmt_exprs(stmt):
+                _check_host_calls(expr, taint, _path, out, _lines)
+
+        for name in sorted(info.traced):
+            fn = info.functions.get(name)
+            if fn is not None:
+                findings.extend(_run_taint(fn, mod.relpath, mod.lines, on_stmt))
+        for lam in info.lambdas:
+            taint = Taint(_lambda_as_fn(lam))
+            _check_host_calls(lam.body, taint, mod.relpath, findings, mod.lines)
+    return findings
+
+
+def _lambda_as_fn(lam: ast.Lambda) -> ast.FunctionDef:
+    fn = ast.FunctionDef(name="<lambda>", args=lam.args,
+                         body=[ast.Return(value=lam.body)],
+                         decorator_list=[], returns=None, type_params=[])
+    return ast.fix_missing_locations(ast.copy_location(fn, lam))
+
+
+def _tl003(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        info = find_traced(mod.tree)
+
+        def on_stmt(stmt, taint, out, _path=mod.relpath):
+            if isinstance(stmt, (ast.If, ast.While)) \
+                    and taint.is_tainted(stmt.test):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                out.append(Finding(
+                    "TL003", _path, stmt.lineno,
+                    f"Python `{kind}` branches on a traced value; use "
+                    f"jnp.where / lax.cond / lax.while_loop"))
+            elif isinstance(stmt, ast.Assert) and taint.is_tainted(stmt.test):
+                out.append(Finding(
+                    "TL003", _path, stmt.lineno,
+                    "`assert` on a traced value concretizes under trace; "
+                    "use checkify or a host-side validation path"))
+
+        for name in sorted(info.traced):
+            fn = info.functions.get(name)
+            if fn is not None:
+                findings.extend(_run_taint(fn, mod.relpath, mod.lines, on_stmt))
+    return findings
+
+
+def _keyish(name: str) -> bool:
+    low = name.lower()
+    return "key" in low or low == "rng" or low.startswith("rng_")
+
+
+# plain-Python builtins/containers: passing a name that LOOKS keyish to
+# these is not a PRNG draw (e.g. `set(eval_keys)` on metric-name tuples)
+_NOT_DRAWS = {"set", "sorted", "len", "list", "tuple", "dict", "enumerate",
+              "zip", "str", "repr", "print", "min", "max", "isinstance",
+              "type", "format", "join", "append", "extend", "get", "range"}
+
+
+def _consumed_keys(expr: ast.expr) -> Iterable[ast.Name]:
+    """Key names a statement's expression consumes (draws or forwards)."""
+    for node in _walk_expr(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = _dotted(node.func)
+        tail = fn.split(".")[-1]
+        if tail == "fold_in":
+            continue  # fold_in derives; the parent key stays usable
+        if tail in _KEY_DERIVING and tail != "split":
+            continue  # constructors
+        if tail in _NOT_DRAWS:
+            continue
+        for arg in node.args:
+            if isinstance(arg, ast.Name) and _keyish(arg.id):
+                yield arg
+                break  # one key per call is the convention everywhere here
+        for kw in node.keywords:
+            if kw.arg and _keyish(kw.arg) and isinstance(kw.value, ast.Name) \
+                    and _keyish(kw.value.id):
+                yield kw.value
+
+
+def _terminates(body: List[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def _tl002_block(body: List[ast.stmt], consumed: Dict[str, int],
+                 findings: List[Finding], path: str) -> None:
+    """Walk one statement block tracking key consumption.
+
+    Branch-aware: the arms of an ``if`` are exclusive paths, so a draw in the
+    ``else`` does not conflict with a draw in the ``then`` — each arm starts
+    from the pre-branch state and the post-state is the union (consumed on
+    SOME path still blocks a later unconditional redraw)."""
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue  # nested defs get their own pass
+        for expr in _stmt_exprs(stmt):
+            for key_node in _consumed_keys(expr):
+                name = key_node.id
+                if name.isupper():
+                    continue  # module-level fixture constants: deliberate
+                prev = consumed.get(name)
+                if prev is not None:
+                    findings.append(Finding(
+                        "TL002", path, key_node.lineno,
+                        f"PRNG key `{name}` reused (first consumed at line "
+                        f"{prev}) without an intervening split/fold_in"))
+                else:
+                    consumed[name] = key_node.lineno
+        # rebinds clear consumption after the statement's reads
+        targets: List[ast.expr] = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            targets = [stmt.target]
+        elif isinstance(stmt, ast.For):
+            targets = [stmt.target]
+        for t in targets:
+            for tname in _flat_names(t):
+                consumed.pop(tname, None)
+        if isinstance(stmt, ast.If):
+            then_state = dict(consumed)
+            else_state = dict(consumed)
+            _tl002_block(stmt.body, then_state, findings, path)
+            _tl002_block(stmt.orelse, else_state, findings, path)
+            # a terminating arm (early return/raise) never rejoins the fall-
+            # through path, so its consumption cannot conflict downstream
+            consumed.clear()
+            if not _terminates(stmt.orelse):
+                consumed.update(else_state)
+            if not _terminates(stmt.body):
+                consumed.update(then_state)
+        else:
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if sub:
+                    _tl002_block(sub, consumed, findings, path)
+            for handler in getattr(stmt, "handlers", ()) or ():
+                _tl002_block(handler.body, consumed, findings, path)
+
+
+def _tl002(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        info = find_traced(mod.tree)
+        for name, fn in sorted(info.functions.items()):
+            _tl002_block(fn.body, {}, findings, mod.relpath)
+    return findings
+
+
+def _flat_names(target: ast.expr) -> Iterable[str]:
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            yield from _flat_names(e)
+    elif isinstance(target, ast.Starred):
+        yield from _flat_names(target.value)
+
+
+register(Rule(
+    id="TL001", name="host-coercion-in-trace",
+    summary="np./float()/.item()/bool() on traced values in traced contexts",
+    contract="scan-vs-python and backend bitwise parity (PRs 1-3)",
+    check=_tl001, fixable=True))
+
+register(Rule(
+    id="TL002", name="prng-key-reuse",
+    summary="same PRNG key consumed twice without split/fold_in between",
+    contract="per-device fold_in discipline; PR 6 blocking invariance",
+    check=_tl002))
+
+register(Rule(
+    id="TL003", name="python-branch-on-tracer",
+    summary="Python if/while/assert on tracer-derived values",
+    contract="jit/scan tracing never concretizes control flow",
+    check=_tl003))

@@ -1,0 +1,17 @@
+"""--fix input: np.->jnp. rewrites and TL000 reason normalization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_math(cfg, params, grads):
+    total = jnp.sum(grads)
+    peak = jnp.maximum(grads, 0.0)
+    spread = np.trace(grads)
+    return params - total * peak * spread
+
+
+def shared_draw(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)  # tracelint: disable=TL002 TODO: justify
+    return a + b

@@ -1,0 +1,22 @@
+"""Every violation here carries a reasoned suppression; the file must lint
+clean (proves suppressions suppress, both inline and next-line forms)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_math(cfg, params, grads):
+    norm = jnp.sqrt(jnp.sum(jnp.square(grads)))
+    total = np.sum(grads)  # tracelint: disable=TL001 exercising the suppression plumbing
+    if norm > 1.0:  # tracelint: disable=TL003 likewise: a reasoned waiver of the branch rule
+        grads = grads / norm
+    return params - grads * total
+
+
+def shared_draw(key, shape):
+    a = jax.random.normal(key, shape)
+    # tracelint: disable=TL002 comment-only form: guards the NEXT line
+    b = jax.random.uniform(key, shape)
+    return a + b

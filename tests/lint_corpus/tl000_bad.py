@@ -1,0 +1,9 @@
+"""TL000 known-bad: suppressions without reason strings."""
+import jax
+import jax.numpy as jnp
+
+
+def correlated(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)  # tracelint: disable=TL002
+    return a + b

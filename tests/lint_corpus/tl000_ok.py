@@ -1,0 +1,9 @@
+"""TL000 known-good: every suppression documents its waiver."""
+import jax
+import jax.numpy as jnp
+
+
+def correlated(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)  # tracelint: disable=TL002 fixture needs identical draws
+    return a + b

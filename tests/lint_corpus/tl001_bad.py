@@ -1,0 +1,28 @@
+"""TL001 known-bad: host coercion on traced values inside traced contexts."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_math(cfg, params, grads):
+    norm = jnp.sqrt(jnp.sum(jnp.square(grads)))
+    total = np.sum(grads)              # BAD: host numpy on a tracer (fixable)
+    scale = float(norm)                # BAD: concretizes a tracer
+    flag = bool(norm > 0)              # BAD: host bool of a tracer
+    host = norm.item()                 # BAD: forces a device sync
+    return params - scale * total * flag * host
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _jitted_update(x, n):
+    return np.mean(x) / n              # BAD: np.mean in a jitted body
+
+
+def _scan_driver(xs):
+    def body(carry, x):
+        return carry + np.abs(x), None  # BAD: np.abs inside a scan body
+
+    out, _ = jax.lax.scan(body, jnp.zeros(()), xs)
+    return out

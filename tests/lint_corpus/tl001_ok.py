@@ -1,0 +1,33 @@
+"""TL001 known-good: host calls on static config and pure-jnp traced math."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_math(cfg, params, grads):
+    # float() of static config is host-side by design (the engine's
+    # `float(cfg.num_devices)` idiom)
+    k = float(cfg.num_devices)
+    norm = jnp.sqrt(jnp.sum(jnp.square(grads)))
+    return params - norm / k
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _jitted_update(x, n):
+    return jnp.mean(x) / float(n)      # n is static_argnames: host float ok
+
+
+def host_side_setup(cfg):
+    # not a traced context at all: np is the right tool for setup arrays
+    return np.full((cfg.num_devices,), float(cfg.num_devices))
+
+
+def _scan_driver(xs):
+    def body(carry, x):
+        # shape metadata concretizes without touching tracer VALUES
+        return carry + jnp.abs(x) / x.shape[0], None
+
+    out, _ = jax.lax.scan(body, jnp.zeros(()), xs)
+    return out

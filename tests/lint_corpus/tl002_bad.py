@@ -1,0 +1,17 @@
+"""TL002 known-bad: the same PRNG key consumed by two draws."""
+import jax
+import jax.numpy as jnp
+
+
+def correlated_noise(key, shape):
+    z1 = jax.random.normal(key, shape)
+    z2 = jax.random.uniform(key, shape)     # BAD: same key, correlated draws
+    return z1 + z2
+
+
+def parent_reuse_after_split(key, shape):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, shape)
+    b = jax.random.normal(k2, shape)
+    c = jax.random.normal(key, shape)        # BAD: parent reused after split
+    return a + b + c

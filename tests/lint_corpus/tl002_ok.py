@@ -1,0 +1,31 @@
+"""TL002 known-good: fold_in / split discipline (the PR 6 blocking idiom)."""
+import jax
+import jax.numpy as jnp
+
+
+def per_device_streams(key, dev_idx):
+    # fold_in derives a fresh stream per device; the parent stays usable
+    h = jax.vmap(lambda i: jax.random.normal(jax.random.fold_in(key, i), ()))(
+        dev_idx)
+    z = jax.random.normal(jax.random.fold_in(key, -1), dev_idx.shape)
+    return h + z
+
+
+def split_then_draw(key, shape):
+    k_chan, k_noise = jax.random.split(key)
+    h = jax.random.normal(k_chan, shape)
+    z = jax.random.normal(k_noise, shape)
+    return h + z
+
+
+def rebind_between_draws(key, shape):
+    a = jax.random.normal(key, shape)
+    key = jax.random.fold_in(key, 1)
+    b = jax.random.normal(key, shape)
+    return a + b
+
+
+def exclusive_branches(key, shape, streaming):
+    if streaming:
+        return jax.random.normal(key, shape)
+    return jax.random.uniform(key, shape)   # other arm: exclusive path

@@ -1,0 +1,13 @@
+"""TL003 known-bad: Python control flow on tracer-derived values."""
+import jax
+import jax.numpy as jnp
+
+
+def _round_math(cfg, params, grads):
+    norm = jnp.sqrt(jnp.sum(jnp.square(grads)))
+    if norm > 1.0:                      # BAD: Python if on a tracer
+        grads = grads / norm
+    while norm > 2.0:                   # BAD: Python while on a tracer
+        norm = norm / 2.0
+    assert norm >= 0.0                  # BAD: assert concretizes the tracer
+    return params - grads

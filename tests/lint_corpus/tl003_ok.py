@@ -1,0 +1,22 @@
+"""TL003 known-good: static gates and traced selects."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes
+
+
+def _round_math(cfg, params, grads, mask, noise_var):
+    norm = jnp.sqrt(jnp.sum(jnp.square(grads)))
+    # traced select, not a Python branch
+    grads = jnp.where(norm > 1.0, grads / norm, grads)
+    # None-ness is Python identity: static by definition
+    if mask is not None:
+        grads = grads * mask
+    # maybe_positive resolves a possibly-traced scalar at trace time (the
+    # engine's documented gate for the batched noise axis)
+    if schemes.maybe_positive(noise_var):
+        grads = grads + noise_var
+    # config reads are static
+    if cfg.num_devices > 1:
+        grads = grads / cfg.num_devices
+    return params - grads

@@ -1,0 +1,26 @@
+"""TL004 known-bad: accumulator dtype and full-axis reduction hazards."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stream_kernel(g_ref, out_ref):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[0, :] = jnp.zeros_like(out_ref[0, :])
+
+    g = g_ref[...].astype(jnp.float32)
+    partial = jnp.sum(g)                # BAD: axis-less reduction in a
+    out_ref[0, :] += partial            # (N-block, K-block) gridded body
+
+
+def aggregate(stacked, k_block, blk):
+    k, n = stacked.shape
+    grid = (n // blk, k // k_block)
+    return pl.pallas_call(
+        _stream_kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.bfloat16),  # BAD: bf16 acc
+    )(stacked)

@@ -1,0 +1,42 @@
+"""TL004 known-good: fp32 accumulators, explicit-axis block reductions."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stream_kernel(g_ref, out_ref):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[0, :] = jnp.zeros_like(out_ref[0, :])
+
+    g = g_ref[...].astype(jnp.float32)
+    partial = jnp.sum(g, axis=0)        # explicit axis: K-block collapsed,
+    out_ref[0, :] += partial            # N-block preserved
+
+
+def _tile_kernel(g_ref, out_ref):
+    # one output tile per grid step (no accumulation): a full-tile
+    # reduction is the POINT of this kernel, and that is legal
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(g)
+
+
+def aggregate(stacked, k_block, blk):
+    k, n = stacked.shape
+    grid = (n // blk, k // k_block)
+    return pl.pallas_call(
+        _stream_kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+    )(stacked)
+
+
+def tile_sums(stacked, blk):
+    k, n = stacked.shape
+    return pl.pallas_call(
+        _tile_kernel,
+        grid=(k, n // blk),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+    )(stacked)

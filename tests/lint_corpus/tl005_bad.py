@@ -1,0 +1,29 @@
+"""TL005 known-bad: config-classification drift, every failure mode.
+
+A miniature of the engine's FLConfig / structural_config layout with four
+seeded bugs: an unclassified field, a doubly-claimed field, a batched field
+structural_config forgot to collapse, and a stale table entry.
+"""
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    num_devices: int = 20
+    scheme: str = "normalized"
+    seed: int = 0
+    eta: float = 0.01
+    theta_th: float = 0.6
+    momentum: float = 0.9         # BAD: in neither table (silently unbatched)
+    p: float = 0.75               # BAD: claimed by BOTH tables below
+
+
+BATCHED_FL_FIELDS = ("seed", "eta", "theta_th", "p")
+STRUCTURAL_FL_FIELDS = ("num_devices", "scheme", "p",
+                        "local_steps")          # BAD: stale entry
+
+
+def structural_config(cfg: FLConfig) -> FLConfig:
+    # BAD: theta_th is batched but NOT collapsed here
+    return dataclasses.replace(cfg, seed=0, eta=0.01)

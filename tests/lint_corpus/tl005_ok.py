@@ -1,0 +1,19 @@
+"""TL005 known-good: a complete, consistent classification partition."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    num_devices: int = 20
+    scheme: str = "normalized"
+    seed: int = 0
+    eta: float = 0.01
+    theta_th: float = 0.6
+
+
+BATCHED_FL_FIELDS = ("seed", "eta", "theta_th")
+STRUCTURAL_FL_FIELDS = ("num_devices", "scheme")
+
+
+def structural_config(cfg: FLConfig) -> FLConfig:
+    return dataclasses.replace(cfg, seed=0, eta=0.01, theta_th=0.6)

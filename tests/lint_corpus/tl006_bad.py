@@ -1,0 +1,18 @@
+"""TL006 known-bad: diag dicts drifted from DIAG_KEYS in every direction."""
+import jax.numpy as jnp
+
+DIAG_KEYS = ("grad_norm_mean", "eta", "update_norm", "tx_energy")
+
+
+def _round_math(cfg, norms, eta, y):
+    diag_core = {
+        "grad_norm_mean": jnp.mean(norms),
+        "tx_energy": jnp.sum(norms),
+        "peak_norm": jnp.max(norms),     # BAD: key not in DIAG_KEYS
+    }
+    diag = {
+        **diag_core,
+        "eta": eta,
+        # BAD: update_norm missing — the history recorder will KeyError
+    }
+    return diag

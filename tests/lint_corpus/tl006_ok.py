@@ -1,0 +1,17 @@
+"""TL006 known-good: diag assembly in lockstep with DIAG_KEYS."""
+import jax.numpy as jnp
+
+DIAG_KEYS = ("grad_norm_mean", "eta", "update_norm", "tx_energy")
+
+
+def _round_math(cfg, norms, eta, y):
+    diag_core = {
+        "grad_norm_mean": jnp.mean(norms),
+        "tx_energy": jnp.sum(norms),
+    }
+    diag = {
+        **diag_core,
+        "eta": eta,
+        "update_norm": jnp.sqrt(jnp.sum(jnp.square(y))),
+    }
+    return diag

@@ -1,0 +1,25 @@
+"""TL007 known-bad: reading a buffer after donating it."""
+import jax
+import jax.numpy as jnp
+
+
+def _make_run_chunk():
+    def run_chunk(params, opt_state, xs):
+        return params + jnp.sum(xs), opt_state
+
+    return jax.jit(run_chunk, donate_argnums=(0, 1))
+
+
+def drive(params, opt_state, chunks):
+    run_chunk = _make_run_chunk()
+    for xs in chunks:
+        new_params, new_opt = run_chunk(params, opt_state, xs)
+        drift = jnp.sum(params)        # BAD: params' buffer was donated
+        params, opt_state = new_params, new_opt
+    return params, drift
+
+
+def direct_jit(params, xs):
+    step = jax.jit(lambda p, x: p + x, donate_argnums=(0,))
+    out = step(params, xs)
+    return out + params                # BAD: params donated by step()

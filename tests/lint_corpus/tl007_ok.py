@@ -1,0 +1,20 @@
+"""TL007 known-good: the engine's rebind-in-the-same-statement discipline."""
+import jax
+import jax.numpy as jnp
+
+
+def _make_run_chunk():
+    def run_chunk(params, opt_state, xs):
+        return params + jnp.sum(xs), opt_state
+
+    return jax.jit(run_chunk, donate_argnums=(0, 1))
+
+
+def drive(state, chunks):
+    run_chunk = _make_run_chunk()
+    # copy once so the CALLER's pytrees survive the donation chain
+    params = jax.tree_util.tree_map(jnp.copy, state.params)
+    opt_state = jax.tree_util.tree_map(jnp.copy, state.opt_state)
+    for xs in chunks:
+        params, opt_state = run_chunk(params, opt_state, xs)
+    return params, opt_state

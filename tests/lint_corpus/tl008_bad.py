@@ -1,0 +1,15 @@
+"""TL008 known-bad: scan carry arity drift between init, unpack, return."""
+import jax
+import jax.numpy as jnp
+
+
+def _make_chunk_scan(params, opt_state, h, b, a):
+    def body(carry, t):
+        params, opt_state, h, b = carry          # BAD: 4-leaf unpack
+        params = params - 0.01 * h * b
+        return (params, opt_state, h, b, a), t   # 5-leaf return
+
+    carry0 = (params, opt_state, h, b, a)        # 5-leaf init
+    (params, opt_state, h, b, a), ts = jax.lax.scan(
+        body, carry0, jnp.arange(4))
+    return params

@@ -1,0 +1,25 @@
+"""TL008 known-good: a stable scan carry (and a non-tuple carry, skipped)."""
+import jax
+import jax.numpy as jnp
+
+
+def _make_chunk_scan(params, opt_state, h, b, a):
+    def body(carry, t):
+        params, opt_state, h, b, a = carry
+        params = params - 0.01 * h * b
+        return (params, opt_state, h, b, a), t
+
+    carry0 = (params, opt_state, h, b, a)
+    (params, opt_state, h, b, a), ts = jax.lax.scan(
+        body, carry0, jnp.arange(4))
+    return params
+
+
+def dict_carry(acc, xs):
+    # pytree (dict) carries are out of static reach: the rule must stay
+    # quiet rather than guess
+    def body(carry, x):
+        return {"acc": carry["acc"] + x}, None
+
+    out, _ = jax.lax.scan(body, {"acc": acc}, xs)
+    return out["acc"]

@@ -1,0 +1,206 @@
+"""tracelint gate: rules fire on the corpus, suppressions suppress, the
+self-test catches a silenced rule, --fix round-trips, and the repo is clean.
+
+This suite IS the mechanism that keeps future PRs honest about the engine's
+trace-purity / PRNG / classification contracts: `test_repo_lints_clean`
+fails the tier-1 run the moment an unsuppressed finding lands in src/,
+tests/, or benchmarks/.
+"""
+import json
+import pathlib
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro import lint
+from repro.lint import engine
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+CORPUS = ROOT / "tests" / "lint_corpus"
+RULE_IDS = ("TL001", "TL002", "TL003", "TL004", "TL005", "TL006", "TL007",
+            "TL008")
+
+
+def lint_file(path, only=None):
+    _, active, suppressed = engine.lint(
+        [str(path)], root=ROOT, include_corpus=True,
+        only=set(only) if only else None)
+    return active, suppressed
+
+
+class TestRegistry:
+    def test_at_least_eight_rules(self):
+        assert len(lint.names()) >= 8
+
+    def test_ids_and_lookup(self):
+        for rid in RULE_IDS:
+            assert lint.get(rid).id == rid
+        with pytest.raises(KeyError):
+            lint.get("TL999")
+
+    def test_duplicate_registration_rejected(self):
+        rule = lint.get("TL001")
+        with pytest.raises(ValueError):
+            lint.register(rule)
+
+
+class TestCorpus:
+    @pytest.mark.parametrize("rid", ("TL000",) + RULE_IDS)
+    def test_rule_fires_on_bad_fixture(self, rid):
+        active, _ = lint_file(CORPUS / f"{rid.lower()}_bad.py")
+        assert any(f.rule_id == rid for f in active), \
+            f"{rid} silent on its known-bad fixture"
+
+    @pytest.mark.parametrize("rid", ("TL000",) + RULE_IDS)
+    def test_rule_quiet_on_good_fixture(self, rid):
+        active, _ = lint_file(CORPUS / f"{rid.lower()}_ok.py")
+        noise = [f for f in active if f.rule_id == rid]
+        assert not noise, f"{rid} false positive: {noise[0].message}"
+
+    def test_suppressions_suppress(self):
+        active, suppressed = lint_file(CORPUS / "suppressed_ok.py")
+        assert not active, [f.message for f in active]
+        assert len(suppressed) == 3
+
+    def test_reasonless_suppression_is_tl000(self):
+        active, _ = lint_file(CORPUS / "tl000_bad.py")
+        assert [f.rule_id for f in active] == ["TL000"]
+        assert active[0].fix is not None
+
+
+class TestSelfTest:
+    def test_self_test_passes(self):
+        ok, report = engine.self_test(CORPUS, ROOT)
+        assert ok, report
+
+    def test_self_test_fails_when_rule_misses(self, tmp_path):
+        # a corpus whose tl001_bad.py contains no violation: the self-test
+        # must exit nonzero rather than certify a silenced rule
+        broken = tmp_path / "lint_corpus"
+        shutil.copytree(CORPUS, broken)
+        (broken / "tl001_bad.py").write_text("x = 1\n")
+        ok, report = engine.self_test(broken, tmp_path)
+        assert not ok
+        assert "FAIL TL001" in report
+
+    def test_cli_self_test_exit_codes(self, tmp_path):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.lint", "--self-test"],
+            capture_output=True, text=True, cwd=ROOT,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        assert r.returncode == 0, r.stdout + r.stderr
+        broken = tmp_path / "repo"
+        (broken / "tests").mkdir(parents=True)
+        shutil.copytree(CORPUS, broken / "tests" / "lint_corpus")
+        (broken / "tests" / "lint_corpus" / "tl003_bad.py").write_text("")
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.lint", "--self-test",
+             "--root", str(broken)],
+            capture_output=True, text=True, cwd=ROOT,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        assert r.returncode == 1, r.stdout + r.stderr
+
+
+class TestFix:
+    def test_fix_roundtrip(self, tmp_path):
+        target = tmp_path / "fix_roundtrip.py"
+        shutil.copy(CORPUS / "fix_roundtrip.py", target)
+        project, active, _ = engine.lint([str(target)], root=tmp_path,
+                                         include_corpus=True)
+        touched = engine.apply_fixes(project, active)
+        assert touched
+        want = (CORPUS / "fix_roundtrip_fixed.py").read_text()
+        assert target.read_text() == want
+
+    def test_fix_skips_stale_lines(self, tmp_path):
+        target = tmp_path / "fix_roundtrip.py"
+        shutil.copy(CORPUS / "fix_roundtrip.py", target)
+        project, active, _ = engine.lint([str(target)], root=tmp_path,
+                                         include_corpus=True)
+        # file changes between lint and fix: every recorded original line is
+        # stale, so nothing may be rewritten
+        target.write_text("# rewritten\n" + (CORPUS / "fix_roundtrip.py"
+                                             ).read_text())
+        engine.apply_fixes(project, active)
+        assert target.read_text().startswith("# rewritten\n")
+
+
+class TestContracts:
+    """The acceptance-criteria mutations: classification drift must fail."""
+
+    def _mutated(self, tmp_path, old, new):
+        src = tmp_path / "src"
+        shutil.copytree(ROOT / "src", src)
+        rt = src / "repro" / "fed" / "runtime.py"
+        text = rt.read_text()
+        assert old in text
+        rt.write_text(text.replace(old, new))
+        _, active, _ = engine.lint([str(src)], root=tmp_path)
+        return [f for f in active if f.rule_id == "TL005"]
+
+    def test_removing_batched_field_fails(self, tmp_path):
+        hits = self._mutated(
+            tmp_path,
+            'BATCHED_FL_FIELDS = ("seed", "eta",',
+            'BATCHED_FL_FIELDS = ("seed",')
+        assert any("eta" in f.message for f in hits), hits
+
+    def test_unclassified_field_fails(self, tmp_path):
+        hits = self._mutated(
+            tmp_path,
+            "    active_gather: bool = False\n",
+            "    active_gather: bool = False\n    new_knob: float = 1.0\n")
+        assert any("new_knob" in f.message for f in hits), hits
+
+
+class TestRepoClean:
+    def test_repo_lints_clean(self):
+        _, active, _ = engine.lint(["src", "tests", "benchmarks"], root=ROOT)
+        assert not active, "\n".join(
+            f"{f.path}:{f.line}: {f.rule_id} {f.message}" for f in active)
+
+    def test_json_report_shape(self):
+        project, active, suppressed = engine.lint(["src"], root=ROOT)
+        payload = json.loads(engine.render_json(active, suppressed,
+                                                len(project.modules)))
+        assert len(payload["rules"]) >= 8
+        assert payload["findings"] == []
+        assert {"id", "name", "summary", "contract", "fixable"} <= set(
+            payload["rules"][0])
+
+
+class TestConfigValidation:
+    """Satellite: construction-time k_block / backend / noise validation
+    with exact error messages (previously surfaced deep in ota.aggregate)."""
+
+    def test_flconfig_rejects_mesh_k_block(self):
+        from repro.fed.runtime import FLConfig
+        with pytest.raises(ValueError, match="mesh backend's device axis"):
+            FLConfig(num_devices=8, backend="mesh", k_block=4)
+
+    def test_flconfig_rejects_non_dividing_k_block(self):
+        from repro.fed.runtime import FLConfig
+        with pytest.raises(ValueError, match="must divide the streamed"):
+            FLConfig(num_devices=10, k_block=3)
+
+    def test_flconfig_rejects_nonpositive_k_block(self):
+        from repro.fed.runtime import FLConfig
+        with pytest.raises(ValueError, match="k_block must be >= 1"):
+            FLConfig(num_devices=8, k_block=0)
+
+    def test_otaconfig_rejects_mesh_k_block(self):
+        from repro.core.ota import OTAConfig
+        with pytest.raises(ValueError, match="mesh backend's device axis"):
+            OTAConfig(backend="mesh", k_block=2)
+
+    def test_otaconfig_rejects_negative_noise_var(self):
+        from repro.core.ota import OTAConfig
+        with pytest.raises(ValueError, match="noise_var must be >= 0"):
+            OTAConfig(noise_var=-1e-3)
+
+    def test_channelconfig_rejects_bad_devices(self):
+        from repro.core.channel import ChannelConfig
+        with pytest.raises(ValueError, match="num_devices must be >= 1"):
+            ChannelConfig(num_devices=0)
