@@ -62,6 +62,11 @@ def main() -> None:
         # — subprocess cases, flat-memory + absolute-pin guards asserted
         ("kscale", lambda: figures.kscale_flat_memory(quick=args.quick)),
         ("csi_robustness", lambda: figures.csi_robustness(r(400, 60))),
+        # the client-algorithm registry: FedProx / FedDyn / SCAFFOLD vs
+        # local SGD on dirichlet splits with H=4 local steps — the
+        # correctors' two-slot energy ratio and the non-IID separation
+        # (drift-dominated noise regime) are asserted
+        ("clients", lambda: figures.client_algorithms(r(200, 60), s)),
         # the declarative spec axes: server optimizer / local steps /
         # partial participation, each one field on the baseline spec
         ("scenarios", lambda: figures.scenario_axes(r(120, 30))),

@@ -319,6 +319,22 @@ register(Scheme(
 ))
 
 register(Scheme(
+    name="normalized_restored",
+    doc="x_k = g_k / ||g_k|| with the hb-weighted mean norm folded back by "
+        "the server from error-free side info (the benchmark2 pattern on "
+        "the paper's eq.-12 transmit): unit transmit energy per device, but "
+        "the aggregate keeps the cohort's magnitude — the statistic an "
+        "algorithm-state update (e.g. SCAFFOLD's variate slot) needs at its "
+        "original scale",
+    side_info=("norm",),
+    device_scale=lambda st, gb: 1.0 / (st.norm + EPS),
+    collect_side=lambda st: {"norm": st.norm},
+    server_post=lambda y, folded: jax.tree_util.tree_map(
+        lambda l: l * folded["norm"], y),
+    transmit_sq_norm=lambda st, gb: _ones(st),
+))
+
+register(Scheme(
     name="normalized_per_tensor",
     doc="beyond-paper LARS-flavoured variant: each tensor normalized by its "
         "own norm, scaled 1/sqrt(#tensors) so the total transmit norm is 1 — "

@@ -85,6 +85,7 @@ from repro.core import amplification as amp
 from repro.core import channel as chan
 from repro.core import ota
 from repro.core import schemes
+from repro.fl import clients as clientlib
 from repro.optim import optimizers as optim
 
 PyTree = Any
@@ -107,6 +108,12 @@ _MASK_SALT = 0x5EED
 # (both fold from chan_key), and the geometry draw from the setup channel key
 _CSI_SALT = 0xC51
 _GEOM_SALT = 0x6E0
+# salt separating the SECOND OTA transmission slot's channel-noise draw from
+# the first's (multi-slot client algorithms, e.g. scaffold): slot 0 keeps
+# the historical fold_in(key, t) BITWISE, slot 1 folds this salt on top —
+# independent noise per slot, shared exactly by every backend and both the
+# dense and streaming rounds
+_SLOT_SALT = 0x510
 
 # Compiled-executable cache size for the round/chunk builders below.  Large
 # sweeps walk many (config, grad_fn) pairs; a too-small LRU silently evicts
@@ -169,7 +176,7 @@ STRUCTURAL_FL_FIELDS = (
     "amplification", "server_opt", "server_momentum", "server_b1",
     "server_b2", "server_eps", "server_weight_decay", "local_steps",
     "local_lr", "participation", "participation_mode", "k_block",
-    "active_gather")
+    "active_gather", "client")
 STRUCTURAL_CHANNEL_FIELDS = ("num_devices", "block_fading", "model",
                              "rician_k", "csi_error_model", "geometry")
 
@@ -189,6 +196,8 @@ class BatchAxes(NamedTuple):
     rayleigh_scale: Optional[jax.Array] = None  # redraw scale: scalar or [K]
     rho: Optional[jax.Array] = None             # AR(1) per-round correlation
     csi_error: Optional[jax.Array] = None       # estimation-error magnitude
+    client_mu: Optional[jax.Array] = None       # fedprox proximal strength
+    client_alpha: Optional[jax.Array] = None    # feddyn regularization
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,11 +253,28 @@ class FLConfig:
     # num_participants); the grad-norm diagnostics then cover the
     # participants only (non-participants never compute a gradient).
     active_gather: bool = False
+    # --- client-algorithm axis (repro.fl.clients) --------------------------
+    # what each device optimizes locally and transmits: 'sgd' (the paper's
+    # round, bitwise-pinned default), 'fedprox', and the two-slot correctors
+    # 'feddyn' / 'scaffold' (whose refreshed correction states ride a second
+    # OTA slot to teach the server its state)
+    client: clientlib.ClientConfig = None
 
     def __post_init__(self):
         if self.channel is None:
             object.__setattr__(self, "channel",
                                chan.ChannelConfig(num_devices=self.num_devices))
+        if self.client is None:
+            object.__setattr__(self, "client", clientlib.ClientConfig())
+        alg = clientlib.get(self.client.algo)
+        if alg.num_slots > 1:
+            # the slot-2 scheme must exist AND be channel-borne: a baseline
+            # (channel-bypassing) scheme has no superposition to de-gain
+            if schemes.get(self.client.variate_scheme).baseline:
+                raise ValueError(
+                    f"variate_scheme {self.client.variate_scheme!r} is a "
+                    "baseline (channel-bypassing) scheme; the second OTA "
+                    "slot is a genuine transmission")
         if self.backend not in ota.BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"one of {ota.BACKENDS}")
@@ -313,11 +339,12 @@ def structural_config(cfg: FLConfig) -> FLConfig:
     channel = dataclasses.replace(cfg.channel, noise_var=0.0,
                                   channel_mean=1.0, b_max=1.0, rho=0.0,
                                   csi_error=0.0)
+    client = dataclasses.replace(cfg.client, mu=0.0, alpha=0.01)
     return dataclasses.replace(
         cfg, seed=0, eta=0.01, s_target=None, epsilon_target=None,
         grad_bound=None if cfg.grad_bound is None else 1.0,
         smoothness_L=1.0, strong_convexity_M=1.0, expected_loss_drop=1.0,
-        theta_th=chan.DEFAULT_THETA_TH, channel=channel)
+        theta_th=chan.DEFAULT_THETA_TH, channel=channel, client=client)
 
 
 @dataclasses.dataclass
@@ -345,6 +372,12 @@ class FLState:
     # per-device amplitude scales from the geometry subsystem ([K]; None
     # keeps the homogeneous scalar ChannelConfig.amplitude_scale())
     scale: Optional[np.ndarray] = None
+    # client-algorithm state (repro.fl.clients): {"dev": [K, ...] stacked
+    # per-client pytree or None, "srv": param-shaped server pytree or None};
+    # None for stateless algorithms (sgd/fedprox) — the pre-registry carry
+    # and checkpoint layout, bitwise.  Initialized lazily by run() for
+    # states built before the client-algorithm axis existed.
+    client_state: Optional[Dict[str, Any]] = None
 
 
 def server_optimizer(cfg: FLConfig) -> optim.Optimizer:
@@ -394,7 +427,9 @@ def setup(cfg: FLConfig, params0: PyTree, model_dim: int) -> FLState:
     h, h_hat, fad_state, scale_vec = _setup_channel(cfg)
     b_max = np.full(cfg.num_devices, cfg.channel.b_max)
     extra = dict(model_dim=model_dim, h_hat=h_hat, fad_state=fad_state,
-                 scale=scale_vec)
+                 scale=scale_vec,
+                 client_state=clientlib.init_state(cfg.client, params0,
+                                                   cfg.num_devices))
 
     if cfg.amplification == "bmax":
         b = b_max.copy()
@@ -497,18 +532,50 @@ def _fusion_fence(tree: PyTree) -> PyTree:
     return jax.tree_util.tree_map(_fence_leaf, tree)
 
 
-def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch) -> PyTree:
+def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch,
+                    corr=None, dev_state=None) -> PyTree:
     """The quantity each device hands to the scheme's transform: its local
     gradient for ``local_steps == 1`` (the paper), else the accumulated model
     delta of H local SGD steps, ``(w - w_k^H) / (H * local_lr)`` — the average
     local gradient along the trajectory, so its magnitude is comparable to a
-    single gradient and ``grad_bound``-based schemes stay calibrated."""
-    if cfg.local_steps == 1:
-        return jax.vmap(lambda db: grad_fn(params, db))(batch)
+    single gradient and ``grad_bound``-based schemes stay calibrated.
 
-    def one_device(db):
+    ``corr(p, g, dev_state_k)`` is the client algorithm's local-objective
+    correction (``repro.fl.clients``), applied to EVERY local gradient along
+    the H-step trajectory; ``dev_state`` the stacked per-device state it
+    reads (vmapped alongside the batch).  ``corr=None`` — the ``sgd``
+    default — takes the pre-registry code path verbatim (bitwise)."""
+    if corr is None:
+        if cfg.local_steps == 1:
+            return jax.vmap(lambda db: grad_fn(params, db))(batch)
+
+        def one_device(db):
+            def step(p, _):
+                g = grad_fn(p, db)
+                return jax.tree_util.tree_map(
+                    lambda w, gg: w - jnp.asarray(cfg.local_lr, w.dtype)
+                    * gg.astype(w.dtype), p, g), None
+
+            p_h, _ = jax.lax.scan(step, params, None, length=cfg.local_steps)
+            inv = 1.0 / (cfg.local_steps * cfg.local_lr)
+            return jax.tree_util.tree_map(
+                lambda w0, wh: (w0 - wh) * jnp.asarray(inv, w0.dtype),
+                params, p_h)
+
+        return jax.vmap(one_device)(batch)
+
+    def local_grad(p, db, ds):
+        return corr(p, grad_fn(p, db), ds)
+
+    if cfg.local_steps == 1:
+        if dev_state is None:
+            return jax.vmap(lambda db: local_grad(params, db, None))(batch)
+        return jax.vmap(lambda db, ds: local_grad(params, db, ds))(
+            batch, dev_state)
+
+    def one_device_corr(db, ds):
         def step(p, _):
-            g = grad_fn(p, db)
+            g = local_grad(p, db, ds)
             return jax.tree_util.tree_map(
                 lambda w, gg: w - jnp.asarray(cfg.local_lr, w.dtype)
                 * gg.astype(w.dtype), p, g), None
@@ -516,19 +583,31 @@ def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch) -> PyTree:
         p_h, _ = jax.lax.scan(step, params, None, length=cfg.local_steps)
         inv = 1.0 / (cfg.local_steps * cfg.local_lr)
         return jax.tree_util.tree_map(
-            lambda w0, wh: (w0 - wh) * jnp.asarray(inv, w0.dtype), params, p_h)
+            lambda w0, wh: (w0 - wh) * jnp.asarray(inv, w0.dtype),
+            params, p_h)
 
-    return jax.vmap(one_device)(batch)
+    if dev_state is None:
+        return jax.vmap(lambda db: one_device_corr(db, None))(batch)
+    return jax.vmap(one_device_corr)(batch, dev_state)
 
 
 def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
                 batch, h, h_hat, b, a, eta0, t, key,
-                over: Optional[BatchAxes] = None):
-    """One FL round (local computation -> OTA aggregate -> server optimizer
-    step) plus the scalar diagnostics of ``DIAG_KEYS``.  Pure; traced
-    identically by both drivers.  ``over`` carries the per-experiment traced
-    scalars of a batched run (None — the single-experiment default — bakes
-    the ``cfg`` values into the trace exactly as before).
+                over: Optional[BatchAxes] = None, client_state=None):
+    """One FL round (local computation -> OTA aggregate(s) -> server
+    optimizer step) plus the scalar diagnostics of ``DIAG_KEYS``.  Pure;
+    traced identically by both drivers.  ``over`` carries the per-experiment
+    traced scalars of a batched run (None — the single-experiment default —
+    bakes the ``cfg`` values into the trace exactly as before).
+
+    ``client_state`` is the client algorithm's state
+    (``{"dev": [K, ...], "srv": ...}``, see ``repro.fl.clients``; None for
+    stateless algorithms), threaded through the round alongside params:
+    returns ``(params, opt_state, client_state, diag)``.  A multi-slot
+    algorithm (scaffold) runs a SECOND OTA transmission after the gradient
+    slot — its own normalization scheme, the same channel realization, an
+    independent noise key (``_SLOT_SALT``), and its eq.-8 energy added to
+    ``tx_energy``.
 
     ``h`` is the TRUE channel (the air superposes with it); ``h_hat`` the
     server's estimate — the participation rescale and the server-side
@@ -545,6 +624,18 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
             noise_var = over.noise_var
         if over.grad_bound is not None:
             grad_bound = over.grad_bound
+    alg = clientlib.get(cfg.client.algo)
+    cp = clientlib.resolve_params(
+        cfg.client,
+        over.client_mu if over is not None else None,
+        over.client_alpha if over is not None else None)
+    dev_state = client_state["dev"] if client_state is not None else None
+    srv_state = client_state["srv"] if client_state is not None else None
+    corr = None
+    if alg.correction is not None:
+        # w_round = params (the round's broadcast model); the closure is
+        # traced inside the device vmap, p being the device-local weights
+        corr = lambda p, g, ds: alg.correction(cp, p, params, ds, srv_state, g)
     if cfg.participation < 1.0:
         mask = _participation_mask(cfg, key, t)
         b_eff, a_eff = ota.participation_fold(h_hat, b, a, mask)
@@ -561,16 +652,21 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
         # reduction term), so the round is bitwise the dense masked round —
         # the participants are just the only devices that ever run grad_fn.
         idx = _active_indices(cfg, key, t)  # tracelint: disable=TL002 mask and active-set draws fold in distinct salts inside the helpers; streams are disjoint by construction
+        dev_active = (None if dev_state is None else
+                      jax.tree_util.tree_map(lambda l: l[idx], dev_state))
         active = _local_transmit(
             cfg, grad_fn, params,
-            jax.tree_util.tree_map(lambda l: l[idx], batch))
+            jax.tree_util.tree_map(lambda l: l[idx], batch),
+            corr, dev_active)
         stacked = jax.tree_util.tree_map(
             lambda l: jnp.zeros((cfg.num_devices,) + l.shape[1:],
                                 l.dtype).at[idx].set(l), active)
         b_air = b_eff[idx]
     else:
         idx = None
-        active = stacked = _local_transmit(cfg, grad_fn, params, batch)
+        dev_active = dev_state
+        active = stacked = _local_transmit(cfg, grad_fn, params, batch,
+                                           corr, dev_active)
         b_air = b_eff
     if mask is not None:
         # fence the gradient stack so the aggregation below consumes a
@@ -617,16 +713,88 @@ def _round_math(cfg: FLConfig, sch, opt, grad_fn: GradFn, params, opt_state,
         tx = jnp.zeros((cfg.num_devices,), tx.dtype).at[idx].set(tx)
     if mask is not None:
         tx = _fusion_fence(tx)
+    # total transmit energy sum_k b_k^2 ||x_k||^2 (eq. 8 budget) via the
+    # scheme's analytic accounting; masked-out devices spend nothing.  A
+    # second OTA slot adds its own eq.-8 term below.
+    tx_energy = jnp.sum(tx)
+
+    new_client_state = client_state
+    if alg.stateful:
+        tmap = jax.tree_util.tree_map
+        hlr = cfg.local_steps * cfg.local_lr
+        dev_new = dev_state
+        dev_new_active = dev_active
+        if alg.has_state:
+            # the state transition sees the round's transmitted statistic
+            # (``active``: grad for H = 1, the accumulated delta otherwise)
+            dev_new_active = alg.update_state(cp, hlr, dev_active, srv_state,
+                                              active)
+            if idx is not None:
+                dev_new = tmap(lambda full, act: full.at[idx].set(act),
+                               dev_state, dev_new_active)
+            elif mask is not None:
+                # a masked device did not participate: its state must not
+                # move (the raw transition still feeds slot 2 below, where
+                # b_eff = 0 already silences the masked rows)
+                keep = mask.astype(bool)
+                dev_new = tmap(
+                    lambda new, old: jnp.where(
+                        keep.reshape((-1,) + (1,) * (new.ndim - 1)),
+                        new, old), dev_new_active, dev_state)
+            else:
+                dev_new = dev_new_active
+        srv_new = srv_state
+        if alg.num_slots == 2:
+            # ---- the second OTA transmission slot -------------------------
+            # same channel realization h/b_eff/a_eff (the slots are
+            # consecutive symbols of one coherence block), its own
+            # normalization scheme, an independent noise draw, and its own
+            # eq.-8 energy.  The server learns its state from the DE-GAINED
+            # aggregate: y2 / (a sum h_hat b) is approximately the
+            # participant-mean transmitted statistic.
+            sch2 = schemes.get(cfg.client.variate_scheme)
+            x2_active = alg.variate_stat(cp, dev_active, dev_new_active,
+                                         srv_state, active)
+            if idx is not None:
+                x2 = tmap(lambda l: jnp.zeros(
+                    (cfg.num_devices,) + l.shape[1:], l.dtype).at[idx].set(l),
+                    x2_active)
+            else:
+                x2 = x2_active
+            if mask is not None:
+                x2 = _fusion_fence(x2)
+            stats2 = schemes.compute_stats(x2_active, sch2, batched=True)
+            tx2 = schemes.transmit_energy(sch2, stats2, b_air, grad_bound,
+                                          None if idx is not None else mask)
+            if idx is not None:
+                tx2 = jnp.zeros((cfg.num_devices,), tx2.dtype).at[idx].set(tx2)
+            if mask is not None:
+                tx2 = _fusion_fence(tx2)
+            tx_energy = tx_energy + jnp.sum(tx2)
+            ocfg2 = ota.OTAConfig(scheme=cfg.client.variate_scheme, a=a_eff,
+                                  noise_var=noise_var,
+                                  grad_bound=grad_bound, backend=cfg.backend)
+            key2 = jax.random.fold_in(jax.random.fold_in(key, t), _SLOT_SALT)
+            y2 = ota.aggregate(ocfg2, x2, h, b_eff, key2, h_hat=h_hat)
+            gain = a_eff * jnp.sum(h_hat * b_eff)
+            y2_hat = tmap(lambda l: l / jnp.maximum(gain, schemes.EPS), y2)
+            # |participants|/K scales the server variate step (SCAFFOLD's
+            # m/K); an empty round has gain = 0 AND frac = 0 — srv holds
+            frac = (jnp.sum(mask) / cfg.num_devices if mask is not None
+                    else jnp.asarray(1.0, jnp.float32))
+            srv_new = alg.apply_variate(cp, srv_state, y2_hat, frac)
+        new_client_state = {"dev": dev_new, "srv": srv_new}
+
     diag_core = {
         "grad_norm_mean": jnp.mean(norms),
         "grad_norm_min": jnp.min(norms),
         "grad_norm_max": jnp.max(norms),
-        # total transmit energy sum_k b_k^2 ||x_k||^2 (eq. 8 budget) via the
-        # scheme's analytic accounting; masked-out devices spend nothing
-        "tx_energy": jnp.sum(tx),
+        "tx_energy": tx_energy,
     }
-    return _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
-                       diag_core, a_eff, h, h_hat, b_eff)
+    new_params, new_opt_state, diag = _round_tail(
+        cfg, sch, opt, params, opt_state, y, mask, eta0, t, diag_core, a_eff,
+        h, h_hat, b_eff)
+    return new_params, new_opt_state, new_client_state, diag
 
 
 def _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
@@ -683,7 +851,7 @@ def _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
 def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
                           opt_state, batch, h, h_hat, b, a, eta0, t, key,
                           over: Optional[BatchAxes] = None,
-                          block_batch_fn=None):
+                          block_batch_fn=None, client_state=None):
     """The flat-memory round (``cfg.k_block``): local gradients are computed
     and folded into the OTA accumulator ``k_block`` devices at a time through
     the streaming carry API (``ota.streaming_carry/_block/_finish``) inside a
@@ -699,7 +867,13 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
     Parity with the dense round: every per-device term (grad, scale, energy)
     is computed identically; the K-way sums re-associate into block partials
     (documented-ulp, tests/test_streaming.py), the channel-noise draw is
-    bitwise-shared, and grad_norm_min/max are exact (min/max associate)."""
+    bitwise-shared, and grad_norm_min/max are exact (min/max associate).
+
+    ``client_state`` threads the client algorithm's state exactly like the
+    dense round (returns a 4-tuple): the per-device ``[K, ...]`` stack rides
+    the block scan's ``xs`` (its working set is O(k_block * N) per leaf),
+    updated states come back as the scan's per-block outputs, and a second
+    OTA slot folds into its OWN streaming accumulator alongside slot 1's."""
     if h_hat is None:
         h_hat = h
     noise_var = cfg.channel.noise_var
@@ -709,6 +883,16 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
             noise_var = over.noise_var
         if over.grad_bound is not None:
             grad_bound = over.grad_bound
+    alg = clientlib.get(cfg.client.algo)
+    cp = clientlib.resolve_params(
+        cfg.client,
+        over.client_mu if over is not None else None,
+        over.client_alpha if over is not None else None)
+    dev_state = client_state["dev"] if client_state is not None else None
+    srv_state = client_state["srv"] if client_state is not None else None
+    corr = None
+    if alg.correction is not None:
+        corr = lambda p, g, ds: alg.correction(cp, p, params, ds, srv_state, g)
     if cfg.participation < 1.0:
         mask = _participation_mask(cfg, key, t)
         b_eff, a_eff = ota.participation_fold(h_hat, b, a, mask)
@@ -735,6 +919,13 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
     xs = {"ha": blk((h_air * b_air).astype(jnp.float32)),
           "hs": blk((h_srv * b_air).astype(jnp.float32)),
           "b": blk(b_air), "dev": blk(dev)}
+    if dev_state is not None:
+        # one K-block of per-device state per scan step: gathered to the
+        # active set first (like the batches), then blocked like everything
+        # on the streamed axis
+        dev_str = (dev_state if idx is None else
+                   jax.tree_util.tree_map(lambda l: l[idx], dev_state))
+        xs["cst"] = jax.tree_util.tree_map(blk, dev_str)
     if mask is not None and idx is None:
         xs["mask"] = blk(mask)
     weighted = mask is not None and sch.baseline
@@ -755,14 +946,28 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
     template = jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
     zero = jnp.zeros((), jnp.float32)
+    tmap = jax.tree_util.tree_map
+    hlr = cfg.local_steps * cfg.local_lr
+    two_slot = alg.num_slots == 2
+    sch2 = ocfg2 = None
+    if two_slot:
+        # the second slot accumulates into its OWN streaming carry,
+        # interleaved block-by-block with slot 1's
+        sch2 = schemes.get(cfg.client.variate_scheme)
+        ocfg2 = ota.OTAConfig(scheme=cfg.client.variate_scheme, a=a_eff,
+                              noise_var=noise_var, grad_bound=grad_bound,
+                              backend=cfg.backend, k_block=kb)
     carry0 = (ota.streaming_carry(ocfg, template), zero,
               jnp.asarray(jnp.inf, jnp.float32),
               jnp.asarray(-jnp.inf, jnp.float32), zero)
+    if two_slot:
+        carry0 = carry0 + (ota.streaming_carry(ocfg2, template),)
 
     def body(carry, x):
-        oc, nsum, nmin, nmax, txsum = carry
+        oc, nsum, nmin, nmax, txsum = carry[:5]
         bat = x["batch"] if "batch" in x else block_batch_fn(t, x["dev"])
-        g_blk = _local_transmit(cfg, grad_fn, params, bat)
+        g_blk = _local_transmit(cfg, grad_fn, params, bat, corr,
+                                x.get("cst"))
         stats = schemes.compute_stats(g_blk, sch, batched=True)
         norms = jnp.sqrt(stats.sq_norm)
         tx = schemes.transmit_energy(sch, stats, x["b"], grad_bound,
@@ -770,24 +975,73 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
         oc = ota.streaming_block(ocfg, oc, g_blk, x["ha"], x["hs"],
                                  stats=stats, grad_bound=grad_bound,
                                  baseline_weights=x.get("w"))
-        return (oc, nsum + jnp.sum(norms),
-                jnp.minimum(nmin, jnp.min(norms)),
-                jnp.maximum(nmax, jnp.max(norms)),
-                txsum + jnp.sum(tx)), None
+        txsum = txsum + jnp.sum(tx)
+        ys = None
+        cst = x.get("cst")
+        raw_new = cst
+        if alg.has_state:
+            raw_new = alg.update_state(cp, hlr, cst, srv_state, g_blk)
+            if "mask" in x:
+                # masked devices hold their state (the raw transition still
+                # feeds slot 2, where b_eff = 0 silences those rows)
+                keep = x["mask"].astype(bool)
+                ys = tmap(lambda new, old: jnp.where(
+                    keep.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+                    raw_new, cst)
+            else:
+                ys = raw_new
+        new_carry = (oc, nsum + jnp.sum(norms),
+                     jnp.minimum(nmin, jnp.min(norms)),
+                     jnp.maximum(nmax, jnp.max(norms)), txsum)
+        if two_slot:
+            x2_blk = alg.variate_stat(cp, cst, raw_new, srv_state, g_blk)
+            stats2 = schemes.compute_stats(x2_blk, sch2, batched=True)
+            tx2 = schemes.transmit_energy(sch2, stats2, x["b"], grad_bound,
+                                          x.get("mask"))
+            oc2 = ota.streaming_block(ocfg2, carry[5], x2_blk, x["ha"],
+                                      x["hs"], stats=stats2,
+                                      grad_bound=grad_bound)
+            new_carry = new_carry[:4] + (txsum + jnp.sum(tx2), oc2)
+        return new_carry, ys
 
-    (oc, nsum, nmin, nmax, txsum), _ = jax.lax.scan(body, carry0, xs)
+    carry_out, ys_out = jax.lax.scan(body, carry0, xs)
+    oc, nsum, nmin, nmax, txsum = carry_out[:5]
     y = ota.streaming_finish(ocfg, oc, template, a_eff,
                              jax.random.fold_in(key, t),
                              noise_var=noise_var,
                              num_devices=1.0 if weighted else float(s))
+    new_client_state = client_state
+    if alg.stateful:
+        dev_new = dev_state
+        if alg.has_state:
+            flat_new = tmap(lambda l: l.reshape((s,) + l.shape[2:]), ys_out)
+            if idx is not None:
+                dev_new = tmap(lambda full, fl: full.at[idx].set(fl),
+                               dev_state, flat_new)
+            else:
+                dev_new = flat_new
+        srv_new = srv_state
+        if two_slot:
+            key2 = jax.random.fold_in(jax.random.fold_in(key, t), _SLOT_SALT)
+            y2 = ota.streaming_finish(ocfg2, carry_out[5], template, a_eff,
+                                      key2, noise_var=noise_var,
+                                      num_devices=float(s))
+            gain = a_eff * jnp.sum(h_hat * b_eff)
+            y2_hat = tmap(lambda l: l / jnp.maximum(gain, schemes.EPS), y2)
+            frac = (jnp.sum(mask) / cfg.num_devices if mask is not None
+                    else jnp.asarray(1.0, jnp.float32))
+            srv_new = alg.apply_variate(cp, srv_state, y2_hat, frac)
+        new_client_state = {"dev": dev_new, "srv": srv_new}
     diag_core = {
         "grad_norm_mean": nsum / s,
         "grad_norm_min": nmin,
         "grad_norm_max": nmax,
         "tx_energy": txsum,
     }
-    return _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
-                       diag_core, a_eff, h, h_hat, b_eff)
+    new_params, new_opt_state, diag = _round_tail(
+        cfg, sch, opt, params, opt_state, y, mask, eta0, t, diag_core, a_eff,
+        h, h_hat, b_eff)
+    return new_params, new_opt_state, new_client_state, diag
 
 
 def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t,
@@ -863,11 +1117,14 @@ def _make_fading_refresh(cfg: FLConfig, model_dim: int):
 def make_round_step(cfg: FLConfig, grad_fn: GradFn, block_batch_fn=None):
     """Builds the jitted one-round function (the ``python`` driver's unit).
 
-    round_step(params, opt_state, device_batches, h, h_hat, b, a, eta0, t,
-               key) -> (new_params, new_opt_state, diagnostics)
+    round_step(params, opt_state, client_state, device_batches, h, h_hat, b,
+               a, eta0, t, key)
+        -> (new_params, new_opt_state, new_client_state, diagnostics)
     device_batches: pytree with leading [K, ...] axis (per-device
     minibatches) — or None under ``cfg.k_block`` with a ``block_batch_fn``
     (the lazy-batch streaming round; see ``_round_math_streaming``).
+    client_state: the client algorithm's state dict (None for stateless
+    algorithms — the pre-registry carry, bitwise).
 
     Cached on (cfg, grad_fn) — ``FLConfig`` is a frozen dataclass and
     functions/bound methods hash stably — so repeated ``run`` calls (resume,
@@ -877,16 +1134,18 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn, block_batch_fn=None):
     opt = server_optimizer(cfg)
 
     @jax.jit
-    def round_step(params, opt_state, device_batches, h, h_hat, b, a, eta0,
-                   t, key):
+    def round_step(params, opt_state, client_state, device_batches, h, h_hat,
+                   b, a, eta0, t, key):
         TRACE_COUNTS["round_step"] += 1
         if cfg.k_block is not None:
             return _round_math_streaming(cfg, sch, opt, grad_fn, params,
                                          opt_state, device_batches, h, h_hat,
                                          b, a, eta0, t, key,
-                                         block_batch_fn=block_batch_fn)
+                                         block_batch_fn=block_batch_fn,
+                                         client_state=client_state)
         return _round_math(cfg, sch, opt, grad_fn, params, opt_state,
-                           device_batches, h, h_hat, b, a, eta0, t, key)
+                           device_batches, h, h_hat, b, a, eta0, t, key,
+                           client_state=client_state)
 
     return round_step
 
@@ -905,12 +1164,12 @@ def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
     opt = server_optimizer(cfg)
     time_varying = cfg.channel.time_varying()
 
-    def run_one(params, opt_state, h, h_hat, b, a, eta0, key, chan_key,
-                eff_gain, fad_state, over, ts, batches):
+    def run_one(params, opt_state, client_state, h, h_hat, b, a, eta0, key,
+                chan_key, eff_gain, fad_state, over, ts, batches):
         TRACE_COUNTS[trace_counter] += 1
 
         def body(carry, xs):
-            params, opt_state, h, h_hat, b, a, fad_state = carry
+            params, opt_state, client_state, h, h_hat, b, a, fad_state = carry
             t, batch = xs
             if time_varying:
                 h, h_hat_t, b, a, fad_state = _fading_refresh(
@@ -920,20 +1179,25 @@ def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
                 # csi gate was off), so nothing is lost by dropping it
                 h_hat = None if h_hat is None else h_hat_t
             if cfg.k_block is not None:
-                params, opt_state, diag = _round_math_streaming(
+                params, opt_state, client_state, diag = _round_math_streaming(
                     cfg, sch, opt, grad_fn, params, opt_state, batch,
                     h, h_hat, b, a, eta0, t, key, over,
-                    block_batch_fn=block_batch_fn)
+                    block_batch_fn=block_batch_fn, client_state=client_state)
             else:
-                params, opt_state, diag = _round_math(
+                params, opt_state, client_state, diag = _round_math(
                     cfg, sch, opt, grad_fn, params, opt_state, batch,
-                    h, h_hat, b, a, eta0, t, key, over)
-            return (params, opt_state, h, h_hat, b, a, fad_state), diag
+                    h, h_hat, b, a, eta0, t, key, over,
+                    client_state=client_state)
+            return (params, opt_state, client_state, h, h_hat, b, a,
+                    fad_state), diag
 
-        (params, opt_state, h, h_hat, b, a, fad_state), hist = jax.lax.scan(
-            body, (params, opt_state, h, h_hat, b, a, fad_state),
-            (ts, batches))
-        return params, opt_state, h, h_hat, b, a, fad_state, hist
+        (params, opt_state, client_state, h, h_hat, b, a, fad_state), hist = \
+            jax.lax.scan(
+                body,
+                (params, opt_state, client_state, h, h_hat, b, a, fad_state),
+                (ts, batches))
+        return params, opt_state, client_state, h, h_hat, b, a, fad_state, \
+            hist
 
     return run_one
 
@@ -950,12 +1214,13 @@ def _make_run_chunk(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
     run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk",
                                block_batch_fn)
 
-    def run_chunk(params, opt_state, h, h_hat, b, a, eta0, key, chan_key,
-                  eff_gain, fad_state, over, ts, batches):
-        return run_one(params, opt_state, h, h_hat, b, a, eta0, key,
-                       chan_key, eff_gain, fad_state, over, ts, batches)
+    def run_chunk(params, opt_state, client_state, h, h_hat, b, a, eta0,
+                  key, chan_key, eff_gain, fad_state, over, ts, batches):
+        return run_one(params, opt_state, client_state, h, h_hat, b, a,
+                       eta0, key, chan_key, eff_gain, fad_state, over, ts,
+                       batches)
 
-    return jax.jit(run_chunk, donate_argnums=(0, 1))
+    return jax.jit(run_chunk, donate_argnums=(0, 1, 2))
 
 
 @_engine_cache
@@ -978,8 +1243,8 @@ def _make_run_chunk_batched(cfg: FLConfig, grad_fn: GradFn, model_dim: int):
     — ``lax.while_loop``'s batching rule freezes converged lanes, so each
     lane's bisection is identical to its solo run."""
     run_one = _make_chunk_scan(cfg, grad_fn, model_dim, "run_chunk_batched")
-    batched = jax.vmap(run_one, in_axes=(0,) * 12 + (None, None))
-    return jax.jit(batched, donate_argnums=(0, 1))
+    batched = jax.vmap(run_one, in_axes=(0,) * 13 + (None, None))
+    return jax.jit(batched, donate_argnums=(0, 1, 2))
 
 
 # name -> lru-cached builder, for cache_info()/clear_compile_caches()
@@ -1083,6 +1348,14 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         state.opt_state = opt.init(state.params)._replace(
             step=jnp.asarray(state.round, jnp.int32))
     opt_state = state.opt_state
+    alg = clientlib.get(cfg.client.algo)
+    if alg.stateful and state.client_state is None:
+        # states built before the client-algorithm axis (or restored from
+        # pre-registry checkpoints): zero state, like a fresh setup()
+        state.client_state = clientlib.init_state(cfg.client, state.params,
+                                                  cfg.num_devices)
+    client_state = (None if state.client_state is None else
+                    jax.tree_util.tree_map(jnp.asarray, state.client_state))
     key = jax.random.PRNGKey(cfg.seed + 1)
     h = jnp.asarray(state.h, jnp.float32)
     # perfect CSI is structural: h_hat = None makes the estimate alias h's
@@ -1149,9 +1422,9 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
                 h_hat = None if perfect_csi else h_hat_t
             batch = (None if block_batch_provider is not None
                      else batch_provider(t))
-            params, opt_state, diag = round_step(params, opt_state, batch,
-                                                 h, h_hat, b, a, eta0,
-                                                 jnp.asarray(t), key)
+            params, opt_state, client_state, diag = round_step(
+                params, opt_state, client_state, batch, h, h_hat, b, a,
+                eta0, jnp.asarray(t), key)
             hist["round"].append(t)
             for k in DIAG_KEYS:
                 hist[k].append(float(diag[k]))
@@ -1160,11 +1433,13 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     else:
         run_chunk = _make_run_chunk(cfg, grad_fn, state.model_dim,
                                     block_batch_provider)
-        # params and optimizer state are donated chunk-to-chunk; copy once so
-        # the CALLER's pytrees (often reused across runs, e.g. the benchmark
-        # experiments) survive
+        # params, optimizer state, and client state are donated
+        # chunk-to-chunk; copy once so the CALLER's pytrees (often reused
+        # across runs, e.g. the benchmark experiments) survive
         params = jax.tree_util.tree_map(jnp.copy, state.params)
         opt_state = jax.tree_util.tree_map(jnp.copy, opt_state)
+        client_state = (None if client_state is None else
+                        jax.tree_util.tree_map(jnp.copy, client_state))
         for ts in _plan_chunks(t0, num_rounds,
                                eval_every if eval_fn is not None else None,
                                chunk_size):
@@ -1173,10 +1448,11 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
             else:
                 batches = (chunk_batch_provider(ts) if chunk_batch_provider
                            else _stack_batches(batch_provider, ts))
-            params, opt_state, h, h_hat, b, a, fad_state, chunk_hist = \
-                run_chunk(params, opt_state, h, h_hat, b, a, eta0, key,
-                          chan_key, eff_gain, fad_state, over,
-                          jnp.asarray(ts, jnp.int32), batches)
+            (params, opt_state, client_state, h, h_hat, b, a, fad_state,
+             chunk_hist) = run_chunk(
+                 params, opt_state, client_state, h, h_hat, b, a, eta0, key,
+                 chan_key, eff_gain, fad_state, over,
+                 jnp.asarray(ts, jnp.int32), batches)
             chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
             hist["round"].extend(ts)
             for k in DIAG_KEYS:
@@ -1187,6 +1463,8 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
 
     state.params = params
     state.opt_state = opt_state
+    if client_state is not None:
+        state.client_state = client_state
     if time_varying:
         # persist the final channel/gain so a second run(cfg, state, ...)
         # resumes from round t0+num_rounds, not the stale round-0 draw
@@ -1271,10 +1549,14 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
     model_dim = dims.pop()
 
     opt = server_optimizer(cfg0)
+    alg0 = clientlib.get(cfg0.client.algo)
     for s in states:
         if s.opt_state is None:
             s.opt_state = opt.init(s.params)._replace(
                 step=jnp.asarray(s.round, jnp.int32))
+        if alg0.stateful and s.client_state is None:
+            s.client_state = clientlib.init_state(cfg0.client, s.params,
+                                                  cfg0.num_devices)
 
     # assemble the per-experiment numerics in NumPy — ONE host->device
     # transfer per stacked array, not one dispatch per experiment (the
@@ -1282,6 +1564,8 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
     # critical path)
     params = _stack_trees([s.params for s in states])
     opt_state = _stack_trees([s.opt_state for s in states])
+    client_state = (_stack_trees([s.client_state for s in states])
+                    if alg0.stateful else None)
     h = jnp.asarray(np.stack([np.asarray(s.h) for s in states]), jnp.float32)
     # perfect CSI across the whole sub-batch is structural (h_hat aliases h
     # in-trace); ANY imperfect lane threads the stacked estimates, and the
@@ -1342,16 +1626,25 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
         csi_error=(jnp.asarray(
             np.asarray([c.channel.csi_error for c in cfgs]), jnp.float32)
             if time_varying and not csi_off else None),
+        # exactly the numerics the algorithm declares it reads become lanes
+        # (an unused lane would change the default traces for nothing)
+        client_mu=(jnp.asarray(
+            np.asarray([c.client.mu for c in cfgs]), jnp.float32)
+            if alg0.uses_mu else None),
+        client_alpha=(jnp.asarray(
+            np.asarray([c.client.alpha for c in cfgs]), jnp.float32)
+            if alg0.uses_alpha else None),
     )
 
     if shard:
         from repro.distribution import sharding as shardlib
         mesh = shardlib.experiment_mesh(num_exp)
         if mesh is not None:
-            (params, opt_state, h, h_hat, b, a, eta0, keys, chan_keys,
-             eff_gain, fad_state, over) = shardlib.shard_experiment_axis(
-                 (params, opt_state, h, h_hat, b, a, eta0, keys, chan_keys,
-                  eff_gain, fad_state, over), mesh)
+            (params, opt_state, client_state, h, h_hat, b, a, eta0, keys,
+             chan_keys, eff_gain, fad_state, over) = \
+                shardlib.shard_experiment_axis(
+                    (params, opt_state, client_state, h, h_hat, b, a, eta0,
+                     keys, chan_keys, eff_gain, fad_state, over), mesh)
 
     hist: Dict[str, Any] = {"round": [], "eval_round": []}
     diag_chunks: Dict[str, List[np.ndarray]] = {k: [] for k in DIAG_KEYS}
@@ -1377,9 +1670,11 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
                            chunk_size):
         batches = (chunk_batch_provider(ts) if chunk_batch_provider
                    else _stack_batches(batch_provider, ts))
-        params, opt_state, h, h_hat, b, a, fad_state, chunk_hist = run_chunk(
-            params, opt_state, h, h_hat, b, a, eta0, keys, chan_keys,
-            eff_gain, fad_state, over, jnp.asarray(ts, jnp.int32), batches)
+        (params, opt_state, client_state, h, h_hat, b, a, fad_state,
+         chunk_hist) = run_chunk(
+             params, opt_state, client_state, h, h_hat, b, a, eta0, keys,
+             chan_keys, eff_gain, fad_state, over,
+             jnp.asarray(ts, jnp.int32), batches)
         chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
         hist["round"].extend(ts)
         for k in DIAG_KEYS:
@@ -1396,6 +1691,8 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
     for e, s in enumerate(states):
         s.params = _slice_tree(params, e)
         s.opt_state = _slice_tree(opt_state, e)
+        if alg0.stateful:
+            s.client_state = _slice_tree(client_state, e)
         if time_varying:
             s.h = np.asarray(jax.device_get(h[e]), np.float64)
             s.h_hat = (s.h if h_hat is None

@@ -9,15 +9,48 @@
 See ``repro.fl.spec`` for the spec fields and ``repro.fl.experiment`` for
 the runnable object; ``repro.fed.runtime`` stays the underlying engine (and
 its ``run()`` the stable compatibility wrapper for hand-wired callers).
-"""
-from repro.fed.runtime import FLConfig
-from repro.fl.experiment import Experiment
-from repro.fl.spec import (DataSpec, EvalSpec, ExperimentSpec, ModelSpec,
-                           apply_axes, apply_axis, resolve_axis)
-from repro.fl.sweep import SweepPoint, SweepResult, SweepSpec, run_sweep
-from repro.fl.tasks import Task, build_task
 
-__all__ = ["DataSpec", "EvalSpec", "Experiment", "ExperimentSpec",
-           "FLConfig", "ModelSpec", "SweepPoint", "SweepResult", "SweepSpec",
-           "Task", "apply_axes", "apply_axis", "build_task", "resolve_axis",
-           "run_sweep"]
+Exports resolve lazily (PEP 562): ``repro.fl.clients`` is imported by the
+runtime itself (the client-algorithm registry is engine-level, like
+``repro.core.schemes``), so this package must be importable while
+``repro.fed.runtime`` is still initializing — an eager ``from
+repro.fed.runtime import FLConfig`` here would close that cycle.
+"""
+from typing import Any
+
+_EXPORTS = {
+    "FLConfig": ("repro.fed.runtime", "FLConfig"),
+    "ClientConfig": ("repro.fl.clients", "ClientConfig"),
+    "Experiment": ("repro.fl.experiment", "Experiment"),
+    "DataSpec": ("repro.fl.spec", "DataSpec"),
+    "EvalSpec": ("repro.fl.spec", "EvalSpec"),
+    "ExperimentSpec": ("repro.fl.spec", "ExperimentSpec"),
+    "ModelSpec": ("repro.fl.spec", "ModelSpec"),
+    "apply_axes": ("repro.fl.spec", "apply_axes"),
+    "apply_axis": ("repro.fl.spec", "apply_axis"),
+    "resolve_axis": ("repro.fl.spec", "resolve_axis"),
+    "SweepPoint": ("repro.fl.sweep", "SweepPoint"),
+    "SweepResult": ("repro.fl.sweep", "SweepResult"),
+    "SweepSpec": ("repro.fl.sweep", "SweepSpec"),
+    "run_sweep": ("repro.fl.sweep", "run_sweep"),
+    "Task": ("repro.fl.tasks", "Task"),
+    "build_task": ("repro.fl.tasks", "build_task"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value      # cache: subsequent lookups skip __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

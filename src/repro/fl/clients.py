@@ -1,0 +1,326 @@
+"""The client-algorithm registry: what each device *optimizes locally*
+during its H local steps, and what it transmits — generalizing the paper's
+plain local SGD (Sec. II Step 1) the same way ``repro.core.schemes``
+generalizes the transmit transform and ``repro.channels`` the radio
+environment.  One ``ClientAlgorithm`` record = a local-objective correction,
+optional per-client state ``[K, ...]`` (threaded through the scan carry,
+``FLState``, and checkpoints by the runtime), and one-or-more transmitted
+statistics: algorithms whose server-side state must itself be learned from
+the cohort (SCAFFOLD's control variate ``c``, FedDyn's correction mean
+``hbar``) declare a SECOND OTA transmission slot, and the runtime runs the
+round as N slots — each with its own normalization scheme, superposition,
+independent noise key, and eq.-8 energy accounting.
+
+Registered algorithms (the drift-correction landscape of arXiv 2310.10089):
+
+``sgd``      the paper's round, bitwise-pinned default: no correction, no
+             state, one slot — the runtime's sgd trace is IDENTICAL to the
+             pre-registry engine (tests/golden pins both drivers).
+``fedprox``  stateless proximal term ``mu/2 ||w - w_t||^2`` added to each
+             local objective: the local gradient becomes
+             ``g + mu (w - w_t)``, pulling the H-step trajectory back to
+             the round's broadcast model.
+``feddyn``   dynamic regularization: per-client correction state ``h_k``
+             (a gradient-shaped pytree) enters every local gradient as
+             ``g + alpha (w - w_t) - h_k + hbar`` and integrates the
+             client's realized drift after the round, ``h_k <- h_k -
+             alpha (w_k^H - w_t)``.  Textbook FedDyn subtracts its server
+             state ``hbar = mean_k h_k`` on the server (``-hbar/alpha``);
+             the paper's eq.-11 step has no slot for that shift, so hbar
+             re-enters the local objective as the tilt ``+<hbar, w>`` —
+             on the air the ``-h_k + hbar`` pair cancels participant
+             bias, and hbar is learned from a SECOND OTA slot carrying
+             the refreshed ``h_k``.
+``scaffold`` control variates: local gradient ``g - c_k + c`` with a
+             per-client variate ``c_k`` and a server variate ``c``.  The
+             refreshed variates ``c_k^+`` ride a SECOND OTA slot (scheme
+             ``ClientConfig.variate_scheme``, default the
+             magnitude-restoring ``normalized_restored``), and the server
+             tracks ``c <- (1 - m/K) c + (m/K) mean_k c_k^+`` from the
+             de-gained slot-2 aggregate — the variates never leave the
+             air interface any more than the gradients do.
+
+All callables must be jit/vmap/scan-safe (the compiled engine calls them
+inside ``lax.scan``, and the sweep engine vmaps that body).  They operate on
+pytrees with broadcasting-compatible shapes: ``correction`` runs per device
+(inside the runtime's device vmap), the state transitions on stacked
+``[K, ...]`` trees (server-state leaves broadcast against the leading K).
+
+Registering is the only extension step::
+
+    register(ClientAlgorithm(name="myalgo", correction=...))
+
+after which ``ClientConfig(algo="myalgo")`` validates, both runtime drivers
+and all three OTA backends run it, and sweeps accept a ``client.algo``
+axis.  This module is imported by ``repro.fed.runtime`` (like
+``repro.core.schemes``) and therefore must not import the runtime or its
+``repro.fl`` siblings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+# ClientConfig sweep classification (tracelint TL005; consumed by
+# repro.fl.sweep.classify_field and collapsed by runtime.structural_config):
+# mu/alpha are per-experiment traced scalars of a batched run, algo and the
+# slot-2 scheme change the traced program.
+BATCHED_CLIENT_FIELDS = ("mu", "alpha")
+STRUCTURAL_CLIENT_FIELDS = ("algo", "variate_scheme")
+
+
+class ClientParams(NamedTuple):
+    """The batchable client-algorithm numerics as (possibly traced) scalars:
+    baked config floats in a single run, per-experiment ``BatchAxes`` lanes
+    in a batched sweep."""
+
+    mu: Any = 0.0        # fedprox proximal strength
+    alpha: Any = 0.01    # feddyn regularization strength
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    """Which client algorithm runs on the devices, and its constants."""
+
+    algo: str = "sgd"
+    mu: float = 0.0          # fedprox: proximal term mu/2 ||w - w_t||^2
+    alpha: float = 0.01      # feddyn: dynamic-regularization strength
+    # transmit scheme of the second OTA slot (scaffold's variate deltas);
+    # normalized_restored keeps the paper's unit-norm power discipline per
+    # slot while the server folds the magnitude back from side info
+    variate_scheme: str = "normalized_restored"
+
+    def __post_init__(self):
+        get(self.algo)       # raises ValueError naming the registry
+        if self.mu < 0.0:
+            raise ValueError(f"mu must be >= 0, got {self.mu}")
+        if self.alpha < 0.0:
+            raise ValueError(f"alpha must be >= 0, got {self.alpha}")
+
+
+# correction(cp, w_now, w_round, dev_state, srv_state, g) -> corrected g
+CorrectionFn = Callable[..., PyTree]
+# update_state(cp, hlr, dev_state, srv_state, delta) -> new dev_state
+# (stacked [K, ...]; delta is the round's model delta
+# (w_t - w_k^H)/(H local_lr), hlr the product H * local_lr)
+UpdateStateFn = Callable[..., PyTree]
+# variate_stat(cp, dev_old, dev_new, srv_state, delta) -> slot-2 stack
+VariateStatFn = Callable[..., PyTree]
+# apply_variate(cp, srv_state, y2, part_frac) -> new srv_state (y2 is the
+# de-gained slot-2 aggregate: approximately the participant mean statistic)
+ApplyVariateFn = Callable[..., PyTree]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientAlgorithm:
+    """One client-side FL algorithm (see module docstring for the contract).
+
+    ``uses_mu`` / ``uses_alpha`` declare which ``ClientConfig`` numerics the
+    callables read — the batched sweep engine threads exactly those as
+    per-experiment lanes (``BatchAxes.client_mu`` / ``client_alpha``)."""
+
+    name: str
+    doc: str = ""
+    correction: Optional[CorrectionFn] = None
+    # per-device state [K, <param shapes>] threaded by the runtime
+    has_state: bool = False
+    update_state: Optional[UpdateStateFn] = None
+    # server-side state (one param-shaped pytree) + the second OTA slot
+    has_server_state: bool = False
+    num_slots: int = 1
+    variate_stat: Optional[VariateStatFn] = None
+    apply_variate: Optional[ApplyVariateFn] = None
+    uses_mu: bool = False
+    uses_alpha: bool = False
+
+    def __post_init__(self):
+        # registration IS the whole extension step; an inconsistent record
+        # must fail here, not diverge between drivers/backends later
+        if self.num_slots not in (1, 2):
+            raise ValueError(f"algorithm {self.name!r}: num_slots must be 1 "
+                             f"or 2, got {self.num_slots}")
+        if self.has_state and self.update_state is None:
+            raise ValueError(f"algorithm {self.name!r} threads per-client "
+                             "state but has no update_state transition")
+        if self.num_slots == 2:
+            if self.variate_stat is None or self.apply_variate is None:
+                raise ValueError(
+                    f"algorithm {self.name!r} declares a second OTA slot; "
+                    "it needs variate_stat (what the devices transmit) and "
+                    "apply_variate (how the server consumes the aggregate)")
+            if not self.has_server_state:
+                raise ValueError(
+                    f"algorithm {self.name!r}: a second slot exists to learn "
+                    "server-side state; set has_server_state")
+        elif self.has_server_state:
+            raise ValueError(
+                f"algorithm {self.name!r} carries server state with no slot "
+                "to learn it from (num_slots must be 2)")
+
+    @property
+    def stateful(self) -> bool:
+        return self.has_state or self.has_server_state
+
+
+_REGISTRY: Dict[str, ClientAlgorithm] = {}
+
+
+def register(alg: ClientAlgorithm) -> ClientAlgorithm:
+    if alg.name in _REGISTRY:
+        raise ValueError(f"client algorithm {alg.name!r} already registered")
+    _REGISTRY[alg.name] = alg
+    return alg
+
+
+def get(name: str) -> ClientAlgorithm:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown client algorithm {name!r}; one of {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def init_state(ccfg: ClientConfig, params0: PyTree,
+               num_devices: int) -> Optional[Dict[str, Any]]:
+    """Host-side zero client state for ``setup()``: ``{"dev": [K, ...] or
+    None, "srv": param-shaped or None}``, or None for stateless algorithms
+    (sgd/fedprox keep the pre-registry leafless carry/checkpoint)."""
+    alg = get(ccfg.algo)
+    if not alg.stateful:
+        return None
+
+    def zeros(leading=()):
+        return jax.tree_util.tree_map(
+            lambda p: np.zeros(leading + tuple(np.shape(p)), np.float32),
+            params0)
+
+    return {"dev": zeros((num_devices,)) if alg.has_state else None,
+            "srv": zeros() if alg.has_server_state else None}
+
+
+def resolve_params(ccfg: ClientConfig, over_mu=None,
+                   over_alpha=None) -> ClientParams:
+    """The (possibly traced) numerics the algorithm callables see: baked
+    config values, each overridden by its batched sweep lane when set."""
+    return ClientParams(
+        mu=ccfg.mu if over_mu is None else over_mu,
+        alpha=ccfg.alpha if over_alpha is None else over_alpha)
+
+
+# ---------------------------------------------------------------------------
+# the registered algorithms
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+register(ClientAlgorithm(
+    name="sgd",
+    doc="plain local SGD (the paper's round; bitwise-pinned default)",
+))
+
+
+register(ClientAlgorithm(
+    name="fedprox",
+    doc="proximal local objective f_k(w) + mu/2 ||w - w_t||^2 "
+        "(stateless; mu = ClientConfig.mu)",
+    uses_mu=True,
+    correction=lambda cp, w, w0, dev, srv, g: _tmap(
+        lambda gl, wl, w0l: gl + cp.mu * (wl - w0l), g, w, w0),
+))
+
+
+def _variate_refreshed(cp, dev_old, dev_new, srv, delta):
+    # transmitted slot-2 statistic: the REFRESHED per-client state itself,
+    # not the textbook increment (new - old).  Both are exact over a clean
+    # channel (full participation: srv^+ = mean_k state_k^+ either way), but
+    # they differ under OTA noise: with increments the server's tracking
+    # error e = srv - mean_k state_k obeys e^+ = e + eta (the per-round
+    # estimation noise INTEGRATES as a random walk; ||srv|| grows ~ sqrt(t),
+    # the local corrections inflate every transmitted statistic with it, and
+    # normalization then drowns the true gradients — training stalls).
+    # Transmitting the state itself makes the noise enter once per round
+    # with no feedback: e^+ = eta.
+    return dev_new
+
+
+def _apply_tracking(cp, srv, y2, part_frac):
+    # tracking form of the server's state step:
+    # srv <- (1 - m/K) srv + (m/K) mean_{k in S} state_k^+, the participant
+    # mean read off the de-gained slot-2 aggregate.  Full participation
+    # gives srv = mean_k state_k^+ exactly (the textbook invariant of both
+    # SCAFFOLD's c and FedDyn's hbar); an empty round (m = 0) holds srv.
+    return _tmap(lambda sl, yl: (1.0 - part_frac) * sl + part_frac * yl,
+                 srv, y2)
+
+
+def _feddyn_correction(cp, w, w0, dev, srv, g):
+    # grad of f_k(w) - <h_k - hbar, w> + alpha/2 ||w - w_t||^2.  Textbook
+    # FedDyn applies its server correction state hbar = mean_k h_k on the
+    # server (w <- mean_k theta_k - hbar/alpha); the paper's eq.-11 step
+    # w <- w - eta y has no slot for that shift, so hbar re-enters the LOCAL
+    # objective as the linear tilt +<hbar, w> instead — the gradient form of
+    # the same correction.  On the air the -h_k + hbar pair cancels
+    # participant bias (mean over a full cohort of the corrected deltas is
+    # the raw-gradient mean), while h_k's memory of absent clients persists
+    # in hbar under partial participation.  Without the tilt (-h_k alone)
+    # the aggregate keeps mean_k h_k — client-gradient memory at stale
+    # iterates — inside every round, and feddyn trails plain sgd at every
+    # alpha.
+    return _tmap(
+        lambda gl, wl, w0l, hl, sl: gl + cp.alpha * (wl - w0l) - hl + sl,
+        g, w, w0, dev, srv)
+
+
+def _feddyn_update(cp, hlr, dev, srv, delta):
+    # h_k <- h_k - alpha (w_k^H - w_t) = h_k + alpha * H * local_lr * delta
+    # (delta is the round's model delta (w_t - w_k^H)/(H local_lr))
+    return _tmap(lambda hl, dl: hl + cp.alpha * hlr * dl, dev, delta)
+
+
+register(ClientAlgorithm(
+    name="feddyn",
+    doc="dynamic regularization (FedDyn): per-client gradient-correction "
+        "state h_k, local gradient g + alpha (w - w_t) - h_k + hbar; the "
+        "refreshed h_k ride a second OTA slot to teach the server hbar",
+    uses_alpha=True,
+    has_state=True,
+    has_server_state=True,
+    num_slots=2,
+    correction=_feddyn_correction,
+    update_state=_feddyn_update,
+    variate_stat=_variate_refreshed,
+    apply_variate=_apply_tracking,
+))
+
+
+def _scaffold_update(cp, hlr, dev, srv, delta):
+    # option-II variate refresh: c_k^+ = c_k - c + (w_t - w_k^H)/(H lr)
+    # (srv leaves broadcast against the stacked [K, ...] dev leaves)
+    return _tmap(lambda ck, cl, dl: ck - cl + dl, dev, srv, delta)
+
+
+register(ClientAlgorithm(
+    name="scaffold",
+    doc="control variates (SCAFFOLD): local gradient g - c_k + c; the "
+        "refreshed variates ride a second OTA slot and the server variate "
+        "c is learned from its de-gained aggregate",
+    has_state=True,
+    has_server_state=True,
+    num_slots=2,
+    correction=lambda cp, w, w0, dev, srv, g: _tmap(
+        lambda gl, ck, cl: gl - ck + cl, g, dev, srv),
+    update_state=_scaffold_update,
+    variate_stat=_variate_refreshed,
+    apply_variate=_apply_tracking,
+))

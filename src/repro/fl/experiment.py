@@ -129,7 +129,13 @@ class Experiment:
             channel["fad_state"] = np.asarray(st.fad_state, np.float64)
         if st.scale is not None:
             channel["scale"] = np.asarray(st.scale, np.float64)
-        return {"params": st.params, "opt": st.opt_state, "channel": channel}
+        out = {"params": st.params, "opt": st.opt_state, "channel": channel}
+        # client-algorithm state (repro.fl.clients): present iff the spec's
+        # algorithm is stateful — again a function of the spec alone
+        if st.client_state is not None:
+            out["client"] = jax.tree_util.tree_map(
+                lambda l: np.asarray(l, np.float32), st.client_state)
+        return out
 
     def save(self, path: str) -> str:
         """Checkpoint params + server-optimizer state + channel/round so a
@@ -150,12 +156,14 @@ class Experiment:
     def load(self, path: str) -> "Experiment":
         """Restore a checkpoint written by ``save`` (shape/dtype checked
         against this spec's params and optimizer structure) and position the
-        experiment at the checkpoint's round.  Non-strict on the CHANNEL
-        leaves only: checkpoints from before the wireless-environment
+        experiment at the checkpoint's round.  Non-strict on two scoped
+        prefixes only: checkpoints from before the wireless-environment
         subsystem lack ``h_hat``/``fad_state``/``scale`` and keep the
         ``setup()`` values (exact for the default environment they were
-        written under); a params/optimizer structure mismatch still fails
-        loudly."""
+        written under), and checkpoints from before the client-algorithm
+        registry lack the ``['client']`` subtree and keep ``setup()``'s zero
+        client state (exactly what those runs carried implicitly); a
+        params/optimizer structure mismatch still fails loudly."""
         self._ensure_setup()
         if self.state.opt_state is None:
             self.state.opt_state = runtime.server_optimizer(
@@ -165,7 +173,7 @@ class Experiment:
             # ONLY the post-subsystem leaves may be absent; a checkpoint
             # missing h/b/a/eta0 (or params/opt leaves) still fails loudly
             missing_ok=("['channel']['h_hat']", "['channel']['fad_state']",
-                        "['channel']['scale']"))
+                        "['channel']['scale']", "['client']"))
         st = self.state
         st.params = restored["params"]
         st.opt_state = restored["opt"]
@@ -179,5 +187,7 @@ class Experiment:
                                       np.float64)
         if "scale" in restored["channel"]:
             st.scale = np.asarray(restored["channel"]["scale"], np.float64)
+        if "client" in restored:
+            st.client_state = restored["client"]
         st.round = int(meta["round"])
         return self

@@ -22,6 +22,7 @@ from typing import Any, Mapping, Optional, Tuple
 
 from repro.core.channel import ChannelConfig
 from repro.fed.runtime import FLConfig
+from repro.fl.clients import ClientConfig
 
 DATASETS = ("synthetic_mnist", "ridge")
 SPLITS = ("iid", "dirichlet")
@@ -104,6 +105,10 @@ class ExperimentSpec:
     local_lr: Optional[float] = None
     participation: Optional[float] = None
     participation_mode: Optional[str] = None
+    # K-scale overrides (None -> inherit): the streaming block size and the
+    # fixed-mode active-set gather (see the FLConfig fields of the same name)
+    k_block: Optional[int] = None
+    active_gather: Optional[bool] = None
     # execution
     driver: str = "scan"
     chunk_size: int = 16
@@ -124,6 +129,8 @@ class ExperimentSpec:
             ("local_lr", self.local_lr),
             ("participation", self.participation),
             ("participation_mode", self.participation_mode),
+            ("k_block", self.k_block),
+            ("active_gather", self.active_gather),
         ) if v is not None}
         return dataclasses.replace(self.fl, **over) if over else self.fl
 
@@ -148,6 +155,10 @@ _SCOPE_ORDER: Tuple[Tuple[str, type], ...] = (
     ("channel", ChannelConfig),
     ("data", DataSpec),
     ("model", ModelSpec),
+    # LAST: ClientConfig.alpha would otherwise shadow DataSpec.alpha — bare
+    # "alpha" stays the dirichlet concentration; spell the feddyn strength
+    # "client.alpha" (bare "mu" and "algo" are unambiguous and resolve here)
+    ("client", ClientConfig),
 )
 _SCOPE_FIELDS = {scope: tuple(f.name for f in dataclasses.fields(cls))
                  for scope, cls in _SCOPE_ORDER}
@@ -157,7 +168,8 @@ _SCOPE_FIELDS = {scope: tuple(f.name for f in dataclasses.fields(cls))
 # spec-level override so it can never be shadowed).
 _UNSWEEPABLE = ("eval", "driver", "chunk_size")
 _OVERRIDE_FIELDS = ("server_opt", "local_steps", "local_lr",
-                    "participation", "participation_mode")
+                    "participation", "participation_mode", "k_block",
+                    "active_gather")
 
 
 def resolve_axis(name: str) -> Tuple[str, str]:
@@ -213,6 +225,10 @@ def apply_axis(spec: ExperimentSpec, name: str, value: Any) -> ExperimentSpec:
         channel = dataclasses.replace(spec.fl.channel, **{field: value})
         return dataclasses.replace(
             spec, fl=dataclasses.replace(spec.fl, channel=channel))
+    if scope == "client":
+        client = dataclasses.replace(spec.fl.client, **{field: value})
+        return dataclasses.replace(
+            spec, fl=dataclasses.replace(spec.fl, client=client))
     if scope == "data":
         return dataclasses.replace(
             spec, data=dataclasses.replace(spec.data, **{field: value}))

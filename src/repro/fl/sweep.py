@@ -38,6 +38,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.fed import runtime
+from repro.fl import clients
 from repro.fl.experiment import Experiment
 from repro.fl.spec import (ExperimentSpec, apply_axes, apply_axis,
                            resolve_axis)
@@ -53,6 +54,8 @@ def classify_field(name: str) -> str:
     if scope == "fl" and field in runtime.BATCHED_FL_FIELDS:
         return BATCHABLE
     if scope == "channel" and field in runtime.BATCHED_CHANNEL_FIELDS:
+        return BATCHABLE
+    if scope == "client" and field in clients.BATCHED_CLIENT_FIELDS:
         return BATCHABLE
     return STRUCTURAL
 

@@ -31,7 +31,8 @@ class _ClassSpec:
     batched_table: Optional[str]
     structural_table: str
     # how structural_config collapses this class: 'fl' = replace(cfg, ...),
-    # 'channel' = replace(cfg.channel, ...), None = no collapse machinery
+    # any other name = replace(cfg.<name>, ...) (e.g. 'channel', 'client'),
+    # None = no collapse machinery
     collapse: Optional[str]
 
 
@@ -39,8 +40,16 @@ _SPECS = (
     _ClassSpec("FLConfig", "BATCHED_FL_FIELDS", "STRUCTURAL_FL_FIELDS", "fl"),
     _ClassSpec("ChannelConfig", "BATCHED_CHANNEL_FIELDS",
                "STRUCTURAL_CHANNEL_FIELDS", "channel"),
+    _ClassSpec("ClientConfig", "BATCHED_CLIENT_FIELDS",
+               "STRUCTURAL_CLIENT_FIELDS", "client"),
     _ClassSpec("OTAConfig", None, "STRUCTURAL_OTA_FIELDS", None),
 )
+
+# nested config dataclasses structural_config collapses via
+# replace(cfg.<attr>, ...) — the _collapse_kwargs keying, and the FLConfig
+# kwargs exempt from the "collapses a structural field" check (the rebuilt
+# sub-configs are passed back through the outer replace)
+_NESTED_COLLAPSE = ("channel", "client")
 
 
 def _is_dataclass_def(node: ast.ClassDef) -> bool:
@@ -79,9 +88,10 @@ def _string_tuple_assign(tree: ast.Module, name: str
 
 def _collapse_kwargs(tree: ast.Module) -> Dict[str, Set[str]]:
     """Keyword names of the dataclasses.replace calls in structural_config,
-    keyed by 'fl' (first arg a bare Name) / 'channel' (first arg an
-    Attribute like cfg.channel)."""
-    out: Dict[str, Set[str]] = {"fl": set(), "channel": set()}
+    keyed by 'fl' (first arg a bare Name) or the nested attribute name
+    (first arg an Attribute like cfg.channel / cfg.client)."""
+    out: Dict[str, Set[str]] = {"fl": set()}
+    out.update({k: set() for k in _NESTED_COLLAPSE})
     for fn in ast.walk(tree):
         if not (isinstance(fn, ast.FunctionDef)
                 and fn.name == "structural_config"):
@@ -89,7 +99,14 @@ def _collapse_kwargs(tree: ast.Module) -> Dict[str, Set[str]]:
         for node in ast.walk(fn):
             if isinstance(node, ast.Call) \
                     and _dotted(node.func).endswith("replace") and node.args:
-                kind = "fl" if isinstance(node.args[0], ast.Name) else "channel"
+                first = node.args[0]
+                if isinstance(first, ast.Name):
+                    kind = "fl"
+                elif isinstance(first, ast.Attribute) \
+                        and first.attr in out:
+                    kind = first.attr
+                else:
+                    continue
                 out[kind] |= {kw.arg for kw in node.keywords if kw.arg}
     return out
 
@@ -101,7 +118,8 @@ def _tl005(project) -> List[Finding]:
     # OTA one, channel.py the ChannelConfig dataclass)
     classes: Dict[str, Tuple[str, ast.ClassDef]] = {}
     tables: Dict[str, Tuple[str, List[str], int]] = {}
-    collapse: Dict[str, Set[str]] = {"fl": set(), "channel": set()}
+    collapse: Dict[str, Set[str]] = {"fl": set()}
+    collapse.update({k: set() for k in _NESTED_COLLAPSE})
     collapse_mod = None
     for mod in project.modules:
         for node in ast.walk(mod.tree):
@@ -115,7 +133,7 @@ def _tl005(project) -> List[Finding]:
                     if hit is not None:
                         tables[tname] = (mod.relpath, hit[0], hit[1])
         got = _collapse_kwargs(mod.tree)
-        if got["fl"] or got["channel"]:
+        if any(got.values()):
             collapse = got
             collapse_mod = mod.relpath
 
@@ -164,7 +182,8 @@ def _tl005(project) -> List[Finding]:
                         f"program with distinct structure"))
             for kname in sorted(ckw):
                 if kname in field_names and kname not in batched \
-                        and not (spec.collapse == "fl" and kname == "channel"):
+                        and not (spec.collapse == "fl"
+                                 and kname in _NESTED_COLLAPSE):
                     findings.append(Finding(
                         "TL005", collapse_mod, 1,
                         f"structural_config collapses {spec.class_name}."

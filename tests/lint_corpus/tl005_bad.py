@@ -1,8 +1,9 @@
 """TL005 known-bad: config-classification drift, every failure mode.
 
-A miniature of the engine's FLConfig / structural_config layout with four
-seeded bugs: an unclassified field, a doubly-claimed field, a batched field
-structural_config forgot to collapse, and a stale table entry.
+A miniature of the engine's FLConfig / ClientConfig / structural_config
+layout with six seeded bugs: an unclassified field (on each class), a
+doubly-claimed field, a batched field structural_config forgot to collapse
+(on each class), and a stale table entry.
 """
 import dataclasses
 from typing import Optional
@@ -24,6 +25,18 @@ STRUCTURAL_FL_FIELDS = ("num_devices", "scheme", "p",
                         "local_steps")          # BAD: stale entry
 
 
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    algo: str = "sgd"
+    mu: float = 0.0
+    alpha: float = 0.01           # BAD: in neither client table
+
+
+BATCHED_CLIENT_FIELDS = ("mu",)
+STRUCTURAL_CLIENT_FIELDS = ("algo",)
+
+
 def structural_config(cfg: FLConfig) -> FLConfig:
-    # BAD: theta_th is batched but NOT collapsed here
+    # BAD: theta_th is batched but NOT collapsed here, and neither is the
+    # batched ClientConfig.mu (no replace(cfg.client, ...) at all)
     return dataclasses.replace(cfg, seed=0, eta=0.01)

@@ -1,5 +1,17 @@
-"""TL005 known-good: a complete, consistent classification partition."""
+"""TL005 known-good: a complete, consistent classification partition,
+including a nested ClientConfig collapsed via replace(cfg.client, ...) and
+rebuilt through the outer replace (the exempted structural kwarg)."""
 import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    algo: str = "sgd"
+    mu: float = 0.0
+
+
+BATCHED_CLIENT_FIELDS = ("mu",)
+STRUCTURAL_CLIENT_FIELDS = ("algo",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -9,11 +21,14 @@ class FLConfig:
     seed: int = 0
     eta: float = 0.01
     theta_th: float = 0.6
+    client: ClientConfig = None
 
 
 BATCHED_FL_FIELDS = ("seed", "eta", "theta_th")
-STRUCTURAL_FL_FIELDS = ("num_devices", "scheme")
+STRUCTURAL_FL_FIELDS = ("num_devices", "scheme", "client")
 
 
 def structural_config(cfg: FLConfig) -> FLConfig:
-    return dataclasses.replace(cfg, seed=0, eta=0.01, theta_th=0.6)
+    client = dataclasses.replace(cfg.client, mu=0.0)
+    return dataclasses.replace(cfg, seed=0, eta=0.01, theta_th=0.6,
+                               client=client)
