@@ -1,0 +1,172 @@
+"""Benchmark regression guard: diff fresh ``results/bench_*.json`` against
+committed baselines and exit nonzero on a regression, so a perf cliff fails
+CI instead of silently rewriting the numbers.
+
+    # CI smoke: rerun the quick benchmarks, then diff against the committed
+    # quick-mode baselines (results/ itself is gitignored — the blessed
+    # numbers live in benchmarks/baselines/)
+    PYTHONPATH=src python -m benchmarks.run --quick --only sweep,kscale
+    PYTHONPATH=src python -m benchmarks.compare --fresh results
+
+Three rule families, matched by leaf key name anywhere in the JSON tree:
+
+* throughput (``rounds_per_sec`` scalars, and every lane of the
+  ``rounds_per_sec`` / ``agg_rounds_per_sec`` dicts): the fresh number must
+  be at least ``(1 - tolerance)`` of the baseline.  The default tolerance is
+  generous (50%) because shared CI boxes are noisy — the guard exists to
+  catch cliffs (a 2x regression from an accidental retrace or
+  materialization), not single-digit drift.
+* memory (``peak_rss_mb``): the fresh peak must stay under the sibling
+  ``rss_pin_mb`` when the file carries one (the kscale flat-memory pin),
+  and under ``(1 + rss_tolerance)`` of the baseline either way.
+* retraces (any leaf under a ``retraces`` dict): must be 0 in the fresh run,
+  unconditionally — retraces are deterministic, so there is no noise to
+  tolerate.
+
+Entries whose scale knobs disagree between the two files (``rounds``,
+``grid``, ``devices`` — e.g. a quick-mode fresh run against a full-mode
+baseline) are SKIPPED with a visible note rather than mis-compared; a
+baseline file with no fresh counterpart is likewise reported.  Exit status:
+0 = no regressions (skips allowed), 1 = at least one regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Any, Dict, Iterator, List, Tuple
+
+# scale knobs: when any of these differ at the SAME path in baseline/fresh,
+# the surrounding entry is incomparable (different workload, not a
+# regression)
+_SCALE_KEYS = ("rounds", "grid", "devices", "k_block", "dim", "batch")
+
+
+def _walk(tree: Any, path: Tuple[str, ...] = ()) -> Iterator[
+        Tuple[Tuple[str, ...], Any]]:
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, path + (str(k),))
+    elif isinstance(tree, list):
+        for i, v in enumerate(tree):
+            yield from _walk(v, path + (str(i),))
+    else:
+        yield path, tree
+
+
+def _fmt(path: Tuple[str, ...]) -> str:
+    return "/".join(path)
+
+
+def compare_file(name: str, base: Dict, fresh: Dict, *, tolerance: float,
+                 rss_tolerance: float) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) for one benchmark JSON pair."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    bleaves = dict(_walk(base))
+    fleaves = dict(_walk(fresh))
+
+    # scale mismatch -> mark every entry sharing that prefix incomparable
+    skipped_prefixes: List[Tuple[str, ...]] = []
+    for path, bval in bleaves.items():
+        if path and path[-1] in _SCALE_KEYS and path in fleaves:
+            if fleaves[path] != bval:
+                skipped_prefixes.append(path[:-1])
+                notes.append(
+                    f"{name}: SKIP {_fmt(path[:-1]) or '<root>'} — "
+                    f"{path[-1]} changed {bval} -> {fleaves[path]} "
+                    "(different workload, not compared)")
+
+    def skipped(path: Tuple[str, ...]) -> bool:
+        return any(path[:len(p)] == p for p in skipped_prefixes)
+
+    for path, bval in bleaves.items():
+        if skipped(path) or not isinstance(bval, (int, float)) \
+                or isinstance(bval, bool):
+            continue
+        leaf = path[-1]
+        in_dict = len(path) >= 2
+        fval = fleaves.get(path)
+        if fval is None:
+            notes.append(f"{name}: SKIP {_fmt(path)} — missing in fresh run")
+            continue
+        if leaf == "rounds_per_sec" or (
+                in_dict and path[-2] in ("rounds_per_sec",
+                                         "agg_rounds_per_sec")):
+            floor = bval * (1.0 - tolerance)
+            if fval < floor:
+                regressions.append(
+                    f"{name}: {_fmt(path)} regressed {bval:.3f} -> "
+                    f"{fval:.3f} rounds/sec (floor {floor:.3f}, "
+                    f"tolerance {tolerance:.0%})")
+        elif leaf == "peak_rss_mb":
+            pin = fresh.get("rss_pin_mb") or base.get("rss_pin_mb")
+            if pin is not None and fval > pin:
+                regressions.append(
+                    f"{name}: {_fmt(path)} = {fval:.0f} MB exceeds the "
+                    f"{pin:.0f} MB pin")
+            cap = bval * (1.0 + rss_tolerance)
+            if fval > cap:
+                regressions.append(
+                    f"{name}: {_fmt(path)} grew {bval:.0f} -> {fval:.0f} MB "
+                    f"(cap {cap:.0f}, tolerance {rss_tolerance:.0%})")
+        elif in_dict and path[-2] == "retraces":
+            if fval != 0:
+                regressions.append(
+                    f"{name}: {_fmt(path)} = {fval} — fresh run retraced "
+                    "(must be 0)")
+    return regressions, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="directory of committed bench_*.json baselines")
+    ap.add_argument("--fresh", default="results",
+                    help="directory of freshly produced bench_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional rounds/sec drop (default 0.5)")
+    ap.add_argument("--rss-tolerance", type=float, default=0.3,
+                    help="allowed fractional peak-RSS growth (default 0.3)")
+    args = ap.parse_args()
+
+    bdir, fdir = pathlib.Path(args.baseline), pathlib.Path(args.fresh)
+    base_files = sorted(bdir.glob("bench_*.json"))
+    if not base_files:
+        print(f"compare: no bench_*.json baselines under {bdir}",
+              file=sys.stderr)
+        sys.exit(1)
+
+    all_regressions: List[str] = []
+    compared = 0
+    for bpath in base_files:
+        fpath = fdir / bpath.name
+        if not fpath.exists():
+            print(f"{bpath.name}: SKIP — no fresh counterpart under {fdir}")
+            continue
+        with open(bpath) as f:
+            base = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        regs, notes = compare_file(bpath.name, base, fresh,
+                                   tolerance=args.tolerance,
+                                   rss_tolerance=args.rss_tolerance)
+        compared += 1
+        for line in notes:
+            print(line)
+        for line in regs:
+            print(f"REGRESSION  {line}")
+        if not regs:
+            print(f"{bpath.name}: ok")
+        all_regressions.extend(regs)
+
+    if all_regressions:
+        print(f"\ncompare: {len(all_regressions)} regression(s) across "
+              f"{compared} file(s)", file=sys.stderr)
+        sys.exit(1)
+    print(f"\ncompare: no regressions across {compared} file(s)")
+
+
+if __name__ == "__main__":
+    main()

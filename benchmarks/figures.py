@@ -519,8 +519,19 @@ def kscale_flat_memory(quick: bool = False) -> List[Tuple[str, float, str]]:
     extrapolation at the same K (the measured ratio is ~0.04) AND under an
     absolute pin that catches an accidental [K, N] / [K, B, d]
     materialization even if the extrapolation is noisy.  Quick mode shrinks
-    every K by 5x for the CI smoke — same shape, same guards."""
+    every K by 5x for the CI smoke — same shape, same guards.
+
+    The PR-9 sharded entry runs the SAME streamed round under
+    ``device_mesh=4`` twice — once on 4 forced host devices (the physical
+    ``shard_map`` path) and once without them (the emulated fallback) — and
+    asserts the two trajectories are bitwise-identical by params digest:
+    sharding is just another blocking, so where it runs is invisible in the
+    math.  The >= 2x rounds/sec speedup over the single-device stream is
+    asserted only when the host has >= 4 cores (forced host devices on one
+    core are concurrency, not parallelism); the measured ratio is always
+    recorded so a skipped assertion is visible, never silent."""
     import json as _json
+    import os
     import subprocess
     import sys
 
@@ -533,16 +544,22 @@ def kscale_flat_memory(quick: bool = False) -> List[Tuple[str, float, str]]:
         rounds, dense_ks, stream_k, stream_kb = 4, (1000, 2000), 100_000, 1000
     RSS_PIN_MB = 2048.0
 
-    def case(devices: int, k_block: int) -> dict:
+    def case(devices: int, k_block: int, device_mesh: int = 0,
+             force_host_devices: int = 0) -> dict:
+        env = dict(os.environ)
+        if force_host_devices:
+            flag = (f"--xla_force_host_platform_device_count="
+                    f"{force_host_devices}")
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
         out = subprocess.run(
             [sys.executable, "-m", "benchmarks.kscale_case",
              "--devices", str(devices), "--k-block", str(k_block),
-             "--rounds", str(rounds)],
-            capture_output=True, text=True)
+             "--device-mesh", str(device_mesh), "--rounds", str(rounds)],
+            capture_output=True, text=True, env=env)
         if out.returncode != 0:
             raise AssertionError(
-                f"kscale case K={devices} k_block={k_block} failed:\n"
-                f"{out.stderr[-2000:]}")
+                f"kscale case K={devices} k_block={k_block} "
+                f"device_mesh={device_mesh} failed:\n{out.stderr[-2000:]}")
         return _json.loads(out.stdout.strip().splitlines()[-1])
 
     rows, dense = [], []
@@ -575,10 +592,53 @@ def kscale_flat_memory(quick: bool = False) -> List[Tuple[str, float, str]]:
     rows.append(("kscale/memory_ratio", 0.0,
                  f"stream_over_dense_extrapolated={ratio:.3f};"
                  f"dense_extrapolated_mb={extrapolated:.0f}"))
+
+    # ---- PR-9 sharded streaming: device_mesh=4, physical vs emulated
+    mesh_d = 4
+    sharded = case(stream_k, stream_kb, device_mesh=mesh_d,
+                   force_host_devices=mesh_d)
+    if sharded["local_devices"] < mesh_d:
+        raise AssertionError(
+            f"forced-host-device case saw {sharded['local_devices']} local "
+            f"devices (wanted {mesh_d}) — XLA_FLAGS did not reach the "
+            "subprocess")
+    sharded_emu = case(stream_k, stream_kb, device_mesh=mesh_d)
+    if sharded["params_sha256"] != sharded_emu["params_sha256"]:
+        raise AssertionError(
+            "sharded streaming trajectory is NOT bitwise-identical across "
+            f"physical/emulated execution: {sharded['params_sha256']} vs "
+            f"{sharded_emu['params_sha256']} — the device_mesh math spec "
+            "leaked an execution-dependent reduction")
+    if sharded["peak_rss_mb"] > RSS_PIN_MB:
+        raise AssertionError(
+            f"sharded streaming peak RSS {sharded['peak_rss_mb']:.0f} MB "
+            f"exceeds the {RSS_PIN_MB:.0f} MB pin — the mesh re-materialized "
+            "the K axis")
+    speedup = sharded["rounds_per_sec"] / stream["rounds_per_sec"]
+    cores = os.cpu_count() or 1
+    if cores >= mesh_d and speedup < 2.0:
+        raise AssertionError(
+            f"sharded streaming speedup {speedup:.2f}x < 2x over the "
+            f"single-device stream at K={stream_k} on {cores} cores")
+    rows.append((f"kscale/sharded/K={stream_k}",
+                 1e6 / sharded["rounds_per_sec"],
+                 f"peak_rss_mb={sharded['peak_rss_mb']:.0f};"
+                 f"rounds_per_sec={sharded['rounds_per_sec']:.2f};"
+                 f"device_mesh={mesh_d};speedup={speedup:.2f}x;"
+                 f"bitwise_phys_vs_emulated=ok;"
+                 + (f"speedup_assert=on"
+                    if cores >= mesh_d else
+                    f"speedup_assert=SKIPPED(cores={cores})")))
+
     _dump("kscale", {
         "rounds": rounds,
         "dense": dense,
         "streaming": stream,
+        "sharded": sharded,
+        "sharded_emulated": sharded_emu,
+        "sharded_speedup_over_stream": speedup,
+        "sharded_speedup_asserted": cores >= mesh_d,
+        "sharded_bitwise_phys_vs_emulated": True,
         "dense_slope_mb_per_device": slope,
         "dense_extrapolated_mb_at_stream_k": extrapolated,
         "stream_over_dense_extrapolated": ratio,

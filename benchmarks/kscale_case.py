@@ -27,6 +27,7 @@ paper's Case-I shape with the server optimization held out of the loop.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import resource
 import sys
@@ -61,6 +62,12 @@ def main() -> None:
     ap.add_argument("--devices", type=int, required=True)
     ap.add_argument("--k-block", type=int, default=0,
                     help="streaming K-block size; 0 = the dense path")
+    ap.add_argument("--device-mesh", type=int, default=0,
+                    help="sharded streaming mesh width (requires --k-block);"
+                         " 0 = plain stream.  Launch with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=D for the"
+                         " physical path; without the forced devices the"
+                         " engine runs its (bitwise-identical) emulated path")
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--dim", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=8)
@@ -120,7 +127,8 @@ def main() -> None:
     cfg = runtime.FLConfig(
         num_devices=K, case="I", p=0.75, channel=ccfg, scheme="normalized",
         backend="kernels", smoothness_L=5.0, expected_loss_drop=2.0,
-        grad_bound=10.0, seed=0, k_block=kb)
+        grad_bound=10.0, seed=0, k_block=kb,
+        device_mesh=args.device_mesh if args.device_mesh > 1 else None)
     params0 = {"w": jnp.zeros((d,), jnp.float32)}
     state = runtime.FLState(params0, h, b, a, eta0=1.0, model_dim=d)
 
@@ -139,12 +147,21 @@ def main() -> None:
     _, hist = go(args.rounds)
     dt = time.perf_counter() - t0
 
+    # bitwise trajectory fingerprint: the sharded benchmark compares the
+    # physical and emulated runs of the same spec by digest, not tolerance
+    params_sha = hashlib.sha256(
+        np.ascontiguousarray(np.asarray(state.params["w"],
+                                        np.float32)).tobytes()).hexdigest()
+
     json.dump({
-        "devices": K, "k_block": args.k_block, "dim": d, "batch": B,
+        "devices": K, "k_block": args.k_block,
+        "device_mesh": args.device_mesh, "dim": d, "batch": B,
         "rounds": args.rounds,
         "rounds_per_sec": args.rounds / dt,
         "peak_rss_mb": peak_rss_mb(),
         "grad_norm_mean_final": float(hist["grad_norm_mean"][-1]),
+        "params_sha256": params_sha,
+        "local_devices": jax.local_device_count(),
     }, sys.stdout)
     print()
 

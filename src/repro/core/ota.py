@@ -73,6 +73,16 @@ class OTAConfig:
     # Pallas grid).  Streaming == dense up to float associativity of the
     # blocked sums (the noise draw is bitwise-shared).
     k_block: Optional[int] = None
+    # Sharded streaming (requires k_block): partition the K-blocks over this
+    # many mesh shards — each shard left-folds its own contiguous run of
+    # blocks, and ONE deterministic cross-shard fold closes eq. (10)
+    # (``distribution.ota_collectives.fold_shards``).  The value DEFINES the
+    # hierarchical accumulation order, so the math is a function of the
+    # config alone: execution on a physical mesh (shard_map, when
+    # ``distribution.sharding.device_mesh`` finds the devices) and the
+    # emulated single-device fallback are bitwise-identical.  ``None`` keeps
+    # the PR-6 flat left fold bitwise-pinned.
+    device_mesh: Optional[int] = None
 
     def __post_init__(self):
         schemes.validate_config(self.scheme, self.grad_bound)
@@ -84,7 +94,17 @@ class OTAConfig:
             if self.backend == "mesh":
                 raise ValueError("the mesh backend's device axis IS the mesh "
                                  "— k_block streaming applies to the stacked "
-                                 "(vmap/kernels) backends only")
+                                 "(vmap/kernels) backends; to parallelize a "
+                                 "streamed round over local devices use "
+                                 "device_mesh (the sharded streaming engine)")
+        if self.device_mesh is not None:
+            if self.device_mesh < 1:
+                raise ValueError(
+                    f"device_mesh must be >= 1, got {self.device_mesh}")
+            if self.k_block is None:
+                raise ValueError(
+                    "device_mesh shards the K-block stream — set k_block "
+                    "(the dense path has no block axis to partition)")
         # the sweep engine constructs OTAConfig with a traced noise_var
         # inside the compiled round program; validate concrete values only
         if isinstance(self.noise_var, (int, float)) and self.noise_var < 0.0:
@@ -96,7 +116,91 @@ class OTAConfig:
 # structural axis.  tracelint TL005 checks this table stays exhaustive so a
 # new field cannot be added without deciding its sweep classification.
 STRUCTURAL_OTA_FIELDS = ("scheme", "a", "noise_var", "grad_bound",
-                         "noiseless", "backend", "k_block")
+                         "noiseless", "backend", "k_block", "device_mesh")
+
+
+# ---------------------------------------------------------------------------
+# fusion fences / pinned reductions
+#
+# fp32 results depend on how XLA clusters producers into its reduction
+# loops.  Most of the repo never cares — one program, one lowering — but the
+# sharded streaming engine promises BITWISE-identical trajectories across
+# two different programs (shard_map on a physical mesh vs the emulated
+# outer scan), so every value they share must compile in an
+# execution-independent cluster.  ``fusion_fence`` materializes a tree
+# behind an ``optimization_barrier`` (vmap-safe — the sweep engine batches
+# these rounds); ``pinned_sum`` sandwiches a K-way reduction between
+# barriers so the reduce op sits in its own cluster and XLA's strategy for
+# it is a function of shape/dtype alone.
+
+
+@jax.custom_batching.custom_vmap
+def fence_leaf(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@fence_leaf.def_vmap
+def _fence_leaf_vmap(axis_size, in_batched, x):
+    # the fence is an identity: under vmap it is the SAME barrier on the
+    # batched value (optimization_barrier itself has no batching rule, so
+    # the vmapped sweep engine needs this indirection)
+    return jax.lax.optimization_barrier(x), in_batched[0]
+
+
+def fusion_fence(tree: PyTree) -> PyTree:
+    """Per-leaf ``optimization_barrier``: forces XLA to materialize the tree
+    before any consumer, so downstream reductions compile independently of
+    how the values were produced.  vmap-safe (see ``fence_leaf``)."""
+    return jax.tree_util.tree_map(fence_leaf, tree)
+
+
+def _pairwise_fold(x: jax.Array) -> jax.Array:
+    """Fixed-association pairwise (binary-tree) sum of a 1-D array, built
+    from elementwise adds only — no ``reduce`` op, so XLA has no
+    reduction-tree choice to make."""
+    tail = jnp.zeros((), jnp.float32)
+    while x.shape[0] > 1:
+        n = x.shape[0]
+        if n % 2:
+            tail = tail + x[n - 1]
+            x = x[:n - 1]
+        x = x[0::2] + x[1::2]
+    return x[0] + tail
+
+
+def pinned_sum(v: jax.Array) -> jax.Array:
+    """Full-array sum with an execution-independent lowering: the operand is
+    chunked and left-folded by a ``lax.scan`` whose body runs the
+    fixed-association ``_pairwise_fold``.  The scan body compiles as its own
+    HLO computation, so the fold's arithmetic cannot be re-clustered or
+    FMA-contracted with whatever surrounds the call — which is exactly what
+    happens to a plain (or even barrier-sandwiched) ``jnp.sum``: its lowering
+    varies with the enclosing program and drifts by an ulp.  The sharded
+    streaming round routes every out-of-scan real-valued reduction
+    (effective-gain folds, diagnostics) through this so the shard_map and
+    emulated programs stay bitwise-identical.  May differ from ``jnp.sum``
+    by documented ulps — the sharded engine's trajectory is its own math
+    spec (see FLConfig.device_mesh)."""
+    v = v.astype(jnp.float32).ravel()
+    n = v.shape[0]
+    if n == 0:
+        return jnp.zeros((), jnp.float32)
+    if n == 1:
+        return v[0]
+    # chunk so the scan's trip count is >= 2: XLA inlines trip-count-1 while
+    # loops, which would put the fold back into the surrounding program
+    chunk = max(1, 1 << (max((n - 1).bit_length() - 2, 0)))
+    rows = -(-n // chunk)
+    # zero padding is exact: x + 0.0 == x for every fp32 x, so the padded
+    # fold realizes a fixed association of the original elements
+    v = jnp.pad(v, (0, rows * chunk - n))
+
+    def body(acc, row):
+        return acc + _pairwise_fold(row), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            v.reshape(rows, chunk))
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -367,7 +471,16 @@ def _aggregate_streaming(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array,
     """``lax.scan`` K-block fallback behind ``aggregate`` (vmap backend, and
     the kernels backend's per-block ops): the stacked input is viewed as
     [num_blocks, k_block, ...] and folded block-by-block through the carry
-    API — the [K, N] transmit matrix is never formed."""
+    API — the [K, N] transmit matrix is never formed.
+
+    With ``cfg.device_mesh = D`` the blocks are further partitioned into D
+    contiguous shards, [D, nb/D, k_block, ...]: each shard left-folds its
+    own blocks into a private carry and the D partial carries reduce through
+    the deterministic ``fold_shards`` combine (every carry field is a sum).
+    When a physical mesh is available the per-shard folds run SPMD under
+    ``shard_map`` with ONE cross-shard collective; otherwise an outer scan
+    emulates the shards — bitwise the same result, because the blocking and
+    the combine order are fixed by the config, not the execution."""
     leaves = jax.tree_util.tree_leaves(stacked_grads)
     k = leaves[0].shape[0]
     kb = min(cfg.k_block, k)
@@ -384,8 +497,45 @@ def _aggregate_streaming(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array,
         blk, ha, hs = xs
         return streaming_block(cfg, carry, blk, ha, hs), None
 
-    carry, _ = jax.lax.scan(body, streaming_carry(cfg, template),
-                            (blocks, hb_air, hb_srv))
+    def shard_fold(xs_shard):
+        """One shard's left fold over its [nbl, kb, ...] run of blocks."""
+        return jax.lax.scan(body, streaming_carry(cfg, template), xs_shard)[0]
+
+    if cfg.device_mesh is not None and cfg.device_mesh > 1:
+        from repro.distribution import ota_collectives as coll
+        from repro.distribution import sharding as shardlib
+        d = cfg.device_mesh
+        if nb % d != 0:
+            raise ValueError(
+                f"device_mesh {d} must divide the block count {nb} "
+                f"(= K {k} / k_block {kb}) — pick a k_block so that "
+                "K / k_block is a multiple of the mesh size")
+        resh = lambda l: l.reshape((d, nb // d) + l.shape[1:])
+        xs = (jax.tree_util.tree_map(resh, blocks), resh(hb_air),
+              resh(hb_srv))
+        mesh = shardlib.device_mesh(d)
+        if mesh is None:
+            # emulated shards: same blocking, same combine, no collectives
+            stacked = jax.lax.scan(
+                lambda _, xs_s: (None, shard_fold(xs_s)), None, xs)[1]
+        else:
+            from jax.sharding import PartitionSpec as P
+            axis = shardlib.FL_DEVICE_AXIS
+
+            def per_shard(xs_s):
+                local = jax.tree_util.tree_map(lambda l: l[0], xs_s)
+                return coll.gather_shards(shard_fold(local), axis)
+
+            spec_in = jax.tree_util.tree_map(lambda _: P(axis), xs)
+            stacked = jax.shard_map(
+                per_shard, mesh=mesh, in_specs=(spec_in,), out_specs=P(),
+                axis_names={axis}, check_vma=False)(xs)
+        # fenced so streaming_finish compiles independently of which
+        # execution path produced the partials (bitwise phys == emulated)
+        carry = fusion_fence(coll.fold_shards(stacked))
+    else:
+        carry, _ = jax.lax.scan(body, streaming_carry(cfg, template),
+                                (blocks, hb_air, hb_srv))
     return streaming_finish(cfg, carry, template, cfg.a, key,
                             num_devices=float(k))
 
@@ -405,11 +555,19 @@ def aggregate(cfg: OTAConfig, stacked_grads: PyTree, h: jax.Array, b: jax.Array,
 
     ``cfg.k_block`` streams the device axis: the kernels backend grids the
     K-way reduction itself ((N-block, K-block) Pallas kernels / lax.scan
-    oracles), the vmap backend scans the carry API above.
+    oracles), the vmap backend scans the carry API above.  ``cfg.device_mesh``
+    (either stacked backend) routes through the sharded streaming path —
+    per-shard block folds (per-shard kernel launches on the kernels backend)
+    closed by one deterministic cross-shard combine.
     """
     if h_hat is None:
         h_hat = h
     if cfg.backend == "kernels":
+        if cfg.device_mesh is not None and cfg.device_mesh > 1:
+            # the sharded form drives the per-block kernel launches through
+            # the carry API (streaming_block's kernels branch) so each shard
+            # grids only its own K-blocks
+            return _aggregate_streaming(cfg, stacked_grads, h, b, key, h_hat)
         from repro.fed.kernel_path import aggregate_kernels
         return aggregate_kernels(cfg, stacked_grads, h, b, key, h_hat=h_hat,
                                  k_block=cfg.k_block)
@@ -438,7 +596,8 @@ def apply_update(params: PyTree, y: PyTree, eta) -> PyTree:
 
 
 def participation_fold(h: jax.Array, b: jax.Array, a,
-                       mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+                       mask: jax.Array,
+                       sum_fn=jnp.sum) -> Tuple[jax.Array, jax.Array]:
     """Fold a per-round 0/1 participation mask into the channel parameters.
 
     A non-participating device transmits nothing, which on every backend is
@@ -451,12 +610,16 @@ def participation_fold(h: jax.Array, b: jax.Array, a,
     does).  If nobody participates the gain is zeroed: the server applies no
     update rather than amplifying pure noise.
 
+    ``sum_fn`` is the K-way reduction used for the gain folds (default
+    ``jnp.sum``); the sharded streaming round passes ``pinned_sum`` so
+    ``a_eff`` is bitwise-independent of the execution path.
+
     Returns ``(b_eff, a_eff)``.
     """
     mask = mask.astype(jnp.float32)
     b_eff = b * mask
-    hb_full = jnp.sum(h * b)
-    hb_eff = jnp.sum(h * b_eff)
+    hb_full = sum_fn(h * b)
+    hb_eff = sum_fn(h * b_eff)
     a_eff = jnp.where(hb_eff > _EPS * jnp.maximum(hb_full, 1.0),
                       a * hb_full / jnp.maximum(hb_eff, _EPS),
                       0.0).astype(jnp.float32)

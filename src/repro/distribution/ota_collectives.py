@@ -27,6 +27,7 @@ exact.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -37,6 +38,45 @@ from repro.core import schemes
 
 PyTree = Any
 _EPS = schemes.EPS
+
+
+# ---------------------------------------------------------------------------
+# sharded-streaming combine (FLConfig.device_mesh / OTAConfig.device_mesh)
+#
+# The sharded streaming engine closes eq. (10) across mesh shards by folding
+# D per-shard accumulator partials into one total.  fp32 addition is not
+# associative, so the fold ORDER is part of the math spec: both execution
+# paths — shard_map on a physical mesh and the emulated outer lax.scan —
+# must reduce through the SAME deterministic left fold below, which is what
+# makes them bitwise-identical (tests/test_sharded_streaming.py).  A plain
+# ``psum``/``jnp.sum`` would let XLA pick its own reduction tree and the two
+# paths drift by ulps that compound over rounds.
+
+
+def fold_shards(stacked: PyTree, op=None) -> PyTree:
+    """Deterministic left fold of a stacked pytree over its leading (shard)
+    axis: ``((s_0 op s_1) op s_2) op ...`` per leaf.  ``op`` defaults to
+    ``jax.lax.add``; pass ``jax.lax.min``/``max`` for order-free diagnostics
+    (kept on the same code path so the combine stays single-sourced).  The
+    leading axis must be a static (trace-time) size."""
+    if op is None:
+        op = jax.lax.add
+
+    def one(leaf):
+        return functools.reduce(op, [leaf[d] for d in range(leaf.shape[0])])
+
+    return jax.tree_util.tree_map(one, stacked)
+
+
+def gather_shards(tree: PyTree, axis_name: str) -> PyTree:
+    """``all_gather`` every leaf of a shard-local pytree over ``axis_name``
+    (new leading axis = shard index, mesh order).  Pairs with
+    ``fold_shards``: gather-then-fold inside ``shard_map`` is the sharded
+    engine's ONE cross-shard collective — it reduces the same bytes a psum
+    would, but with the fold order pinned by ``fold_shards`` instead of
+    XLA's reduction tree."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.lax.all_gather(l, axis_name, axis=0), tree)
 
 
 def client_index(axis_names: Sequence[str]) -> jax.Array:

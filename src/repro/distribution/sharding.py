@@ -13,9 +13,20 @@ rassingly parallel over its leading E axis, so when several local devices
 are available the stacked per-experiment state is placed with E sharded over
 a 1-D mesh and the jitted vmapped program runs SPMD — each device carries
 E / n_devices whole experiments, no cross-device collectives.
+
+``device_mesh`` / ``shard_device_axis`` serve the OTHER mesh of the repo —
+the FL-device axis of the sharded streaming engine
+(``FLConfig.device_mesh``): the K-blocked round partitions its blocks over
+``device_mesh`` shards, each mesh device left-folds its own blocks, and one
+deterministic cross-shard combine closes eq. (10).  The two meshes are
+orthogonal by construction (a batched sweep owns the experiment axis, a
+streaming round owns the FL-device axis) and are never active in the same
+program — ``run_batched`` rejects ``device_mesh`` configs.
 """
 from __future__ import annotations
 
+import os
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -23,18 +34,83 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 EXPERIMENT_AXIS = "exp"
+FL_DEVICE_AXIS = "fldev"
+
+# set REPRO_FL_MESH=emulate to force the sharded streaming engine onto its
+# emulated (no-collective) execution path even when enough local devices
+# exist — the parity tests' lever.  Read at TRACE time: flip it only before
+# the first run of a config, or call runtime.clear_compile_caches() after.
+_EMULATE_ENV = "REPRO_FL_MESH"
 
 
 def experiment_mesh(num_experiments: int, *, axis_name: str = EXPERIMENT_AXIS,
-                    devices=None):
+                    devices=None, require: bool = False):
     """A 1-D mesh over the local devices for sharding a batched run's
     experiment axis, or ``None`` when sharding would not help: a single
     device, or a grid the device count does not divide (uneven shards would
-    force padding; the caller then just runs replicated on one device)."""
+    force padding).  ``None`` means the caller falls back to running the
+    whole batch replicated on one device — the run is still correct, just
+    not device-parallel.
+
+    ``require=True`` turns the silent fallback into an actionable
+    ``ValueError`` for callers that *expect* sharding to engage (tests, the
+    benchmark harness): the message says which precondition failed and how
+    to fix it."""
+    if num_experiments < 1:
+        raise ValueError(
+            f"num_experiments must be >= 1, got {num_experiments}")
     devices = list(jax.local_devices() if devices is None else devices)
-    if len(devices) <= 1 or num_experiments % len(devices) != 0:
+    if len(devices) <= 1:
+        if require:
+            raise ValueError(
+                f"experiment-axis sharding needs > 1 local device, have "
+                f"{len(devices)} — force host devices with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N or drop "
+                "require=True to run replicated on one device")
+        return None
+    if num_experiments % len(devices) != 0:
+        if require:
+            raise ValueError(
+                f"experiment count {num_experiments} does not divide over "
+                f"{len(devices)} local devices (uneven shards would force "
+                "padding) — pad the grid to a multiple of the device count, "
+                "restrict jax to a dividing subset, or drop require=True to "
+                "run replicated on one device")
         return None
     return jax.make_mesh((len(devices),), (axis_name,), devices=devices)
+
+
+def device_mesh(num_shards: int, *, axis_name: str = FL_DEVICE_AXIS,
+                devices=None):
+    """A 1-D mesh of exactly ``num_shards`` local devices for the sharded
+    streaming engine's FL-device axis, or ``None`` when the host cannot
+    provide them (or ``REPRO_FL_MESH=emulate`` forces the emulated path) —
+    the caller then runs the SAME shard blocking as an outer ``lax.scan``,
+    bitwise-identical by the deterministic-combine contract
+    (``fold_shards``)."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if os.environ.get(_EMULATE_ENV, "") == "emulate":
+        return None
+    devices = list(jax.local_devices() if devices is None else devices)
+    if num_shards == 1 or len(devices) < num_shards:
+        return None
+    return jax.make_mesh((num_shards,), (axis_name,),
+                         devices=devices[:num_shards])
+
+
+def shard_device_axis(tree: Any, mesh, *,
+                      axis_name: str = FL_DEVICE_AXIS) -> Any:
+    """``device_put`` every array leaf of ``tree`` with its leading (shard)
+    axis split over ``mesh``; rank-0 leaves replicate.  The leaves must all
+    carry the shard count as their leading axis — the [D, nb/D, k_block,
+    ...] blocked inputs of the sharded streaming round."""
+    def one(leaf):
+        nd = jnp.ndim(leaf)
+        spec = P() if nd == 0 else P(axis_name, *([None] * (nd - 1)))
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(one, tree)
 
 
 def shard_experiment_axis(tree: Any, mesh, *,
@@ -128,9 +204,18 @@ def param_specs(params, *, model_axis: str = "model",
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+# (axes, dim size) pairs sanitize_spec has already warned about: each
+# distinct drop is reported ONCE per process, not once per leaf per call —
+# a sharded sweep calls sanitize_spec thousands of times on the same rules
+_SANITIZE_WARNED: set = set()
+
+
 def sanitize_spec(mesh, spec: P, shape) -> P:
     """Drop mesh axes from dims they don't divide (e.g. vocab 256206 on a
-    16-way model axis) — replicating such a dim is always legal."""
+    16-way model axis) — replicating such a dim is always legal.  Each
+    distinct drop warns once per process (``UserWarning``): a silently
+    replicated dim that was *meant* to shard is a memory/perf bug the user
+    should see, while the known-benign cases (that vocab) stay readable."""
     out = []
     for d, entry in enumerate(spec):
         if entry is None:
@@ -143,6 +228,19 @@ def sanitize_spec(mesh, spec: P, shape) -> P:
         if d < len(shape) and shape[d] % size == 0:
             out.append(entry)
         else:
+            dim = shape[d] if d < len(shape) else None
+            sig = (axes, size, dim)
+            if sig not in _SANITIZE_WARNED:
+                _SANITIZE_WARNED.add(sig)
+                what = (f"dim {d} of size {dim}" if dim is not None
+                        else f"dim {d} (beyond the leaf's rank {len(shape)})")
+                warnings.warn(
+                    f"sanitize_spec: mesh axes {axes} (size {size}) do not "
+                    f"divide {what}; replicating that dim instead. "
+                    "Expected for known-ragged dims (e.g. an odd vocab); if "
+                    "this dim was meant to shard, fix the rule or pad the "
+                    "dim. (warned once per distinct drop)",
+                    UserWarning, stacklevel=2)
             out.append(None)
     return P(*out)
 

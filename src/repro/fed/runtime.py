@@ -176,7 +176,7 @@ STRUCTURAL_FL_FIELDS = (
     "amplification", "server_opt", "server_momentum", "server_b1",
     "server_b2", "server_eps", "server_weight_decay", "local_steps",
     "local_lr", "participation", "participation_mode", "k_block",
-    "active_gather", "client")
+    "active_gather", "device_mesh", "client")
 STRUCTURAL_CHANNEL_FIELDS = ("num_devices", "block_fading", "model",
                              "rician_k", "csi_error_model", "geometry")
 
@@ -253,6 +253,21 @@ class FLConfig:
     # num_participants); the grad-norm diagnostics then cover the
     # participants only (non-participants never compute a gradient).
     active_gather: bool = False
+    # Sharded streaming (requires k_block): partition the round's K-blocks
+    # over this many mesh shards.  The value DEFINES the hierarchical
+    # accumulation order — each shard left-folds a contiguous run of
+    # stream_length/k_block/device_mesh blocks, then ONE deterministic
+    # cross-shard fold (``distribution.ota_collectives.fold_shards``) closes
+    # eq. (10) — so the trajectory is a function of the config alone:
+    # running on a physical mesh (``distribution.sharding.device_mesh``
+    # finds the devices; shard_map) and the emulated single-device fallback
+    # (outer lax.scan over shards) are BITWISE-identical, which is what lets
+    # a checkpoint move between hosts with different device counts
+    # (tests/test_sharded_streaming.py).  None (default) keeps the PR-6
+    # flat left fold bitwise-pinned; device_mesh=D differs from it only by
+    # the re-association of the blocked sums (documented-ulp, like
+    # k_block itself vs dense).
+    device_mesh: Optional[int] = None
     # --- client-algorithm axis (repro.fl.clients) --------------------------
     # what each device optimizes locally and transmits: 'sgd' (the paper's
     # round, bitwise-pinned default), 'fedprox', and the two-slot correctors
@@ -313,12 +328,30 @@ class FLConfig:
             if self.backend == "mesh":
                 raise ValueError("the mesh backend's device axis IS the mesh "
                                  "— k_block streaming applies to the stacked "
-                                 "(vmap/kernels) backends only")
+                                 "(vmap/kernels) backends; to parallelize a "
+                                 "streamed round over local devices use "
+                                 "device_mesh (the sharded streaming engine)")
             s = self.stream_length()
             if s % min(self.k_block, s) != 0:
                 raise ValueError(
                     f"k_block {self.k_block} must divide the streamed device "
                     f"axis ({s} = {'the active set' if self.active_gather else 'num_devices'})")
+        if self.device_mesh is not None:
+            if self.device_mesh < 1:
+                raise ValueError(
+                    f"device_mesh must be >= 1, got {self.device_mesh}")
+            if self.k_block is None:
+                raise ValueError(
+                    "device_mesh shards the K-block stream — set k_block "
+                    "(the dense round has no block axis to partition)")
+            s = self.stream_length()
+            nb = s // min(self.k_block, s)
+            if nb % self.device_mesh != 0:
+                raise ValueError(
+                    f"device_mesh {self.device_mesh} must divide the "
+                    f"stream's block count {nb} (= streamed axis {s} / "
+                    f"k_block {min(self.k_block, s)}) — pick a k_block so "
+                    "the block count is a multiple of the mesh size")
 
     def stream_length(self) -> int:
         """Length of the streamed device axis: the fixed active-set size
@@ -512,24 +545,10 @@ def _active_indices(cfg: FLConfig, key, t) -> jax.Array:
     return jnp.sort(perm[:m])
 
 
-@jax.custom_batching.custom_vmap
-def _fence_leaf(x):
-    return jax.lax.optimization_barrier(x)
-
-
-@_fence_leaf.def_vmap
-def _fence_leaf_vmap(axis_size, in_batched, x):
-    # the fence is an identity: under vmap it is the SAME barrier on the
-    # batched value (optimization_barrier itself has no batching rule, so
-    # the vmapped sweep engine needs this indirection)
-    return jax.lax.optimization_barrier(x), in_batched[0]
-
-
-def _fusion_fence(tree: PyTree) -> PyTree:
-    """Per-leaf ``optimization_barrier``: forces XLA to materialize the tree
-    before any consumer, so downstream reductions compile independently of
-    how the values were produced.  vmap-safe (see ``_fence_leaf``)."""
-    return jax.tree_util.tree_map(_fence_leaf, tree)
+# fences promoted to core.ota (the OTA-level sharded streaming path needs
+# them too); the runtime names stay as aliases for their existing call sites
+_fence_leaf = ota.fence_leaf
+_fusion_fence = ota.fusion_fence
 
 
 def _local_transmit(cfg: FLConfig, grad_fn: GradFn, params, batch,
@@ -823,6 +842,12 @@ def _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
             lambda n, o: jnp.where(keep, n, o), new_params, params)
         new_opt_state = jax.tree_util.tree_map(
             lambda n, o: jnp.where(keep, n, o), new_opt_state, opt_state)
+    # sharded rounds pin the real-valued [K]/[N] reductions below so the
+    # diagnostics stay bitwise across the shard_map / emulated programs
+    # (see _round_math_streaming); mask sums are 0/1-exact and stay plain
+    ksum = (ota.pinned_sum
+            if cfg.device_mesh is not None and cfg.device_mesh > 1
+            else jnp.sum)
     if sch.baseline:
         # the ideal reference bypasses the channel; no gain to misalign
         csi_gain_err = jnp.zeros((), jnp.float32)
@@ -831,14 +856,14 @@ def _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
         # a sum h_k b_k, the server designed a sum h_hat_k b_k.  Computed
         # through the DIFFERENCE (h - h_hat) so equal estimates give a hard
         # 0 (two independently-lowered sums would leave an ulp residual)
-        designed = a_eff * jnp.sum(h_hat * b_eff)
-        gap = a_eff * jnp.sum((h - h_hat) * b_eff)
+        designed = a_eff * ksum(h_hat * b_eff)
+        gap = a_eff * ksum((h - h_hat) * b_eff)
         csi_gain_err = (gap / jnp.maximum(jnp.abs(designed),
                                           schemes.EPS)).astype(jnp.float32)
     diag = {
         **diag_core,
         "eta": eta,
-        "update_norm": jnp.sqrt(sum(jnp.sum(jnp.square(l))
+        "update_norm": jnp.sqrt(sum(ksum(jnp.square(l))
                                     for l in jax.tree_util.tree_leaves(y))),
         "num_participants": (jnp.sum(mask) if mask is not None
                              else jnp.asarray(float(cfg.num_devices),
@@ -846,6 +871,97 @@ def _round_tail(cfg, sch, opt, params, opt_state, y, mask, eta0, t,
         "csi_gain_err": csi_gain_err,
     }
     return new_params, new_opt_state, diag
+
+
+def _combine_shard_carries(stacked):
+    """Close the sharded streaming round: fold D stacked per-shard scan
+    carries ``(ota_carry, norm_sum, norm_min, norm_max, tx_sum[, ota_carry_2])``
+    into one.  Every accumulator field reduces through the deterministic
+    left fold of ``distribution.ota_collectives.fold_shards`` — the ONE
+    combine both execution paths (shard_map and the emulated outer scan)
+    share, which is what makes them bitwise-identical; the min/max
+    diagnostics fold with their own (order-free) ops on the same path."""
+    from repro.distribution import ota_collectives as coll
+    out = (coll.fold_shards(stacked[0]),
+           coll.fold_shards(stacked[1]),
+           coll.fold_shards(stacked[2], jax.lax.min),
+           coll.fold_shards(stacked[3], jax.lax.max),
+           coll.fold_shards(stacked[4]))
+    if len(stacked) > 5:
+        out = out + (coll.fold_shards(stacked[5]),)
+    return out
+
+
+def _scan_stream_blocks(cfg: FLConfig, body, carry0, xs):
+    """Drive the streaming round's block scan, sharded when
+    ``cfg.device_mesh`` asks for it.
+
+    Plain (``device_mesh`` None/1): one ``lax.scan`` over all nb blocks —
+    the PR-6 flat left fold, bitwise-pinned.
+
+    Sharded (``device_mesh = D``): the [nb, k_block, ...] xs leaves become
+    [D, nb/D, k_block, ...]; each shard left-folds its contiguous run of
+    blocks from the same zero carry, and ``_combine_shard_carries`` closes
+    the round.  On a physical mesh the per-shard folds run SPMD under
+    ``shard_map`` (params and the other closed-over round state replicate;
+    the xs split; ONE ``all_gather`` of the partial carries is the round's
+    only cross-shard collective); otherwise an outer ``lax.scan`` emulates
+    the shards.  Both paths run the SAME blocking and the SAME combine, so
+    the choice is invisible in the trajectory (bitwise).
+
+    Returns ``(combined_carry, ys)`` with ``ys`` in the flat [nb, ...]
+    block order either way."""
+    if cfg.device_mesh is None or cfg.device_mesh <= 1:
+        return jax.lax.scan(body, carry0, xs)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution import ota_collectives as coll
+    from repro.distribution import sharding as shardlib
+
+    d = cfg.device_mesh
+    tmap = jax.tree_util.tree_map
+    xs_sh = tmap(lambda l: l.reshape((d, l.shape[0] // d) + l.shape[1:]), xs)
+
+    def shard_fold(xs_shard):
+        return jax.lax.scan(body, carry0, xs_shard)
+
+    mesh = shardlib.device_mesh(d)
+    if mesh is None:
+        _, (stacked, ys_sh) = jax.lax.scan(
+            lambda _, xs_s: (None, shard_fold(xs_s)), None, xs_sh)
+        ys = tmap(lambda l: l.reshape((l.shape[0] * l.shape[1],)
+                                      + l.shape[2:]), ys_sh)
+    else:
+        axis = shardlib.FL_DEVICE_AXIS
+
+        def per_shard(xs_s):
+            local = tmap(lambda l: l[0], xs_s)
+            carry, ys_local = shard_fold(local)
+            return coll.gather_shards(carry, axis), ys_local
+
+        # replicated constraints at BOTH shard_map boundaries: without them
+        # GSPMD propagates the manual axis sharding backward into the xs
+        # producers and forward through ys into the next round's carry, and
+        # the surrounding round math (channel refresh, Problem-3 solve,
+        # _round_tail) compiles 4-way-partitioned in the physical program
+        # only — which drifts from the emulated program by ulps.  The
+        # constraints change placement, never values.
+        rep = jax.sharding.NamedSharding(mesh, P())
+        xs_sh = tmap(lambda l: jax.lax.with_sharding_constraint(l, rep),
+                     xs_sh)
+        stacked, ys = jax.shard_map(
+            per_shard, mesh=mesh,
+            in_specs=(tmap(lambda _: P(axis), xs_sh),),
+            out_specs=(P(), P(axis)),
+            axis_names={axis}, check_vma=False)(xs_sh)
+        stacked = tmap(lambda l: jax.lax.with_sharding_constraint(l, rep),
+                       stacked)
+        ys = tmap(lambda l: jax.lax.with_sharding_constraint(l, rep), ys)
+    # fence the combined carry: the consumers (streaming_finish, the
+    # server-state fold) must compile independently of whether the partials
+    # arrived through shard_map or the emulated scan, or their producer
+    # fusion drifts by ulps between the two paths
+    return _fusion_fence(_combine_shard_carries(stacked)), ys
 
 
 def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
@@ -873,7 +989,14 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
     dense round (returns a 4-tuple): the per-device ``[K, ...]`` stack rides
     the block scan's ``xs`` (its working set is O(k_block * N) per leaf),
     updated states come back as the scan's per-block outputs, and a second
-    OTA slot folds into its OWN streaming accumulator alongside slot 1's."""
+    OTA slot folds into its OWN streaming accumulator alongside slot 1's.
+
+    ``cfg.device_mesh`` partitions the block scan over mesh shards
+    (``_scan_stream_blocks``): params/opt/server-state replicate, the
+    blocked channel / participation / ``active_gather`` index vectors (and
+    the slot-2 client-state stacks) shard with the blocks, and both OTA
+    slots' accumulators close through one deterministic cross-shard fold
+    before ``streaming_finish`` draws the (bitwise-shared) noise once."""
     if h_hat is None:
         h_hat = h
     noise_var = cfg.channel.noise_var
@@ -893,9 +1016,17 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
     corr = None
     if alg.correction is not None:
         corr = lambda p, g, ds: alg.correction(cp, p, params, ds, srv_state, g)
+    # Under device_mesh the round's out-of-scan [K]-way REAL reductions
+    # (effective-gain sums) are pinned (ota.pinned_sum): the shard_map and
+    # emulated programs surround them with different computations, and an
+    # unpinned jnp.sum lets XLA cluster each one differently — a 1-ulp gain
+    # drift that compounds over rounds.  Sums of 0/1 masks are exact under
+    # any association and stay plain.
+    fence = cfg.device_mesh is not None and cfg.device_mesh > 1
+    ksum = ota.pinned_sum if fence else jnp.sum
     if cfg.participation < 1.0:
         mask = _participation_mask(cfg, key, t)
-        b_eff, a_eff = ota.participation_fold(h_hat, b, a, mask)
+        b_eff, a_eff = ota.participation_fold(h_hat, b, a, mask, sum_fn=ksum)
     else:
         mask = None
         b_eff, a_eff = b, a
@@ -963,11 +1094,19 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
     if two_slot:
         carry0 = carry0 + (ota.streaming_carry(ocfg2, template),)
 
+    # Under device_mesh the same block math lowers in two contexts
+    # (shard_map's manual body and the emulated outer scan); fencing the
+    # transmit quantities pins their values before the blocked reductions,
+    # so XLA's producer fusion cannot differ between the contexts and the
+    # bitwise phys==emulated contract holds for every scheme/algorithm.
+    # The plain stream stays unfenced (its lowering is bitwise-pinned).
     def body(carry, x):
         oc, nsum, nmin, nmax, txsum = carry[:5]
         bat = x["batch"] if "batch" in x else block_batch_fn(t, x["dev"])
         g_blk = _local_transmit(cfg, grad_fn, params, bat, corr,
                                 x.get("cst"))
+        if fence:
+            g_blk = _fusion_fence(g_blk)
         stats = schemes.compute_stats(g_blk, sch, batched=True)
         norms = jnp.sqrt(stats.sq_norm)
         tx = schemes.transmit_energy(sch, stats, x["b"], grad_bound,
@@ -995,6 +1134,8 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
                      jnp.maximum(nmax, jnp.max(norms)), txsum)
         if two_slot:
             x2_blk = alg.variate_stat(cp, cst, raw_new, srv_state, g_blk)
+            if fence:
+                x2_blk = _fusion_fence(x2_blk)
             stats2 = schemes.compute_stats(x2_blk, sch2, batched=True)
             tx2 = schemes.transmit_energy(sch2, stats2, x["b"], grad_bound,
                                           x.get("mask"))
@@ -1004,7 +1145,7 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
             new_carry = new_carry[:4] + (txsum + jnp.sum(tx2), oc2)
         return new_carry, ys
 
-    carry_out, ys_out = jax.lax.scan(body, carry0, xs)
+    carry_out, ys_out = _scan_stream_blocks(cfg, body, carry0, xs)
     oc, nsum, nmin, nmax, txsum = carry_out[:5]
     y = ota.streaming_finish(ocfg, oc, template, a_eff,
                              jax.random.fold_in(key, t),
@@ -1026,7 +1167,7 @@ def _round_math_streaming(cfg: FLConfig, sch, opt, grad_fn: GradFn, params,
             y2 = ota.streaming_finish(ocfg2, carry_out[5], template, a_eff,
                                       key2, noise_var=noise_var,
                                       num_devices=float(s))
-            gain = a_eff * jnp.sum(h_hat * b_eff)
+            gain = a_eff * ksum(h_hat * b_eff)
             y2_hat = tmap(lambda l: l / jnp.maximum(gain, schemes.EPS), y2)
             frac = (jnp.sum(mask) / cfg.num_devices if mask is not None
                     else jnp.asarray(1.0, jnp.float32))
@@ -1097,7 +1238,12 @@ def _fading_refresh(cfg: FLConfig, model_dim: int, eff_gain, chan_key, t,
         b = sol.b.astype(jnp.float32)
     else:
         b = jnp.broadcast_to(jnp.asarray(b_max, jnp.float32), h.shape)
-    a = (eff_gain / jnp.sum(h_hat * b)).astype(jnp.float32)
+    # pinned under device_mesh: a feeds every transmit scale, so a 1-ulp
+    # clustering difference here would break the phys==emulated contract
+    ksum = (ota.pinned_sum
+            if cfg.device_mesh is not None and cfg.device_mesh > 1
+            else jnp.sum)
+    a = (eff_gain / ksum(h_hat * b)).astype(jnp.float32)
     return h, h_hat, b, a, fad_state
 
 
@@ -1530,6 +1676,13 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
     if cfg0.backend == "mesh":
         raise ValueError("the mesh backend reserves the device axis for the "
                          "FL devices; run mesh experiments sequentially")
+    if cfg0.device_mesh is not None:
+        raise ValueError(
+            "device_mesh (the sharded streaming engine) owns the local "
+            "devices for the FL-device axis — a batched run cannot also "
+            "shard its experiment axis over them; run device_mesh "
+            "experiments sequentially (repro.fl.sweep falls back "
+            "automatically)")
     sig = structural_config(cfg0)
     for c in cfgs[1:]:
         if structural_config(c) != sig:

@@ -37,6 +37,13 @@ class Experiment:
     ``run()`` calls; ``save()``/``load()`` checkpoint the full resumable
     state (model params, server-optimizer state, channel/round) through
     ``repro.checkpoint.store``.
+
+    Checkpoints are portable across PHYSICAL device counts: the spec's
+    ``device_mesh`` defines the round's accumulation order (the math), not
+    where it runs, and the checkpoint tree carries no placement — so a run
+    saved on a 4-device host resumes bitwise-identically on 1 device (the
+    sharded engine falls back to its emulated path; see
+    ``FLConfig.device_mesh`` and tests/test_sharded_streaming.py).
     """
 
     def __init__(self, spec: ExperimentSpec, task: Optional[Task] = None):

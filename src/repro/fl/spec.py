@@ -105,10 +105,12 @@ class ExperimentSpec:
     local_lr: Optional[float] = None
     participation: Optional[float] = None
     participation_mode: Optional[str] = None
-    # K-scale overrides (None -> inherit): the streaming block size and the
-    # fixed-mode active-set gather (see the FLConfig fields of the same name)
+    # K-scale overrides (None -> inherit): the streaming block size, the
+    # fixed-mode active-set gather, and the sharded-streaming mesh width
+    # (see the FLConfig fields of the same name)
     k_block: Optional[int] = None
     active_gather: Optional[bool] = None
+    device_mesh: Optional[int] = None
     # execution
     driver: str = "scan"
     chunk_size: int = 16
@@ -131,6 +133,7 @@ class ExperimentSpec:
             ("participation_mode", self.participation_mode),
             ("k_block", self.k_block),
             ("active_gather", self.active_gather),
+            ("device_mesh", self.device_mesh),
         ) if v is not None}
         return dataclasses.replace(self.fl, **over) if over else self.fl
 
@@ -169,7 +172,7 @@ _SCOPE_FIELDS = {scope: tuple(f.name for f in dataclasses.fields(cls))
 _UNSWEEPABLE = ("eval", "driver", "chunk_size")
 _OVERRIDE_FIELDS = ("server_opt", "local_steps", "local_lr",
                     "participation", "participation_mode", "k_block",
-                    "active_gather")
+                    "active_gather", "device_mesh")
 
 
 def resolve_axis(name: str) -> Tuple[str, str]:

@@ -275,9 +275,10 @@ def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
     compiled batched program (``runtime.run_batched``), its experiment axis
     sharded across local devices when available.  ``vectorized=False``
     forces the per-point sequential path for every group (the baseline the
-    ``sweep`` benchmark compares against); the mesh backend and the
-    ``python`` driver always take the sequential path (the mesh's device
-    axis belongs to the FL devices; the python driver is a host loop).
+    ``sweep`` benchmark compares against); the mesh backend, sharded
+    streaming (``device_mesh > 1``), and the ``python`` driver always take
+    the sequential path (the mesh's device axis belongs to the FL devices;
+    the python driver is a host loop).
 
     Eval scheduling comes from ``sweep.base.eval`` (``evaluate`` overrides
     the enable switch) and is identical for every point, so histories align
@@ -304,7 +305,11 @@ def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
         cfgs = [s.fl_config() for s in gspecs]
         task = build_task(gspecs[0].data, gspecs[0].model,
                           cfgs[0].num_devices)
-        if vectorized and cfgs[0].backend != "mesh":
+        # device_mesh groups fall back to sequential like the mesh backend:
+        # the local devices belong to the FL-device axis (run_batched rejects
+        # the combination with the same rationale)
+        if (vectorized and cfgs[0].backend != "mesh"
+                and (cfgs[0].device_mesh is None or cfgs[0].device_mesh <= 1)):
             states = [runtime.setup(cfg, task.params0, task.model_dim)
                       for cfg in cfgs]
             _, hist = runtime.run_batched(

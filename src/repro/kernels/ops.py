@@ -15,6 +15,16 @@
 
 ``flash_attention`` / ``selective_scan`` keep the old behaviour (interpreter
 when no TPU): their CPU call sites are numerics-validation only.
+
+Sharded streaming (``FLConfig.device_mesh``): the streaming variants
+(``k_block != None``) are also the per-shard launch — inside the engine's
+``shard_map`` each mesh device calls them on its OWN [k_block, N] tiles, so
+the grid, VMEM working set, and in-kernel fp32 accumulation are all
+shard-local and identical to the single-device stream over the same blocks.
+The kernels never see the mesh: cross-shard closure is the runtime's
+deterministic accumulator fold (``distribution.ota_collectives``), which is
+what keeps the kernels backend bitwise across physical/emulated execution
+(tests/test_sharded_streaming.py).
 """
 from __future__ import annotations
 

@@ -105,6 +105,123 @@ class TestParamSpecs:
         assert specs["emb"]["tok"] == P("model", None)
 
 
+class TestSanitizeSpec:
+    """Satellite: sanitize_spec edge cases + the warn-once contract."""
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 4}
+
+    def test_nondividing_vocab_warns_once_per_drop(self, recwarn):
+        import warnings as w
+        mesh = self.FakeMesh()
+        saved = set(sh._SANITIZE_WARNED)
+        sh._SANITIZE_WARNED.clear()
+        try:
+            with w.catch_warnings(record=True) as caught:
+                w.simplefilter("always")
+                for _ in range(3):   # same drop 3x -> ONE warning
+                    spec = sh.sanitize_spec(mesh, P("model", None),
+                                            (256206, 64))
+                    assert spec == P(None, None)
+            msgs = [str(c.message) for c in caught
+                    if issubclass(c.category, UserWarning)]
+            assert len(msgs) == 1, msgs
+            assert "do not divide" in msgs[0]
+            assert "dim 0 of size 256206" in msgs[0]
+        finally:
+            sh._SANITIZE_WARNED.clear()
+            sh._SANITIZE_WARNED.update(saved)
+
+    def test_distinct_drops_warn_separately(self):
+        import warnings as w
+        mesh = self.FakeMesh()
+        saved = set(sh._SANITIZE_WARNED)
+        sh._SANITIZE_WARNED.clear()
+        try:
+            with w.catch_warnings(record=True) as caught:
+                w.simplefilter("always")
+                sh.sanitize_spec(mesh, P("model"), (100,))
+                sh.sanitize_spec(mesh, P("data"), (99,))
+            assert len([c for c in caught
+                        if issubclass(c.category, UserWarning)]) == 2
+        finally:
+            sh._SANITIZE_WARNED.clear()
+            sh._SANITIZE_WARNED.update(saved)
+
+    def test_spec_beyond_leaf_rank_replicates(self):
+        """A rank-0/short leaf under a longer spec: the out-of-rank entries
+        drop to None instead of indexing past the shape."""
+        import warnings as w
+        mesh = self.FakeMesh()
+        saved = set(sh._SANITIZE_WARNED)
+        sh._SANITIZE_WARNED.clear()
+        try:
+            with w.catch_warnings(record=True) as caught:
+                w.simplefilter("always")
+                spec = sh.sanitize_spec(mesh, P(None, "model"), (64,))
+            assert spec == P(None, None)
+            msgs = [str(c.message) for c in caught]
+            assert any("beyond the leaf's rank" in m for m in msgs), msgs
+        finally:
+            sh._SANITIZE_WARNED.clear()
+            sh._SANITIZE_WARNED.update(saved)
+
+    def test_multi_axis_entry_uses_product(self):
+        """A ('model','data') tuple entry shards by the PRODUCT (64): 128
+        divides, 96 does not."""
+        mesh = self.FakeMesh()
+        spec = sh.sanitize_spec(mesh, P(("model", "data"), None), (128, 8))
+        assert spec == P(("model", "data"), None)
+        import warnings as w
+        saved = set(sh._SANITIZE_WARNED)
+        sh._SANITIZE_WARNED.clear()
+        try:
+            with w.catch_warnings(record=True):
+                w.simplefilter("ignore")
+                spec = sh.sanitize_spec(mesh, P(("model", "data"), None),
+                                        (96, 8))
+            assert spec == P(None, None)
+        finally:
+            sh._SANITIZE_WARNED.clear()
+            sh._SANITIZE_WARNED.update(saved)
+
+
+class TestMeshHelpers:
+    """Satellite: experiment_mesh/device_mesh early validation gives
+    actionable messages instead of a deep shard_map failure."""
+
+    def test_experiment_mesh_rejects_bad_count(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            sh.experiment_mesh(0)
+
+    def test_experiment_mesh_require_one_device_message(self):
+        # this process runs on 1 CPU device: require=True must name the fix
+        with pytest.raises(ValueError, match="force host devices"):
+            sh.experiment_mesh(4, require=True)
+        assert sh.experiment_mesh(4) is None   # silent fallback by default
+
+    def test_experiment_mesh_require_nondividing_message(self):
+        class Dev:  # experiment_mesh only len()s the device list first
+            pass
+        devs = [Dev() for _ in range(4)]
+        with pytest.raises(ValueError, match="pad the grid"):
+            sh.experiment_mesh(6, devices=devs, require=True)
+        assert sh.experiment_mesh(6, devices=devs) is None
+
+    def test_device_mesh_rejects_bad_count(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            sh.device_mesh(0)
+
+    def test_device_mesh_falls_back_without_devices(self):
+        # 1 local device < 4 shards -> emulated path (None), never an error
+        assert sh.device_mesh(4) is None
+        assert sh.device_mesh(1) is None   # 1 shard == plain stream
+
+    def test_device_mesh_emulate_env_forces_fallback(self, monkeypatch):
+        monkeypatch.setenv(sh._EMULATE_ENV, "emulate")
+        assert sh.device_mesh(2) is None
+
+
 @pytest.mark.slow
 class TestMeshOTA:
     def test_mesh_ota_matches_vmap_reference(self):

@@ -1,0 +1,365 @@
+"""The sharded streaming engine (FLConfig.device_mesh, PR 9).
+
+Contract under test (see fed/runtime._scan_stream_blocks and
+distribution/ota_collectives.fold_shards):
+
+* ``device_mesh = D`` is a MATH spec — the hierarchical accumulation order
+  (per-shard left fold over contiguous block runs, one deterministic
+  cross-shard left fold) — not a placement hint.  Physical ``shard_map``
+  execution and the emulated outer-scan fallback are bitwise-identical, so
+  where a round runs is invisible in the trajectory.
+* vs the plain stream (``device_mesh=None``) the sharded round re-associates
+  the same per-device terms into shard partials: documented-ulp drift,
+  bounded like the stream-vs-dense precedent (tests/test_streaming.py).
+* checkpoints carry no placement, so a sharded run saved on one mesh size
+  resumes bitwise on another (including the 1-device emulated fallback).
+
+The bitwise matrix and the checkpoint-portability case need forced host
+devices, so they run in ONE subprocess each (XLA_FLAGS is read at jax
+import); everything else runs in-process on the emulated path.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ota
+from repro.core.channel import ChannelConfig
+from repro.fed import runtime
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str, timeout: int = 900) -> str:
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=dict(os.environ, PYTHONPATH="src"), cwd=_REPO)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# config validation (in-process, no devices needed)
+
+
+class TestDeviceMeshValidation:
+    def test_fl_device_mesh_requires_k_block(self):
+        with pytest.raises(ValueError, match="k_block"):
+            runtime.FLConfig(num_devices=8,
+                             channel=ChannelConfig(num_devices=8),
+                             grad_bound=5.0, device_mesh=2)
+
+    def test_fl_device_mesh_must_be_positive(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            runtime.FLConfig(num_devices=8,
+                             channel=ChannelConfig(num_devices=8),
+                             grad_bound=5.0, k_block=2, device_mesh=0)
+
+    def test_fl_device_mesh_must_divide_blocks(self):
+        # K=8, k_block=2 -> 4 blocks; 3 shards cannot split them evenly
+        with pytest.raises(ValueError, match="device_mesh"):
+            runtime.FLConfig(num_devices=8,
+                             channel=ChannelConfig(num_devices=8),
+                             grad_bound=5.0, k_block=2, device_mesh=3)
+
+    def test_ota_device_mesh_requires_k_block(self):
+        with pytest.raises(ValueError, match="k_block"):
+            ota.OTAConfig(scheme="normalized", a=1.0, noise_var=0.0,
+                          grad_bound=5.0, device_mesh=2)
+
+    def test_run_batched_rejects_device_mesh(self):
+        cfg = runtime.FLConfig(num_devices=8,
+                               channel=ChannelConfig(num_devices=8),
+                               grad_bound=5.0, k_block=2, device_mesh=2)
+        with pytest.raises(ValueError, match="sequential"):
+            runtime.run_batched([cfg, cfg], [None, None], lambda p, b: p,
+                                lambda t: None, 1)
+
+    def test_device_mesh_is_structural(self):
+        assert "device_mesh" in runtime.STRUCTURAL_FL_FIELDS
+        assert "device_mesh" in ota.STRUCTURAL_OTA_FIELDS
+
+
+class TestSpecOverride:
+    def test_device_mesh_override_flows_into_config(self):
+        from repro.fl import DataSpec, ExperimentSpec
+        spec = ExperimentSpec(
+            fl=runtime.FLConfig(num_devices=8,
+                                channel=ChannelConfig(num_devices=8),
+                                grad_bound=5.0, k_block=2),
+            data=DataSpec(dataset="ridge", num_train=64, dim=4,
+                          batch_size=8),
+            device_mesh=2)
+        assert spec.fl_config().device_mesh == 2
+
+    def test_invalid_override_fails_at_spec_time(self):
+        from repro.fl import DataSpec, ExperimentSpec
+        with pytest.raises(ValueError, match="device_mesh"):
+            ExperimentSpec(
+                fl=runtime.FLConfig(num_devices=8,
+                                    channel=ChannelConfig(num_devices=8),
+                                    grad_bound=5.0, k_block=2),
+                data=DataSpec(dataset="ridge", num_train=64, dim=4,
+                              batch_size=8),
+                device_mesh=3)
+
+
+# ---------------------------------------------------------------------------
+# emulated path (runs on any host): sharded-vs-plain-stream tolerance
+
+
+def _tiny_setup(algo="sgd", participation=1.0, backend="vmap",
+                device_mesh=None):
+    K, d = 8, 5
+    from repro.fl import clients as clientlib
+    cfg = runtime.FLConfig(
+        num_devices=K, case="I", seed=0, grad_bound=5.0, backend=backend,
+        k_block=2, device_mesh=device_mesh, participation=participation,
+        channel=ChannelConfig(num_devices=K, noise_var=1e-6),
+        client=clientlib.ClientConfig(algo=algo))
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(jax.random.fold_in(key, 3), (32, d))
+    y = X @ jnp.ones((d,)) + 0.01
+
+    def grad_fn(params, batch):
+        xb, yb = batch
+        r = xb @ params["w"] - yb
+        return {"w": xb.T @ r / r.shape[0]}
+
+    def provider(t):
+        kk = jax.random.fold_in(jax.random.fold_in(key, 4), t)
+        idx = jax.random.randint(kk, (K, 4), 0, 32)
+        return X[idx], y[idx]
+
+    st = runtime.setup(cfg, {"w": jnp.zeros((d,))}, d)
+    return cfg, st, grad_fn, provider
+
+
+class TestEmulatedSharding:
+    def test_device_mesh_one_is_plain_stream(self):
+        """device_mesh=1 is the identity blocking: bitwise the plain
+        stream."""
+        outs = []
+        for dm in (None, 1):
+            cfg, st, gf, pr = _tiny_setup(device_mesh=dm)
+            runtime.run(cfg, st, gf, pr, 3, driver="scan", chunk_size=3)
+            outs.append(np.asarray(st.params["w"]))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_sharded_close_to_plain_stream(self):
+        """device_mesh=2 re-associates block partials: documented-ulp drift
+        from the plain stream, nothing more."""
+        outs = []
+        for dm in (None, 2):
+            cfg, st, gf, pr = _tiny_setup(device_mesh=dm)
+            runtime.run(cfg, st, gf, pr, 3, driver="scan", chunk_size=3)
+            outs.append(np.asarray(st.params["w"]))
+        np.testing.assert_allclose(outs[0], outs[1], rtol=2e-5, atol=1e-7)
+
+    def test_sharded_deterministic_across_reruns(self):
+        outs = []
+        for _ in range(2):
+            cfg, st, gf, pr = _tiny_setup(device_mesh=4)
+            runtime.run(cfg, st, gf, pr, 3, driver="scan", chunk_size=3)
+            outs.append(np.asarray(st.params["w"]))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_sharded_scaffold_close_to_plain(self):
+        outs = []
+        for dm in (None, 2):
+            cfg, st, gf, pr = _tiny_setup(algo="scaffold", device_mesh=dm)
+            runtime.run(cfg, st, gf, pr, 3, driver="scan", chunk_size=3)
+            outs.append(np.asarray(st.params["w"]))
+        np.testing.assert_allclose(outs[0], outs[1], rtol=2e-5, atol=1e-7)
+
+
+class TestOTALevelSharding:
+    def test_aggregate_device_mesh_close_to_streaming(self):
+        """Standalone ota.aggregate with device_mesh: the blocked-and-folded
+        sum is ulp-close to the plain streamed aggregate on both stacked
+        backends."""
+        K, n = 8, 33
+        key = jax.random.PRNGKey(1)
+        g = {"w": jax.random.normal(key, (K, n))}
+        h = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (K,)))
+        b = jnp.ones((K,))
+        for backend in ("vmap", "kernels"):
+            ys = []
+            for dm in (None, 2):
+                cfg = ota.OTAConfig(scheme="normalized", a=0.5,
+                                    noise_var=0.0, grad_bound=5.0,
+                                    backend=backend, k_block=2,
+                                    device_mesh=dm)
+                ys.append(ota.aggregate(cfg, g, h, b))
+            np.testing.assert_allclose(
+                np.asarray(ys[0]["w"]), np.asarray(ys[1]["w"]),
+                rtol=2e-5, atol=1e-7, err_msg=backend)
+
+    def test_aggregate_device_mesh_must_divide_blocks(self):
+        K = 8
+        g = {"w": jnp.ones((K, 4))}
+        cfg = ota.OTAConfig(scheme="normalized", a=0.5, noise_var=0.0,
+                            grad_bound=5.0, k_block=2, device_mesh=3)
+        with pytest.raises(ValueError, match="device_mesh"):
+            ota.aggregate(cfg, g, jnp.ones((K,)), jnp.ones((K,)))
+
+
+class TestSweepFallback:
+    def test_device_mesh_group_runs_sequentially(self):
+        """A vectorized sweep over a device_mesh spec must not reach
+        run_batched (which rejects it) — it falls back to the sequential
+        driver and completes."""
+        from repro.fl import DataSpec, EvalSpec, ExperimentSpec, SweepSpec
+        from repro.fl import run_sweep
+        spec = ExperimentSpec(
+            fl=runtime.FLConfig(num_devices=8, case="II", eta=0.05,
+                                channel=ChannelConfig(num_devices=8,
+                                                      channel_mean=1e-3),
+                                grad_bound=25.0, s_target=0.995,
+                                smoothness_L=2.0, strong_convexity_M=0.5,
+                                seed=0, k_block=2, scheme="normalized"),
+            data=DataSpec(dataset="ridge", split="iid", num_train=64,
+                          dim=4, batch_size=8, seed=1),
+            eval=EvalSpec(enabled=False), chunk_size=2, device_mesh=2)
+        res = run_sweep(SweepSpec(spec, {"seed": (0, 1)}), 2)
+        assert res.history["grad_norm_mean"].shape[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# forced-multi-device subprocesses: the bitwise contract
+
+
+class TestPhysicalParity:
+    @pytest.mark.slow
+    def test_bitwise_matrix_phys_vs_emulated(self):
+        """{vmap, kernels} x {fixed, block-fading} x {sgd, scaffold} x
+        active_gather on 4 forced host devices: the physical shard_map round
+        and the emulated outer-scan round produce bitwise-identical params
+        and diagnostics."""
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.fed import runtime
+        from repro.core.channel import ChannelConfig
+        from repro.fl import clients as clientlib
+
+        assert jax.local_device_count() == 4
+        key = jax.random.PRNGKey(0)
+        K, d = 32, 7
+        def grad_fn(params, batch):
+            x, y = batch
+            r = x @ params["w"] - y
+            return {"w": x.T @ r / r.shape[0]}
+        X = jax.random.normal(jax.random.fold_in(key, 3), (64, d))
+        yv = X @ jnp.ones((d,)) + 0.01
+        def provider(t):
+            kk = jax.random.fold_in(jax.random.fold_in(key, 4), t)
+            idx = jax.random.randint(kk, (K, 4), 0, 64)
+            return X[idx], yv[idx]
+
+        cc = ChannelConfig(num_devices=K, noise_var=1e-6)
+        cc_fad = ChannelConfig(num_devices=K, noise_var=1e-6,
+                               block_fading=True)
+        cases = {
+            "vmap/fixed/sgd": dict(backend="vmap"),
+            "kernels/fixed/sgd": dict(backend="kernels"),
+            "vmap/fixed/scaffold": dict(
+                backend="vmap",
+                client=clientlib.ClientConfig(algo="scaffold")),
+            "kernels/fading/sgd": dict(backend="kernels", channel=cc_fad),
+            "vmap/fading/scaffold": dict(
+                backend="vmap", channel=cc_fad,
+                client=clientlib.ClientConfig(algo="scaffold")),
+            "vmap/active_gather": dict(
+                backend="vmap", participation=0.5,
+                participation_mode="fixed", active_gather=True),
+        }
+        for name, kw in cases.items():
+            kw.setdefault("channel", cc)
+            cfg = runtime.FLConfig(num_devices=K, case="I", seed=0,
+                                   grad_bound=5.0, k_block=4, device_mesh=4,
+                                   **kw)
+            results = []
+            for mode in ("phys", "emu"):
+                if mode == "emu":
+                    os.environ["REPRO_FL_MESH"] = "emulate"
+                else:
+                    os.environ.pop("REPRO_FL_MESH", None)
+                runtime.clear_compile_caches()
+                st = runtime.setup(cfg, {"w": jnp.zeros((d,))}, d)
+                _, hist = runtime.run(cfg, st, grad_fn, provider, 4,
+                                      driver="scan", chunk_size=4)
+                results.append((np.asarray(st.params["w"]),
+                                np.asarray(hist["grad_norm_mean"]),
+                                np.asarray(hist["tx_energy"]),
+                                np.asarray(hist["update_norm"])))
+            (p1, g1, t1, u1), (p2, g2, t2, u2) = results
+            assert (p1 == p2).all(), (name, np.abs(p1 - p2).max())
+            assert (g1 == g2).all() and (t1 == t2).all() \
+                and (u1 == u2).all(), name
+            print(f"BITWISE_OK {name}")
+        print("MATRIX_OK")
+        """
+        out = _run_sub(code)
+        assert "MATRIX_OK" in out
+        assert out.count("BITWISE_OK") == 6
+
+    @pytest.mark.slow
+    def test_checkpoint_portable_across_mesh_sizes(self):
+        """A sharded run saved mid-stream on a 4-device physical mesh
+        resumes bitwise on a DIFFERENT mesh size (the forced-emulated
+        1-device fallback): the checkpoint carries math, not placement."""
+        code = """
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax
+        import numpy as np
+        from repro.core.channel import ChannelConfig
+        from repro.fed import runtime
+        from repro.fl import DataSpec, EvalSpec, Experiment, ExperimentSpec
+
+        assert jax.local_device_count() == 4
+        spec = ExperimentSpec(
+            fl=runtime.FLConfig(num_devices=8, case="II", eta=0.05,
+                                channel=ChannelConfig(num_devices=8,
+                                                      channel_mean=1e-3),
+                                grad_bound=25.0, s_target=0.995,
+                                smoothness_L=2.0, strong_convexity_M=0.5,
+                                seed=0, k_block=2, scheme="normalized"),
+            data=DataSpec(dataset="ridge", split="iid", num_train=64, dim=4,
+                          batch_size=8, seed=1),
+            eval=EvalSpec(enabled=False), chunk_size=2, device_mesh=4)
+
+        # uninterrupted physical run: 4 rounds on the 4-device mesh
+        ref = Experiment(spec).setup()
+        ref.run(4)
+        ref_params = np.asarray(ref.params["w"])
+
+        # interrupted: 2 physical rounds, save, resume EMULATED (the
+        # 1-device "mesh") for the last 2
+        exp = Experiment(spec).setup()
+        exp.run(2)
+        path = os.path.join(tempfile.mkdtemp(), "ck")
+        exp.save(path)
+
+        os.environ["REPRO_FL_MESH"] = "emulate"
+        runtime.clear_compile_caches()
+        resumed = Experiment(spec)
+        resumed.load(path)
+        assert resumed.round == 2
+        resumed.run(2)
+        np.testing.assert_array_equal(ref_params,
+                                      np.asarray(resumed.params["w"]))
+        print("CKPT_MESH_PORTABLE_OK")
+        """
+        out = _run_sub(code)
+        assert "CKPT_MESH_PORTABLE_OK" in out
