@@ -49,6 +49,13 @@ DEFAULT_BACKEND = "kernels"
 # (the `engine` benchmark reports both and their ratio).
 DEFAULT_DRIVER = "scan"
 
+# Flight-recorder overhead budget: the engine benchmark's scan_jsonl lane
+# re-times the scan driver with a live JsonlRecorder attached and asserts
+# scan/scan_jsonl stays under this ratio.  Telemetry rides the existing
+# chunk-boundary device_get, so anything past ~5% means recording leaked
+# onto the dispatch path.
+OBS_OVERHEAD_BUDGET = 1.05
+
 
 def channel(num_devices: int = K) -> ChannelConfig:
     return ChannelConfig(num_devices=num_devices, channel_mean=CHANNEL_MEAN)

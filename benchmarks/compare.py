@@ -23,6 +23,15 @@ Three rule families, matched by leaf key name anywhere in the JSON tree:
   unconditionally — retraces are deterministic, so there is no noise to
   tolerate.
 
+With ``--manifest`` a fourth family activates: every baseline leaf named
+``structural_signature`` (run-manifest identity: the hash of the
+structurally-significant FLConfig fields, PR 10) must be present and EQUAL
+in the fresh run.  A signature mismatch means the fresh benchmark compiled
+a structurally different program than the one the baseline numbers were
+blessed on — a workload swap masquerading as a perf result — and is a
+regression, not a skip.  Baselines predating manifests simply contribute no
+signature leaves.
+
 Entries whose scale knobs disagree between the two files (``rounds``,
 ``grid``, ``devices`` — e.g. a quick-mode fresh run against a full-mode
 baseline) are SKIPPED with a visible note rather than mis-compared; a
@@ -60,12 +69,33 @@ def _fmt(path: Tuple[str, ...]) -> str:
 
 
 def compare_file(name: str, base: Dict, fresh: Dict, *, tolerance: float,
-                 rss_tolerance: float) -> Tuple[List[str], List[str]]:
+                 rss_tolerance: float,
+                 manifest: bool = False) -> Tuple[List[str], List[str]]:
     """Returns (regressions, notes) for one benchmark JSON pair."""
     regressions: List[str] = []
     notes: List[str] = []
     bleaves = dict(_walk(base))
     fleaves = dict(_walk(fresh))
+
+    if manifest:
+        # signatures only occur inside run manifests, so the leaf name alone
+        # identifies them wherever the benchmark nested its manifest(s)
+        sig_paths = [p for p in bleaves
+                     if p and p[-1] == "structural_signature"]
+        if not sig_paths:
+            notes.append(f"{name}: NOTE baseline carries no run manifest — "
+                         "signature check skipped")
+        for path in sig_paths:
+            fval = fleaves.get(path)
+            if fval is None:
+                regressions.append(
+                    f"{name}: {_fmt(path)} missing from fresh run — "
+                    "benchmark no longer writes its manifest")
+            elif fval != bleaves[path]:
+                regressions.append(
+                    f"{name}: {_fmt(path)} changed "
+                    f"{bleaves[path][:12]}... -> {str(fval)[:12]}... — "
+                    "fresh run compiled a structurally different program")
 
     # scale mismatch -> mark every entry sharing that prefix incomparable
     skipped_prefixes: List[Tuple[str, ...]] = []
@@ -129,6 +159,9 @@ def main() -> None:
                     help="allowed fractional rounds/sec drop (default 0.5)")
     ap.add_argument("--rss-tolerance", type=float, default=0.3,
                     help="allowed fractional peak-RSS growth (default 0.3)")
+    ap.add_argument("--manifest", action="store_true",
+                    help="also cross-check run-manifest structural "
+                         "signatures (fresh must match baseline exactly)")
     args = ap.parse_args()
 
     bdir, fdir = pathlib.Path(args.baseline), pathlib.Path(args.fresh)
@@ -151,7 +184,8 @@ def main() -> None:
             fresh = json.load(f)
         regs, notes = compare_file(bpath.name, base, fresh,
                                    tolerance=args.tolerance,
-                                   rss_tolerance=args.rss_tolerance)
+                                   rss_tolerance=args.rss_tolerance,
+                                   manifest=args.manifest)
         compared += 1
         for line in notes:
             print(line)

@@ -20,31 +20,33 @@ from benchmarks.common import (CaseIExperiment, CaseIIExperiment,
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
 
 
-def _dump(name: str, payload) -> None:
+def _dump(name: str, payload, manifest=None) -> None:
+    """Write ``results/bench_<name>.json``; ``manifest`` (a
+    ``repro.obs.run_manifest`` dict) rides along under the ``"manifest"``
+    key so the file is self-describing and ``compare.py --manifest`` can
+    cross-check the producing program's structural signature."""
+    if manifest is not None:
+        payload = dict(payload)
+        payload["manifest"] = manifest
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"bench_{name}.json"), "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(payload, f, indent=2, default=str)
 
 
 def _banded_rows(fig: str, res, us: float, axis: str, metric: str,
                  seeds: int, row_metric: str = None, value_prefix: str = "",
                  ) -> Tuple[List[Tuple[str, float, str]], dict]:
     """CSV rows + JSON payload for a (axis x seed) sweep: one curve per axis
-    value, mean +- std across the seed replicates.  ``row_metric`` picks the
-    headline quantity of the CSV row when it differs from the dumped curve
-    metric (the ridge figures plot ``loss`` but report ``gap``)."""
-    mean, std = res.band(metric, over="seed")
+    value, mean +- std across the seed replicates (the curve payload is
+    ``SweepResult.curves`` — one assembly path for live dumps and tests).
+    ``row_metric`` picks the headline quantity of the CSV row when it
+    differs from the dumped curve metric (the ridge figures plot ``loss``
+    but report ``gap``)."""
+    curves = res.curves(axis, metric, over="seed")
     row_metric = row_metric or metric
-    rmean, rstd = ((mean, std) if row_metric == metric
-                   else res.band(row_metric, over="seed"))
-    rows, curves = [], {}
+    rmean, rstd = res.band(row_metric, over="seed")
+    rows = []
     for i, value in enumerate(res.sweep.values(axis)):
-        curves[str(value)] = {
-            "round": res.eval_rounds,
-            metric: mean[i].tolist(),            # mean across seeds
-            f"{metric}_std": std[i].tolist(),    # the error band
-            "seeds": seeds,
-        }
         rows.append((f"{fig}/{value_prefix}{value}", us,
                      f"final_{row_metric}={rmean[i][-1]:.5f}"
                      f"+-{rstd[i][-1]:.5f}"))
@@ -61,7 +63,7 @@ def fig1a_opt_benefit(rounds: int = 300,
     res, us = timed_sweep(sweep, rounds)
     rows, curves = _banded_rows("fig1a", res, us, "amplification",
                                 "test_acc", seeds)
-    _dump("fig1a", curves)
+    _dump("fig1a", curves, manifest=res.manifest())
     return rows
 
 
@@ -76,7 +78,7 @@ def fig1b_benchmarks(rounds: int = 300,
         eval_every=25, seeds=seeds)
     res, us = timed_sweep(sweep, rounds)
     rows, curves = _banded_rows("fig1b", res, us, "scheme", "test_acc", seeds)
-    _dump("fig1b", curves)
+    _dump("fig1b", curves, manifest=res.manifest())
     return rows
 
 
@@ -89,7 +91,7 @@ def fig2a_opt_benefit_ridge(rounds: int = 400,
     res, us = timed_sweep(sweep, rounds)
     rows, curves = _banded_rows("fig2a", res, us, "amplification", "loss",
                                 seeds, row_metric="gap")
-    _dump("fig2a", curves)
+    _dump("fig2a", curves, manifest=res.manifest())
     return rows
 
 
@@ -102,7 +104,7 @@ def fig2b_benchmarks_ridge(rounds: int = 400,
     res, us = timed_sweep(sweep, rounds)
     rows, curves = _banded_rows("fig2b", res, us, "scheme", "loss", seeds,
                                 row_metric="gap")
-    _dump("fig2b", curves)
+    _dump("fig2b", curves, manifest=res.manifest())
     return rows
 
 
@@ -124,7 +126,7 @@ def fig3a_case1_vs_case2(rounds: int = 400,
     res, us = timed_sweep(sweep, rounds)
     rows, curves = _banded_rows("fig3a", res, us, "case_setup", "loss",
                                 seeds)
-    _dump("fig3a", curves)
+    _dump("fig3a", curves, manifest=res.manifest())
     return rows
 
 
@@ -140,7 +142,7 @@ def fig3b_tradeoff(rounds: int = 600,
     res, us = timed_sweep(sweep, rounds)
     rows, curves = _banded_rows("fig3b", res, us, "s_target", "loss", seeds,
                                 row_metric="gap", value_prefix="s=")
-    _dump("fig3b", curves)
+    _dump("fig3b", curves, manifest=res.manifest())
     return rows
 
 
@@ -155,13 +157,20 @@ def engine_rounds_per_sec(rounds: int = 64,
     experiment, so the runtime's compiled executables persist across the
     ``Experiment`` resets; one warm-up run per driver removes jit compile
     from the timed runs, and the reported rate is the best of ``repeats``
-    full runs."""
+    full runs.
+
+    A third lane re-times the scan driver with a live JSONL flight recorder
+    and asserts the telemetry overhead stays within
+    ``OBS_OVERHEAD_BUDGET`` (1.05x) — the recorder's whole design (host-side
+    chunk-boundary emission, buffered writes) exists to keep this number
+    flat, and this guard keeps it kept."""
     import time
 
+    from repro import obs
     from repro.core.channel import ChannelConfig
     from repro.fl import Experiment
     from benchmarks.common import (CHANNEL_MEAN, CaseIExperiment,
-                                   CaseIIExperiment, K)
+                                   CaseIIExperiment, K, OBS_OVERHEAD_BUDGET)
 
     rows, dump = [], {}
     for task, exp in (("mlp", CaseIExperiment()), ("ridge", CaseIIExperiment())):
@@ -199,7 +208,32 @@ def engine_rounds_per_sec(rounds: int = 64,
                 f"{task} (< 1.0x) — the compiled engine regressed")
         rows.append((f"engine/{task}/speedup", 0.0,
                      f"scan_over_python={speedup:.2f}x"))
-        dump[task] = {"rounds_per_sec": rps, "speedup": speedup, "rounds": n}
+        # flight-recorder overhead lane: same scan timing, JSONL sink on
+        # (fresh file per repeat so every run pays the full write path)
+        kw = dict(driver="scan", chunk_size=8 if task == "mlp" else n)
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        obs_path = os.path.join(RESULTS_DIR, f"obs_engine_{task}.jsonl")
+        dt = float("inf")
+        for _ in range(repeats):
+            e.reset()
+            with obs.make("jsonl", path=obs_path) as rec:
+                t0 = time.perf_counter()
+                e.run(n, recorder=rec, **kw)
+                dt = min(dt, time.perf_counter() - t0)
+        rps["scan_jsonl"] = n / dt
+        overhead = rps["scan"] / rps["scan_jsonl"]
+        if overhead > OBS_OVERHEAD_BUDGET:
+            raise AssertionError(
+                f"JSONL flight recorder costs {overhead:.3f}x the bare scan "
+                f"driver on {task} (> {OBS_OVERHEAD_BUDGET}x budget) — "
+                "telemetry leaked onto the dispatch critical path")
+        rows.append((f"engine/{task}/scan_jsonl", dt / n * 1e6,
+                     f"rounds_per_sec={rps['scan_jsonl']:.2f};"
+                     f"obs_overhead={overhead:.3f}x"))
+        dump[task] = {"rounds_per_sec": rps, "speedup": speedup, "rounds": n,
+                      "obs_overhead": overhead,
+                      "obs_overhead_budget": OBS_OVERHEAD_BUDGET,
+                      "manifest": e.manifest()}
     _dump("engine", dump)
     return rows
 
@@ -231,14 +265,17 @@ def sweep_rounds_per_sec(rounds: int = 256, grid: int = 8,
     g = sweep.size
 
     times = {}
+    res_batched = None
     for mode, vectorized in (("batched", True), ("sequential", False)):
         run_sweep(sweep, rounds, vectorized=vectorized)      # warm-up
         traces0 = dict(runtime.TRACE_COUNTS)
         dt = float("inf")
         for _ in range(repeats):
             t0 = time.perf_counter()
-            run_sweep(sweep, rounds, vectorized=vectorized)
+            res = run_sweep(sweep, rounds, vectorized=vectorized)
             dt = min(dt, time.perf_counter() - t0)
+            if vectorized:
+                res_batched = res
         retraces = sum(runtime.TRACE_COUNTS.values()) - sum(traces0.values())
         if mode == "batched" and retraces:
             # the README/ROADMAP contract: a warm batched grid re-traces
@@ -266,7 +303,7 @@ def sweep_rounds_per_sec(rounds: int = 256, grid: int = 8,
         "retraces": {m: times[f"{m}_retraces"]
                      for m in ("batched", "sequential")},
         "cache_info": runtime.cache_info(),
-    })
+    }, manifest=res_batched.manifest())
     return rows
 
 
@@ -307,7 +344,8 @@ def scenario_axes(rounds: int = 120) -> List[Tuple[str, float, str]]:
         dump[name] = {"round": e.history["eval_round"],
                       "acc": e.history["test_acc"],
                       "total_tx_energy": energy,
-                      "mean_participants": parts}
+                      "mean_participants": parts,
+                      "manifest": e.manifest()}
         rows.append((f"scenario/{name}", us,
                      f"final_acc={acc:.4f};total_tx_energy={energy:.1f}"))
     _dump("scenarios", dump)
@@ -346,7 +384,7 @@ def channel_rounds_per_sec(rounds: int = 256,
         "ar1_csi": env(model="ar1", rho=0.9, csi_error=0.2),
     }
     rows, dump = [], {}
-    rps = {}
+    rps, manifests = {}, {}
     for name, spec in variants.items():
         e = Experiment(spec)
         e.run(rounds)                                    # warm-up + compile
@@ -357,6 +395,7 @@ def channel_rounds_per_sec(rounds: int = 256,
             e.run(rounds)
             dt = min(dt, time.perf_counter() - t0)
         rps[name] = rounds / dt
+        manifests[name] = e.manifest()
         rows.append((f"channel/{name}", dt / rounds * 1e6,
                      f"rounds_per_sec={rps[name]:.1f}"))
     overhead = rps["iid_fading"] / rps["ar1_csi"]
@@ -367,7 +406,8 @@ def channel_rounds_per_sec(rounds: int = 256,
     rows.append(("channel/csi_overhead", 0.0,
                  f"fading_over_ar1_csi={overhead:.2f}x"))
     _dump("channel", {"rounds": rounds, "rounds_per_sec": rps,
-                      "csi_overhead_vs_fading": overhead})
+                      "csi_overhead_vs_fading": overhead,
+                      "manifests": manifests})
     return rows
 
 
@@ -408,7 +448,7 @@ def csi_robustness(rounds: int = 400,
             rows.append((f"csi_robustness/{scheme}/csi={err}", us,
                          f"final_gap={mean[i, j][-1]:.5f}"
                          f"+-{std[i, j][-1]:.5f}"))
-    _dump("csi_robustness", curves)
+    _dump("csi_robustness", curves, manifest=res.manifest())
     return rows
 
 
@@ -501,7 +541,7 @@ def client_algorithms(rounds: int = 200,
                 f"separate from sgd {sm:.4f}+-{ss:.4f} on dirichlet(0.1)")
     rows.append(("clients/energy_ratio", 0.0,
                  f"two_slot_over_sgd_tx_energy={ratio:.3f}"))
-    _dump("clients", curves)
+    _dump("clients", curves, manifest=res.manifest())
     return rows
 
 
@@ -667,6 +707,7 @@ def grad_norm_fluctuation(rounds: int = 200,
             "min": res.history["grad_norm_min"].mean(axis=0).tolist(),
             "max": res.history["grad_norm_max"].mean(axis=0).tolist(),
             "seeds": seeds,
+            "manifest": res.manifest(),
         }
         rows.append((f"grad_norm_fluctuation/{name}", us,
                      f"max_over_min={ratio:.2f};final_mean={mean[-1]:.4f}"))

@@ -29,32 +29,13 @@ from __future__ import annotations
 import argparse
 import hashlib
 import json
-import resource
 import sys
 import time
 
-
-def peak_rss_mb() -> float:
-    """This process's own peak resident set, in MB.
-
-    ``getrusage(...).ru_maxrss`` is NOT that number under Linux fork():
-    the forked child's mm starts as a COW copy of the parent's, so its
-    high-water mark is inherited — a trivial child of a 3 GB parent
-    reports ~3 GB, and the value survives exec into getrusage.  A fat
-    launcher (pytest mid-suite, benchmarks/run.py after other entries)
-    would therefore clamp every case to ITS resident set and flatten the
-    dense-vs-streaming comparison.  ``VmHWM`` in /proc/self/status is a
-    property of the current mm, which exec creates fresh, so it counts
-    only pages this process touched; ru_maxrss stays as the non-/proc
-    fallback."""
-    try:
-        with open("/proc/self/status") as f:
-            for line in f:
-                if line.startswith("VmHWM:"):
-                    return float(line.split()[1]) / 1024.0
-    except OSError:
-        pass
-    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+# the exec-fresh VmHWM reader this benchmark pioneered, promoted to the
+# observability library (see its docstring for why ru_maxrss lies under
+# fork and VmHWM does not)
+from repro.obs.profiling import peak_rss_mb
 
 
 def main() -> None:
@@ -153,6 +134,8 @@ def main() -> None:
         np.ascontiguousarray(np.asarray(state.params["w"],
                                         np.float32)).tobytes()).hexdigest()
 
+    from repro import obs
+
     json.dump({
         "devices": K, "k_block": args.k_block,
         "device_mesh": args.device_mesh, "dim": d, "batch": B,
@@ -162,6 +145,9 @@ def main() -> None:
         "grad_norm_mean_final": float(hist["grad_norm_mean"][-1]),
         "params_sha256": params_sha,
         "local_devices": jax.local_device_count(),
+        # self-describing identity block: config hash + structural signature
+        # + the digest above (compare.py --manifest cross-checks signatures)
+        "manifest": obs.run_manifest(cfg=cfg, params_digest=params_sha),
     }, sys.stdout)
     print()
 

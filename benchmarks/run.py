@@ -76,6 +76,25 @@ def main() -> None:
         keep = set(args.only.split(","))
         benches = [b for b in benches if b[0] in keep]
 
+    # harness-level run manifest: which benchmarks ran, with which knobs, on
+    # which jax/platform — makes a whole results/ directory self-describing
+    # (each bench_*.json additionally embeds its own per-config manifests)
+    import json
+    import os
+
+    from repro import obs
+
+    os.makedirs(figures.RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(figures.RESULTS_DIR, "run_manifest.json"),
+              "w") as f:
+        json.dump(obs.run_manifest(extra={
+            "harness": "benchmarks.run",
+            "quick": args.quick,
+            "benchmarks": [name for name, _ in benches],
+            "backend": common.DEFAULT_BACKEND,
+            "driver": common.DEFAULT_DRIVER,
+        }), f, indent=2, default=str)
+
     print("name,us_per_call,derived")
     failed = []
     for name, fn in benches:

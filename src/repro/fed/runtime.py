@@ -73,6 +73,7 @@ import collections
 import dataclasses
 import functools
 import os
+import time
 from functools import partial
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -86,6 +87,7 @@ from repro.core import channel as chan
 from repro.core import ota
 from repro.core import schemes
 from repro.fl import clients as clientlib
+from repro.obs import profiling as obsprof
 from repro.optim import optimizers as optim
 
 PyTree = Any
@@ -127,6 +129,33 @@ ENGINE_CACHE_SIZE = int(os.environ.get("REPRO_ENGINE_CACHE_SIZE", "64"))
 # inside jax's own jit cache rather than the lru builders
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
+# The documented, closed key set of ``TRACE_COUNTS`` — one key per cached
+# builder in ``_CACHED_BUILDERS``.  Historically the chunk-scan counter key
+# was a free-form string threaded through ``_make_chunk_scan``; normalizing
+# to this enum-like set keeps the recorder's per-chunk re-trace attribution
+# (and ``cache_info()['traces_delta']``) stable across refactors.
+TRACE_KINDS = ("round_step", "run_chunk", "run_chunk_batched",
+               "fading_refresh")
+
+# per-kind counts at the last cache_info() call, for the delta report
+_TRACE_SNAPSHOT: Dict[str, int] = {}
+
+
+def _count_trace(kind: str) -> None:
+    """Record one trace of a compiled builder body.  Runs at trace time
+    (host-side, inside the traced function's Python execution); a key
+    outside ``TRACE_KINDS`` is a programming error, not a new counter."""
+    if kind not in TRACE_KINDS:
+        raise ValueError(f"unknown trace kind {kind!r}; one of {TRACE_KINDS}")
+    TRACE_COUNTS[kind] += 1
+
+
+def trace_deltas(since: Dict[str, int]) -> Dict[str, int]:
+    """Per-builder re-trace deltas vs a ``dict(TRACE_COUNTS)`` snapshot —
+    the recorder's per-chunk retrace attribution."""
+    return {k: int(TRACE_COUNTS[k]) - int(since.get(k, 0))
+            for k in TRACE_KINDS}
+
 
 def _engine_cache(fn):
     return functools.lru_cache(maxsize=ENGINE_CACHE_SIZE)(fn)
@@ -134,14 +163,20 @@ def _engine_cache(fn):
 
 def cache_info() -> Dict[str, Any]:
     """Introspection for the compiled-executable caches: per-builder
-    ``lru_cache`` statistics plus cumulative trace counts (``TRACE_COUNTS``).
-    The sweep benchmark asserts the trace counters stay flat across repeated
-    grid runs — i.e. zero re-traces once warm."""
+    ``lru_cache`` statistics, cumulative trace counts (``TRACE_COUNTS``,
+    keyed by ``TRACE_KINDS``), and ``traces_delta`` — the per-builder
+    re-trace deltas since the previous ``cache_info()`` call (reset by
+    ``clear_compile_caches``).  The sweep benchmark asserts the trace
+    counters stay flat across repeated grid runs — i.e. zero re-traces once
+    warm."""
+    delta = trace_deltas(_TRACE_SNAPSHOT)
+    _TRACE_SNAPSHOT.update({k: int(TRACE_COUNTS[k]) for k in TRACE_KINDS})
     return {
         "cache_size": ENGINE_CACHE_SIZE,
         "builders": {name: fn.cache_info()._asdict()
                      for name, fn in _CACHED_BUILDERS.items()},
         "traces": dict(TRACE_COUNTS),
+        "traces_delta": delta,
     }
 
 
@@ -151,6 +186,7 @@ def clear_compile_caches() -> None:
     for fn in _CACHED_BUILDERS.values():
         fn.cache_clear()
     TRACE_COUNTS.clear()
+    _TRACE_SNAPSHOT.clear()
 
 
 # FLConfig fields a batched (vmapped) run can vary per experiment: they are
@@ -1252,7 +1288,7 @@ def _make_fading_refresh(cfg: FLConfig, model_dim: int):
     """Jitted per-round channel/Problem-3 refresh for the python driver
     (the scan driver inlines ``_fading_refresh`` in its scan body)."""
     def refresh(eff_gain, chan_key, t, fad_state, over):
-        TRACE_COUNTS["fading_refresh"] += 1
+        _count_trace("fading_refresh")
         return _fading_refresh(cfg, model_dim, eff_gain, chan_key, t,
                                fad_state, over)
 
@@ -1282,7 +1318,7 @@ def make_round_step(cfg: FLConfig, grad_fn: GradFn, block_batch_fn=None):
     @jax.jit
     def round_step(params, opt_state, client_state, device_batches, h, h_hat,
                    b, a, eta0, t, key):
-        TRACE_COUNTS["round_step"] += 1
+        _count_trace("round_step")
         if cfg.k_block is not None:
             return _round_math_streaming(cfg, sch, opt, grad_fn, params,
                                          opt_state, device_batches, h, h_hat,
@@ -1306,13 +1342,15 @@ def _make_chunk_scan(cfg: FLConfig, grad_fn: GradFn, model_dim: int,
     channel ``h``, the server estimate ``h_hat``, and the fading-process
     state (None for stateless models — no carry leaf, so default traces are
     untouched)."""
+    if trace_counter not in TRACE_KINDS:
+        raise ValueError(f"trace_counter {trace_counter!r} not in TRACE_KINDS")
     sch = schemes.get(cfg.scheme)
     opt = server_optimizer(cfg)
     time_varying = cfg.channel.time_varying()
 
     def run_one(params, opt_state, client_state, h, h_hat, b, a, eta0, key,
                 chan_key, eff_gain, fad_state, over, ts, batches):
-        TRACE_COUNTS[trace_counter] += 1
+        _count_trace(trace_counter)
 
         def body(carry, xs):
             params, opt_state, client_state, h, h_hat, b, a, fad_state = carry
@@ -1453,6 +1491,7 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         chunk_size: int = 16,
         chunk_batch_provider: Optional[Callable[[Sequence[int]], Any]] = None,
         block_batch_provider: Optional[Callable[[Any, Any], Any]] = None,
+        recorder: Optional[Any] = None,
         ) -> Tuple[FLState, Dict[str, List]]:
     """Run ``num_rounds`` FL rounds on the selected driver.
 
@@ -1475,6 +1514,13 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
     called inside the round's block scan — the 100k-device path where no
     [K, ...] (or even [k_block-free]) batch stack ever exists on the host.
     ``batch_provider`` may then be ``None``.
+
+    ``recorder``, a :class:`repro.obs.Recorder`, streams the run live: one
+    ``chunk`` event per engine dispatch (wall clock, re-trace attribution,
+    RSS) fanned out into per-round ``round`` events, plus ``eval`` events.
+    All emission happens host-side at chunk boundaries on the
+    already-transferred diagnostics — the trajectory (params AND history) is
+    bitwise-identical with the recorder on or off.
 
     This signature is the stable compatibility surface; new scenario axes
     (server optimizer, local steps, participation) are ``FLConfig`` fields,
@@ -1555,25 +1601,41 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         for mk in eval_keys:
             hist.setdefault(mk, []).append(metrics[mk])
         hist["eval_round"].append(t)
+        if recorder is not None:
+            recorder.on_eval(t, {mk: float(metrics[mk]) for mk in eval_keys})
 
     t0 = state.round
     if driver == "python":
         round_step = make_round_step(cfg, grad_fn, block_batch_provider)
         fading_refresh = _make_fading_refresh(cfg, state.model_dim)
         params = state.params
-        for t in range(t0 + 1, t0 + num_rounds + 1):
-            if time_varying:
-                h, h_hat_t, b, a, fad_state = fading_refresh(
-                    eff_gain, chan_key, jnp.asarray(t), fad_state, over)
-                h_hat = None if perfect_csi else h_hat_t
-            batch = (None if block_batch_provider is not None
-                     else batch_provider(t))
-            params, opt_state, client_state, diag = round_step(
-                params, opt_state, client_state, batch, h, h_hat, b, a,
-                eta0, jnp.asarray(t), key)
+        for chunk_i, t in enumerate(range(t0 + 1, t0 + num_rounds + 1)):
+            if recorder is not None:
+                tr0 = dict(TRACE_COUNTS)
+                wt0 = time.perf_counter()
+            with obsprof.annotate_chunk(chunk_i):
+                if time_varying:
+                    h, h_hat_t, b, a, fad_state = fading_refresh(
+                        eff_gain, chan_key, jnp.asarray(t), fad_state, over)
+                    h_hat = None if perfect_csi else h_hat_t
+                batch = (None if block_batch_provider is not None
+                         else batch_provider(t))
+                params, opt_state, client_state, diag = round_step(
+                    params, opt_state, client_state, batch, h, h_hat, b, a,
+                    eta0, jnp.asarray(t), key)
             hist["round"].append(t)
             for k in DIAG_KEYS:
                 hist[k].append(float(diag[k]))
+            if recorder is not None:
+                # the python driver's 'chunk' is one round: one (or, under a
+                # time-varying channel, two) dispatches
+                recorder.on_chunk(
+                    chunk_i, [t], {k: np.asarray([hist[k][-1]])
+                                   for k in DIAG_KEYS},
+                    wall_time_s=time.perf_counter() - wt0,
+                    dispatches=2 if time_varying else 1,
+                    retraces=trace_deltas(tr0),
+                    rss_mb=obsprof.rss_mb())
             if eval_fn is not None and (t % eval_every == 0 or t == 1):
                 record_eval(params, t)
     else:
@@ -1586,23 +1648,35 @@ def run(cfg: FLConfig, state: FLState, grad_fn: GradFn,
         opt_state = jax.tree_util.tree_map(jnp.copy, opt_state)
         client_state = (None if client_state is None else
                         jax.tree_util.tree_map(jnp.copy, client_state))
-        for ts in _plan_chunks(t0, num_rounds,
-                               eval_every if eval_fn is not None else None,
-                               chunk_size):
-            if block_batch_provider is not None:
-                batches = None     # drawn per (round, K-block) in-scan
-            else:
-                batches = (chunk_batch_provider(ts) if chunk_batch_provider
-                           else _stack_batches(batch_provider, ts))
-            (params, opt_state, client_state, h, h_hat, b, a, fad_state,
-             chunk_hist) = run_chunk(
-                 params, opt_state, client_state, h, h_hat, b, a, eta0, key,
-                 chan_key, eff_gain, fad_state, over,
-                 jnp.asarray(ts, jnp.int32), batches)
-            chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
+        for chunk_i, ts in enumerate(_plan_chunks(
+                t0, num_rounds,
+                eval_every if eval_fn is not None else None, chunk_size)):
+            if recorder is not None:
+                tr0 = dict(TRACE_COUNTS)
+                wt0 = time.perf_counter()
+            with obsprof.annotate_chunk(chunk_i):
+                if block_batch_provider is not None:
+                    batches = None     # drawn per (round, K-block) in-scan
+                else:
+                    batches = (chunk_batch_provider(ts) if chunk_batch_provider
+                               else _stack_batches(batch_provider, ts))
+                (params, opt_state, client_state, h, h_hat, b, a, fad_state,
+                 chunk_hist) = run_chunk(
+                     params, opt_state, client_state, h, h_hat, b, a, eta0,
+                     key, chan_key, eff_gain, fad_state, over,
+                     jnp.asarray(ts, jnp.int32), batches)
+                chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
             hist["round"].extend(ts)
             for k in DIAG_KEYS:
                 hist[k].extend(np.asarray(chunk_hist[k]).astype(float).tolist())
+            if recorder is not None:
+                recorder.on_chunk(
+                    chunk_i, list(ts),
+                    {k: np.asarray(chunk_hist[k]) for k in DIAG_KEYS},
+                    wall_time_s=time.perf_counter() - wt0,
+                    dispatches=1,
+                    retraces=trace_deltas(tr0),
+                    rss_mb=obsprof.rss_mb())
             t_end = ts[-1]
             if eval_fn is not None and (t_end % eval_every == 0 or t_end == 1):
                 record_eval(params, t_end)
@@ -1641,7 +1715,9 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
                 eval_every: int = 10, *, chunk_size: int = 16,
                 chunk_batch_provider: Optional[
                     Callable[[Sequence[int]], Any]] = None,
-                shard: bool = True) -> Tuple[List[FLState], Dict[str, Any]]:
+                shard: bool = True,
+                recorder: Optional[Any] = None,
+                ) -> Tuple[List[FLState], Dict[str, Any]]:
     """Run E experiments as ONE compiled program: the vectorized twin of
     ``run(driver='scan')``.
 
@@ -1668,6 +1744,11 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
 
     The mesh backend is not batchable (its device axis IS the mesh); callers
     (``repro.fl.sweep``) fall back to sequential runs there.
+
+    ``recorder`` streams the batched run exactly like ``run``'s: per-chunk
+    ``chunk`` events, per-round ``round`` events whose diagnostic values are
+    [E] lists, and ``eval`` events with [E] metric lists — host-side only,
+    bitwise-invisible to the trajectory.
     """
     if len(cfgs) != len(states) or not cfgs:
         raise ValueError("need equal, nonzero numbers of configs and states")
@@ -1816,22 +1897,39 @@ def run_batched(cfgs: Sequence[FLConfig], states: Sequence[FLState],
         for mk in eval_keys:
             eval_chunks.setdefault(mk, []).append(per_exp[mk])
         hist["eval_round"].append(t)
+        if recorder is not None:
+            recorder.on_eval(t, {mk: [float(v) for v in per_exp[mk]]
+                                 for mk in eval_keys})
 
     run_chunk = _make_run_chunk_batched(sig, grad_fn, model_dim)
-    for ts in _plan_chunks(t0, num_rounds,
-                           eval_every if eval_fn is not None else None,
-                           chunk_size):
-        batches = (chunk_batch_provider(ts) if chunk_batch_provider
-                   else _stack_batches(batch_provider, ts))
-        (params, opt_state, client_state, h, h_hat, b, a, fad_state,
-         chunk_hist) = run_chunk(
-             params, opt_state, client_state, h, h_hat, b, a, eta0, keys,
-             chan_keys, eff_gain, fad_state, over,
-             jnp.asarray(ts, jnp.int32), batches)
-        chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
+    for chunk_i, ts in enumerate(_plan_chunks(
+            t0, num_rounds, eval_every if eval_fn is not None else None,
+            chunk_size)):
+        if recorder is not None:
+            tr0 = dict(TRACE_COUNTS)
+            wt0 = time.perf_counter()
+        with obsprof.annotate_chunk(chunk_i):
+            batches = (chunk_batch_provider(ts) if chunk_batch_provider
+                       else _stack_batches(batch_provider, ts))
+            (params, opt_state, client_state, h, h_hat, b, a, fad_state,
+             chunk_hist) = run_chunk(
+                 params, opt_state, client_state, h, h_hat, b, a, eta0, keys,
+                 chan_keys, eff_gain, fad_state, over,
+                 jnp.asarray(ts, jnp.int32), batches)
+            chunk_hist = jax.device_get(chunk_hist)   # ONE sync per chunk
         hist["round"].extend(ts)
         for k in DIAG_KEYS:
             diag_chunks[k].append(np.asarray(chunk_hist[k], np.float64))
+        if recorder is not None:
+            # [E, T] per-chunk diagnostics: on_chunk fans them out into one
+            # round event per t with [E] value lists
+            recorder.on_chunk(
+                chunk_i, list(ts),
+                {k: np.asarray(chunk_hist[k]) for k in DIAG_KEYS},
+                wall_time_s=time.perf_counter() - wt0,
+                dispatches=1,
+                retraces=trace_deltas(tr0),
+                rss_mb=obsprof.rss_mb())
         t_end = ts[-1]
         if eval_fn is not None and (t_end % eval_every == 0 or t_end == 1):
             record_eval(params, t_end)

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import store
 from repro.fed import runtime
 from repro.fl.spec import ExperimentSpec
@@ -46,7 +47,8 @@ class Experiment:
     ``FLConfig.device_mesh`` and tests/test_sharded_streaming.py).
     """
 
-    def __init__(self, spec: ExperimentSpec, task: Optional[Task] = None):
+    def __init__(self, spec: ExperimentSpec, task: Optional[Task] = None,
+                 recorder: Optional[obs.Recorder] = None):
         self.spec = spec
         self.cfg = spec.fl_config()
         # a caller that already built the task (the sweep engine's sequential
@@ -55,6 +57,9 @@ class Experiment:
         self.task: Optional[Task] = task
         self.state: Optional[runtime.FLState] = None
         self.history: Dict[str, List] = {}
+        # default flight-recorder sink for every run() (a per-call recorder
+        # overrides it); telemetry is trajectory-invisible, see repro.obs
+        self.recorder: Optional[obs.Recorder] = recorder
 
     # ------------------------------------------------------------------ setup
 
@@ -84,26 +89,72 @@ class Experiment:
     def run(self, num_rounds: int, *, driver: Optional[str] = None,
             chunk_size: Optional[int] = None,
             eval_every: Optional[int] = None,
-            evaluate: Optional[bool] = None) -> Dict[str, List]:
+            evaluate: Optional[bool] = None,
+            recorder: Optional[obs.Recorder] = None) -> Dict[str, List]:
         """Run ``num_rounds`` FL rounds and merge the produced history into
         ``self.history``.  Keyword overrides exist for benchmarking both
         drivers from one spec; experiments normally declare everything in
         the spec.  Returns this call's history (the increment, not the
-        accumulated ``self.history``)."""
+        accumulated ``self.history``).
+
+        ``recorder`` (or the constructor's default) streams the run live —
+        one manifest event, then chunk/round/eval events from the engine;
+        with ``REPRO_OBS_PROFILE`` set, the whole call is wrapped in a
+        ``jax.profiler`` trace.  Both are trajectory-invisible."""
         self._ensure_setup()
         ev = self.spec.eval
         enabled = ev.enabled if evaluate is None else evaluate
-        self.state, hist = runtime.run(
-            self.cfg, self.state, self.task.grad_fn,
-            self.task.batch_provider, num_rounds,
-            eval_fn=self.task.eval_fn if enabled else None,
-            eval_every=eval_every if eval_every is not None else ev.every,
-            driver=driver or self.spec.driver,
-            chunk_size=chunk_size or self.spec.chunk_size,
-            chunk_batch_provider=self.task.chunk_batch_provider)
+        rec = recorder if recorder is not None else self.recorder
+        if rec is not None:
+            rec.on_manifest(self.manifest())
+        handle = obs.profiling.start_profile()
+        try:
+            self.state, hist = runtime.run(
+                self.cfg, self.state, self.task.grad_fn,
+                self.task.batch_provider, num_rounds,
+                eval_fn=self.task.eval_fn if enabled else None,
+                eval_every=eval_every if eval_every is not None else ev.every,
+                driver=driver or self.spec.driver,
+                chunk_size=chunk_size or self.spec.chunk_size,
+                chunk_batch_provider=self.task.chunk_batch_provider,
+                recorder=rec)
+        finally:
+            obs.profiling.stop_profile(handle)
         for k, v in hist.items():
             self.history.setdefault(k, []).extend(v)
         return hist
+
+    # ---------------------------------------------------------- observability
+
+    def manifest(self) -> Dict[str, Any]:
+        """This experiment's run manifest: spec JSON, config hash,
+        structural signature, the current params digest, and the jax /
+        platform identity block (see :mod:`repro.obs.manifest`)."""
+        self._ensure_setup()
+        return obs.run_manifest(spec=self.spec, cfg=self.cfg,
+                                params=self.state.params,
+                                extra={"round": int(self.state.round)})
+
+    def dump_history(self, path: str) -> str:
+        """Write the accumulated ``self.history`` to ``path`` as the same
+        JSONL event stream a live :class:`repro.obs.JsonlRecorder` produces
+        (manifest line, then one ``round`` line per round and one ``eval``
+        line per eval boundary) — post-hoc telemetry for runs that did not
+        record live."""
+        self._ensure_setup()
+        diag_keys = [k for k in runtime.DIAG_KEYS if k in self.history]
+        eval_keys = [k for k in self.history
+                     if k not in ("round", "eval_round")
+                     and k not in runtime.DIAG_KEYS]
+        with obs.JsonlRecorder(path) as rec:
+            rec.on_manifest(self.manifest())
+            for j, t in enumerate(self.history.get("round", [])):
+                rec.on_round(int(t), {k: self.history[k][j]
+                                      for k in diag_keys})
+            for j, t in enumerate(self.history.get("eval_round", [])):
+                rec.on_eval(int(t), {k: self.history[k][j]
+                                     for k in eval_keys})
+        return path
 
     # ------------------------------------------------------------- properties
 

@@ -32,11 +32,14 @@ executables stay hot across groups and repeated sweeps.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.fed import runtime
 from repro.fl import clients
 from repro.fl.experiment import Experiment
@@ -201,6 +204,9 @@ class SweepResult:
     eval_rounds: List[int]
     history: Dict[str, np.ndarray]
     points: List[SweepPoint]
+    # per-point final-params digests in grid C-order (repro.obs.params_sha256
+    # of each trajectory's end state) — the sweep-level bitwise fingerprint
+    params_digests: Optional[List[str]] = None
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -238,6 +244,79 @@ class SweepResult:
             index.append(values.index(coords[name]))
         return int(np.ravel_multi_index(tuple(index), self.shape))
 
+    # ---------------------------------------------------------- observability
+
+    def params_sha256(self) -> Optional[str]:
+        """One combined digest of the whole grid's final params: sha-256
+        over the per-point digests in C-order (None when the run predates
+        digesting)."""
+        if not self.params_digests:
+            return None
+        h = hashlib.sha256()
+        for d in self.params_digests:
+            h.update(d.encode())
+        return h.hexdigest()
+
+    def curves(self, axis: str, metric: str, over: str = "seed",
+               ) -> Dict[str, Dict[str, Any]]:
+        """The figure benchmarks' curve payload for an (``axis`` x ``over``)
+        sweep: one entry per ``axis`` value with the eval rounds, the
+        ``metric`` mean across the ``over`` replicates, its std error band,
+        and the replicate count."""
+        mean, std = self.band(metric, over=over)
+        n_over = len(self.sweep.values(over))
+        out: Dict[str, Dict[str, Any]] = {}
+        for i, value in enumerate(self.sweep.values(axis)):
+            out[str(value)] = {
+                "round": list(self.eval_rounds),
+                metric: np.asarray(mean[i]).tolist(),
+                f"{metric}_std": np.asarray(std[i]).tolist(),
+                "seeds": n_over,
+            }
+        return out
+
+    def manifest(self) -> Dict[str, Any]:
+        """The sweep's run manifest: the base spec's identity block plus the
+        grid geometry and the combined final-params digest."""
+        return obs.run_manifest(
+            spec=self.sweep.base, params_digest=self.params_sha256(),
+            extra={
+                "num_rounds": int(self.num_rounds),
+                "sweep_axes": {name: [str(v) for v in self.sweep.values(name)]
+                               for name in self.sweep.names},
+                "sweep_shape": list(self.shape),
+                "axis_classification": self.sweep.classification(),
+            })
+
+    def dump(self, path: str, over: Optional[str] = "seed") -> str:
+        """Write the full result as one self-describing JSON file: manifest,
+        grid geometry, per-point histories, and — when ``over`` names a swept
+        axis — the ``band()`` mean/std summaries for every history key.
+        This is the one sweep-serialization path (the figure benchmarks'
+        hand-rolled payload assembly routes through ``curves``/here)."""
+        payload: Dict[str, Any] = {
+            "manifest": self.manifest(),
+            "num_rounds": int(self.num_rounds),
+            "rounds": [int(t) for t in self.rounds],
+            "eval_rounds": [int(t) for t in self.eval_rounds],
+            "axes": {name: [str(v) for v in self.sweep.values(name)]
+                     for name in self.sweep.names},
+            "shape": list(self.shape),
+            "history": {k: np.asarray(v).tolist()
+                        for k, v in self.history.items()},
+        }
+        if self.params_digests:
+            payload["params_digests"] = list(self.params_digests)
+        if over is not None and over in self.sweep.names:
+            payload["bands"] = {
+                k: {"over": over,
+                    "mean": self.band(k, over=over)[0].tolist(),
+                    "std": self.band(k, over=over)[1].tolist()}
+                for k in self.history}
+        with open(path, "w") as f:
+            json.dump(payload, f, default=str)
+        return path
+
 
 def _structural_signature(spec: ExperimentSpec):
     """Hashable key under which grid points may share one compiled batched
@@ -247,28 +326,32 @@ def _structural_signature(spec: ExperimentSpec):
             spec.model)
 
 
-def _run_group_sequential(specs, task, num_rounds, evaluate, eval_every):
+def _run_group_sequential(specs, task, num_rounds, evaluate, eval_every,
+                          recorder=None):
     """Per-point fallback (mesh backend / python driver, or
     ``vectorized=False`` — the benchmark's sequential baseline): N truly
     independent ``Experiment.run`` trajectories (sharing the group's cached
-    ``Task``) assembled into the batched history layout."""
-    rows = []
+    ``Task``) assembled into the batched history layout.  Returns
+    ``(hist, digests)`` — the stacked history plus one final-params digest
+    per point."""
+    rows, digests = [], []
     for spec in specs:
         e = Experiment(spec, task=task)
         rows.append(e.run(num_rounds, evaluate=evaluate,
-                          eval_every=eval_every))
+                          eval_every=eval_every, recorder=recorder))
+        digests.append(obs.params_sha256(e.state.params))
     out: Dict[str, Any] = {"round": rows[0]["round"],
                            "eval_round": rows[0]["eval_round"]}
     for key in rows[0]:
         if key not in out:
             out[key] = np.stack([np.asarray(r[key], np.float64)
                                  for r in rows])
-    return out
+    return out, digests
 
 
 def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
-              shard: bool = True,
-              evaluate: Optional[bool] = None) -> SweepResult:
+              shard: bool = True, evaluate: Optional[bool] = None,
+              recorder: Optional[obs.Recorder] = None) -> SweepResult:
     """Run every grid point of ``sweep`` for ``num_rounds`` rounds.
 
     Points are grouped by structural signature; each group runs as ONE
@@ -284,6 +367,10 @@ def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
     the enable switch) and is identical for every point, so histories align
     across the grid.  All groups must produce the same eval-metric key set —
     a sweep spanning tasks with different metrics should be split.
+
+    ``recorder`` streams every group's engine events through one shared
+    sink (manifest emitted once up front); the result's ``params_digests``
+    carry each point's final-params fingerprint regardless.
     """
     pts = sweep.points()
     base = sweep.base
@@ -296,7 +383,17 @@ def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
     for i, pt in enumerate(pts):
         groups.setdefault(_structural_signature(pt.spec), []).append(i)
 
+    if recorder is not None:
+        # the grid's identity block up front (per-point digests land on the
+        # SweepResult once the trajectories exist)
+        recorder.on_manifest(obs.run_manifest(spec=base, extra={
+            "num_rounds": int(num_rounds),
+            "sweep_axes": {name: [str(v) for v in sweep.values(name)]
+                           for name in sweep.names},
+            "sweep_shape": list(sweep.shape)}))
+
     flat: Dict[str, np.ndarray] = {}
+    digests: List[Optional[str]] = [None] * len(pts)
     rounds: Optional[List[int]] = None
     eval_rounds: Optional[List[int]] = None
     metric_keys: Optional[frozenset] = None
@@ -316,10 +413,15 @@ def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
                 cfgs, states, task.grad_fn, task.batch_provider, num_rounds,
                 eval_fn=task.eval_fn if enabled else None,
                 eval_every=eval_every, chunk_size=base.chunk_size,
-                chunk_batch_provider=task.chunk_batch_provider, shard=shard)
+                chunk_batch_provider=task.chunk_batch_provider, shard=shard,
+                recorder=recorder)
+            gdigests = [obs.params_sha256(s.params) for s in states]
         else:
-            hist = _run_group_sequential(gspecs, task, num_rounds, enabled,
-                                         eval_every)
+            hist, gdigests = _run_group_sequential(
+                gspecs, task, num_rounds, enabled, eval_every,
+                recorder=recorder)
+        for i, d in zip(idxs, gdigests):
+            digests[i] = d
         keys = frozenset(k for k in hist if k not in ("round", "eval_round"))
         if rounds is None:
             rounds, eval_rounds = list(hist["round"]), list(hist["eval_round"])
@@ -337,4 +439,5 @@ def run_sweep(sweep: SweepSpec, num_rounds: int, *, vectorized: bool = True,
                 flat[key] = buf
             buf[idxs] = arr
     return SweepResult(sweep=sweep, num_rounds=num_rounds, rounds=rounds,
-                       eval_rounds=eval_rounds, history=flat, points=pts)
+                       eval_rounds=eval_rounds, history=flat, points=pts,
+                       params_digests=digests)

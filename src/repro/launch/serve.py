@@ -161,3 +161,56 @@ def build_decode_step(cfg: ModelConfig, mesh, *, context_parallel: bool = False,
         return ps, cs, bs
 
     return decode_step, in_shardings_fn
+
+
+# ---------------------------------------------------------------------------
+# Live metrics (PR 10): a minimal pull endpoint over the in-memory recorder
+
+
+def serve_metrics(recorder, host: str = "127.0.0.1", port: int = 0):
+    """Serve a ``MemoryRecorder``'s latest snapshot as JSON over HTTP.
+
+    ``GET /metrics`` (also ``/`` and ``/metrics/latest``) returns
+    ``recorder.latest()`` — event count plus the most recent manifest /
+    round / eval / chunk events — so a long OTA-FL run driven with
+    ``Experiment.run(recorder=...)`` can be watched from a second terminal:
+
+        rec = obs.make("memory")
+        server = serve_metrics(rec)          # port=0 -> OS-assigned
+        host, port = server.server_address
+        # ... e.run(n, recorder=rec) in the main thread ...
+        # curl http://host:port/metrics
+
+    The server runs ``serve_forever`` on a daemon thread and is returned to
+    the caller (read ``server.server_address`` for the bound port, call
+    ``server.shutdown()`` to stop).  Reads are snapshot-cheap: the handler
+    only serializes the recorder's latest-event dict, never the full log,
+    so polling cannot grow with run length.
+    """
+    import json
+    import threading
+    from http.server import BaseHTTPRequestHandler, HTTPServer
+
+    class _Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.rstrip("/") not in ("", "/metrics",
+                                             "/metrics/latest"):
+                self.send_response(404)
+                self.end_headers()
+                return
+            snap = recorder.latest() if hasattr(recorder, "latest") else {}
+            body = json.dumps(snap, default=str).encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):    # keep the run's stdout clean
+            pass
+
+    server = HTTPServer((host, port), _Handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True,
+                              name="repro-obs-metrics")
+    thread.start()
+    return server

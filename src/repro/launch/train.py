@@ -135,6 +135,47 @@ def build_train_step(cfg: ModelConfig, mesh, *, scheme: str = "normalized",
     return train_step, in_shardings_fn
 
 
+def instrument_train_step(step_fn, recorder, *, manifest=None):
+    """Wrap a built ``train_step`` with host-side flight recording.
+
+    Returns a drop-in replacement with the same signature.  Each call is
+    timed, annotated for the profiler (``repro.obs.profiling.annotate_chunk``)
+    and emitted to ``recorder`` as one chunk + one round event carrying the
+    step's metrics as host floats.  Recording happens strictly AFTER the
+    step returns, on transferred copies — params/opt_state pass through
+    untouched, so the trajectory is bitwise-identical with or without the
+    wrapper.  The metric transfer does synchronize the host with the device
+    each step (that is what makes the numbers live); leave the wrapper off
+    for pure-throughput runs.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.obs import profiling as obsprof
+
+    if manifest is not None:
+        recorder.on_manifest(manifest)
+    counter = [0]
+
+    def instrumented(params, opt_state, batch, rng):
+        i = counter[0]
+        counter[0] += 1
+        t0 = time.perf_counter()
+        with obsprof.annotate_chunk(i):
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 rng)
+            host = {k: np.asarray(jax.device_get(v),
+                                  np.float64).reshape(-1)[:1]
+                    for k, v in metrics.items()}
+        recorder.on_chunk(i, [i], host,
+                          wall_time_s=time.perf_counter() - t0,
+                          dispatches=1, rss_mb=obsprof.rss_mb())
+        return params, opt_state, metrics
+
+    return instrumented
+
+
 def make_batch_from_specs(specs, cfg: ModelConfig):
     """Turn concrete model inputs (``configs.registry.input_specs`` layout)
     into a loss-ready batch dict.

@@ -21,6 +21,7 @@ from . import rules_trace      # noqa: F401  TL001-TL003
 from . import rules_pallas     # noqa: F401  TL004
 from . import rules_contracts  # noqa: F401  TL005-TL006
 from . import rules_buffers    # noqa: F401  TL007-TL008
+from . import rules_obs        # noqa: F401  TL009
 
 from .engine import (apply_fixes, build_project, lint, render_human,  # noqa: F401
                      render_json, self_test)

@@ -1,0 +1,70 @@
+"""TL009: the flight recorder stays out of traced contexts.
+
+``repro.obs`` is host-side by contract — recorders only ever see values the
+engine already transferred at a chunk boundary, which is what makes
+telemetry trajectory-invisible (recorder on vs off is bitwise-identical;
+see the parity suite in tests/test_obs.py).  An ``obs`` call inside a scan
+body / jitted function would at best concretize tracers (crash) and at
+worst silently bake one trace-time sample into the compiled program while
+adding host syncs to every round.  This rule enforces the static half of
+the contract: no ``repro.obs`` API call and no recorder-method call may
+appear inside a traced context.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .base import Finding, Rule, register
+from .context import _dotted, find_traced
+
+# a dotted call with any of these segments is an obs-API call: obs.make(...),
+# repro.obs.params_sha256(...), obs.profiling.rss_mb(...)
+_OBS_SEGMENTS = {"obs", "obsprof"}
+
+# recorder-protocol methods; calling one on a conventionally-named recorder
+# variable inside a traced body is a finding even without the obs module in
+# scope (runtime threads recorders through as parameters)
+_RECORDER_METHODS = {"emit", "flush", "close", "latest", "select",
+                     "on_manifest", "on_round", "on_chunk", "on_eval"}
+_RECORDER_NAMES = {"recorder", "rec", "sink"}
+
+
+def _tl009(project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        info = find_traced(mod.tree)
+        seen = set()
+        bodies: List[ast.AST] = [info.functions[n] for n in sorted(info.traced)
+                                 if n in info.functions]
+        bodies.extend(info.lambdas)
+        for body in bodies:
+            for node in ast.walk(body):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = _dotted(node.func)
+                msg = None
+                if fn and _OBS_SEGMENTS.intersection(fn.split(".")):
+                    msg = (f"`{fn}` (repro.obs) called inside a traced "
+                           "context; telemetry is host-side only — emit at "
+                           "the chunk boundary after the dispatch returns")
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in _RECORDER_METHODS
+                      and _dotted(node.func.value).rsplit(".", 1)[-1]
+                      in _RECORDER_NAMES):
+                    msg = (f"recorder method `.{node.func.attr}()` called "
+                           "inside a traced context; recorders only consume "
+                           "host values at chunk boundaries")
+                if msg is not None and (node.lineno, msg) not in seen:
+                    seen.add((node.lineno, msg))
+                    findings.append(Finding("TL009", mod.relpath,
+                                            node.lineno, msg))
+    return findings
+
+
+register(Rule(
+    id="TL009", name="obs-in-trace",
+    summary="repro.obs / recorder call inside a traced context",
+    contract="flight-recorder trajectory invisibility (PR 10, tests/"
+             "test_obs.py parity suite)",
+    check=_tl009))

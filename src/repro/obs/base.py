@@ -1,0 +1,139 @@
+"""Recorder registry and event model for the flight recorder.
+
+Mirrors the ``core.schemes`` / ``channels.base`` register pattern: every
+telemetry sink is one factory in a module-level registry, looked up by name
+(``make("jsonl", path=...)``), so engines and benchmarks stay agnostic of
+where events land.
+
+The hard contract every sink inherits: telemetry is **trajectory-invisible**.
+A :class:`Recorder` only ever sees host-side values that the engine already
+transferred at a chunk boundary (``jax.device_get`` of the per-chunk
+diagnostics, eval metrics, wall-clock) — it never touches device buffers,
+PRNG keys, or traced values, so recorder on vs off (and any sink choice) is
+bitwise-identical on params and history.  tracelint TL009 enforces the
+static half of this contract: no ``obs`` call may appear inside a traced
+context.
+
+Event schema (one JSON-able dict per event; the JSONL sink writes exactly
+one line per event, and ``Experiment.dump_history`` reproduces the same
+``round``/``eval`` lines post-hoc):
+
+* ``{"event": "manifest", "manifest": {...}}`` — run identity (see
+  :mod:`repro.obs.manifest`); emitted once at run start.
+* ``{"event": "round", "round": t, "<diag>": v, ...}`` — one FL round's
+  ``DIAG_KEYS`` values; ``v`` is a float (``run``) or an [E] list
+  (``run_batched``: one lane per experiment).
+* ``{"event": "eval", "round": t, "<metric>": v, ...}`` — eval metrics at an
+  eval boundary, same scalar/list convention.
+* ``{"event": "chunk", "chunk": i, "round_start": .., "round_end": ..,
+  "wall_time_s": .., "dispatches": .., "retraces": {kind: delta},
+  "rss_mb": ..}`` — per-chunk engine attribution: wall clock around the
+  device dispatch, dispatch count, re-trace deltas per
+  ``runtime.TRACE_KINDS`` builder, and the host RSS sample.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+
+def _round_value(values: Any, j: int) -> Any:
+    """The round-``j`` slice of one diagnostic: float for a [T] series, an
+    [E] list for a batched [E, T] series."""
+    arr = np.asarray(values)
+    if arr.ndim <= 1:
+        return float(arr[j]) if arr.ndim == 1 else float(arr)
+    return [float(x) for x in arr[:, j]]
+
+
+def _scalar_or_list(v: Any) -> Any:
+    arr = np.asarray(v)
+    return float(arr) if arr.ndim == 0 else [float(x) for x in arr]
+
+
+class Recorder:
+    """Base telemetry sink: subclasses implement :meth:`emit` (one host-side
+    event dict); the ``on_*`` helpers build the documented event schema so
+    every sink agrees on it.  Recorders are context managers (``close`` on
+    exit) and safe to reuse across runs — events just keep appending."""
+
+    name = "base"
+
+    # ------------------------------------------------------------------ sink
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Flush/release the sink (no-op by default)."""
+
+    def __enter__(self) -> "Recorder":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------------- events
+
+    def on_manifest(self, manifest: Mapping[str, Any]) -> None:
+        self.emit({"event": "manifest", "manifest": dict(manifest)})
+
+    def on_round(self, t: int, diag_row: Mapping[str, Any]) -> None:
+        event: Dict[str, Any] = {"event": "round", "round": int(t)}
+        for k, v in diag_row.items():
+            event[k] = _scalar_or_list(v)
+        self.emit(event)
+
+    def on_chunk(self, index: int, ts: Sequence[int],
+                 diag: Mapping[str, Any], *,
+                 wall_time_s: Optional[float] = None, dispatches: int = 1,
+                 retraces: Optional[Mapping[str, int]] = None,
+                 rss_mb: Optional[float] = None) -> None:
+        """One engine chunk: the chunk-attribution event followed by one
+        ``round`` event per round in ``ts`` (``diag`` maps each diagnostic
+        to its [T] — or batched [E, T] — chunk series)."""
+        self.emit({
+            "event": "chunk", "chunk": int(index),
+            "round_start": int(ts[0]), "round_end": int(ts[-1]),
+            "wall_time_s": wall_time_s, "dispatches": int(dispatches),
+            "retraces": dict(retraces or {}), "rss_mb": rss_mb,
+        })
+        for j, t in enumerate(ts):
+            self.on_round(int(t), {k: _round_value(v, j)
+                                   for k, v in diag.items()})
+
+    def on_eval(self, t: int, metrics: Mapping[str, Any]) -> None:
+        event: Dict[str, Any] = {"event": "eval", "round": int(t)}
+        for k, v in metrics.items():
+            event[k] = _scalar_or_list(v)
+        self.emit(event)
+
+
+# ---------------------------------------------------------------------------
+# registry (same idiom as core.schemes / channels.base)
+
+_REGISTRY: Dict[str, Callable[..., Recorder]] = {}
+
+
+def register(name: str, factory: Callable[..., Recorder]) -> None:
+    if not callable(factory):
+        raise TypeError(f"recorder factory for {name!r} must be callable")
+    _REGISTRY[name] = factory
+
+
+def get(name: str) -> Callable[..., Recorder]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(names())
+        raise KeyError(f"unknown recorder {name!r}; known: {known}")
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make(name: str, **kwargs) -> Recorder:
+    """Instantiate a registered sink: ``make("jsonl", path="run.jsonl")``."""
+    return get(name)(**kwargs)

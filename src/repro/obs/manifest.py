@@ -1,0 +1,124 @@
+"""Run manifests: the self-describing identity block every ``results/``
+file (and recorder stream) carries.
+
+A manifest answers "what produced these numbers" without re-reading the
+producing script: the full spec as JSON, a *structural signature* (the
+sha-256 of the runtime's ``structural_config`` collapse — two runs with
+equal signatures compiled the same traced program), a params digest (the
+bitwise trajectory fingerprint the parity suites pin), the config hash, and
+the jax/platform versions.  ``benchmarks/compare.py --manifest`` fails a
+comparison whose baseline was produced under a different structural
+signature — a changed traced program is a different workload, not a noisy
+rerun.
+
+Imports of :mod:`repro.fed.runtime` stay function-local: the runtime
+imports ``repro.obs`` for its profiling hooks, and manifests are built on
+the host path only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import platform
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+MANIFEST_VERSION = 1
+
+
+def _sanitize(obj: Any) -> Any:
+    """JSON-able view of nested dataclasses/tuples/numpy scalars."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _sanitize(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, dict):
+        return {str(k): _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize(v) for v in obj]
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def spec_json(spec: Any) -> Dict[str, Any]:
+    """The spec (an ``ExperimentSpec`` or a bare ``FLConfig``) as plain
+    JSON-able nesting."""
+    return _sanitize(spec)
+
+
+def config_sha256(spec: Any) -> str:
+    """The tier-0 config hash: sha-256 of the canonical (sorted-key) JSON
+    dump of the spec.  Equal hashes mean equal declared experiments."""
+    blob = json.dumps(spec_json(spec), sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def params_sha256(params: Any) -> str:
+    """Bitwise digest of a params pytree: dtype/shape-tagged raw bytes of
+    every leaf in tree-flatten order.  The parity suites pin recorder-on vs
+    recorder-off trajectories on exactly this digest."""
+    import jax
+
+    h = hashlib.sha256()
+    leaves = jax.tree_util.tree_flatten(params)[0]
+    for leaf in leaves:
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def structural_signature(cfg: Any) -> str:
+    """sha-256 of the runtime's structural collapse of ``cfg``: equal
+    signatures <=> the same traced program (the sweep engine's sub-batch
+    grouping key, hashed so manifests can carry and compare it)."""
+    from repro.fed import runtime
+
+    return hashlib.sha256(
+        repr(runtime.structural_config(cfg)).encode()).hexdigest()
+
+
+def run_manifest(spec: Any = None, cfg: Any = None, params: Any = None, *,
+                 params_digest: Optional[str] = None,
+                 extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Assemble one manifest dict.
+
+    ``spec`` contributes the spec JSON + config hash (and, via
+    ``spec.fl_config()``, the structural signature when ``cfg`` is not given
+    explicitly); ``params`` (or a precomputed ``params_digest``) contributes
+    the trajectory fingerprint; ``extra`` rides along verbatim (round
+    counters, sweep axes, benchmark knobs).
+    """
+    import jax
+
+    out: Dict[str, Any] = {
+        "manifest_version": MANIFEST_VERSION,
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "backend": jax.default_backend(),
+        "local_devices": jax.local_device_count(),
+    }
+    if spec is not None:
+        out["spec"] = spec_json(spec)
+        out["config_sha256"] = config_sha256(spec)
+        if cfg is None and hasattr(spec, "fl_config"):
+            cfg = spec.fl_config()
+    if cfg is not None:
+        if spec is None:
+            out["spec"] = spec_json(cfg)
+            out["config_sha256"] = config_sha256(cfg)
+        out["structural_signature"] = structural_signature(cfg)
+    if params is not None:
+        params_digest = params_sha256(params)
+    if params_digest is not None:
+        out["params_sha256"] = params_digest
+    if extra:
+        out.update(extra)
+    return out

@@ -1,0 +1,99 @@
+"""Profiling hooks: env-gated ``jax.profiler`` traces and /proc RSS
+sampling.
+
+Everything here is host-side and inert by default: with ``REPRO_OBS_PROFILE``
+unset, ``start_profile`` returns ``None`` and ``annotate_chunk`` hands back a
+shared null context, so the engine's chunk loop pays nothing.  Setting the
+variable to a directory turns every ``Experiment.run`` into a profiler trace
+(``start_trace``/``stop_trace`` around the run, one ``StepTraceAnnotation``
+per engine chunk) viewable in TensorBoard/Perfetto.
+
+The RSS readers are the ``benchmarks/kscale_case.py`` /proc pattern promoted
+to a library: ``VmHWM`` (peak) is a property of the current mm — exec-fresh,
+unlike the fork-inherited ``ru_maxrss`` — and ``VmRSS`` (current) is the
+per-chunk sample the recorder's ``chunk`` events carry.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import resource
+from typing import Optional
+
+PROFILE_ENV = "REPRO_OBS_PROFILE"
+
+_NULL_CTX = contextlib.nullcontext()
+# one trace at a time: nested Experiment.run calls (sweep fallbacks) must
+# not try to re-enter jax.profiler.start_trace
+_ACTIVE = False
+
+
+def profile_dir() -> Optional[str]:
+    """The profiler output directory, or None when profiling is off."""
+    return os.environ.get(PROFILE_ENV) or None
+
+
+def enabled() -> bool:
+    return profile_dir() is not None
+
+
+def _proc_status_mb(field: str) -> Optional[float]:
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith(field + ":"):
+                    return float(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    return None
+
+
+def rss_mb() -> Optional[float]:
+    """Current resident set (VmRSS) in MB; None off-/proc platforms."""
+    return _proc_status_mb("VmRSS")
+
+
+def peak_rss_mb() -> float:
+    """This process's peak resident set in MB: exec-fresh ``VmHWM`` when
+    /proc exists (fork-inherited ``ru_maxrss`` would report the launcher's
+    high-water mark), ``ru_maxrss`` as the non-/proc fallback."""
+    hwm = _proc_status_mb("VmHWM")
+    if hwm is not None:
+        return hwm
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def start_profile() -> Optional[str]:
+    """Begin a ``jax.profiler`` trace when ``REPRO_OBS_PROFILE`` names a
+    directory (and no trace is already active).  Returns the directory as
+    the handle for :func:`stop_profile`, else None."""
+    global _ACTIVE
+    out = profile_dir()
+    if out is None or _ACTIVE:
+        return None
+    import jax
+
+    jax.profiler.start_trace(out)
+    _ACTIVE = True
+    return out
+
+
+def stop_profile(handle: Optional[str]) -> None:
+    """End the trace started by :func:`start_profile` (no-op on None)."""
+    global _ACTIVE
+    if handle is None:
+        return
+    import jax
+
+    jax.profiler.stop_trace()
+    _ACTIVE = False
+
+
+def annotate_chunk(index: int):
+    """A ``StepTraceAnnotation`` naming one engine chunk inside an active
+    profile; the shared null context when profiling is off."""
+    if not enabled():
+        return _NULL_CTX
+    import jax
+
+    return jax.profiler.StepTraceAnnotation("obs_chunk", step_num=int(index))

@@ -1,0 +1,28 @@
+"""TL009 known-bad: flight-recorder calls inside traced contexts."""
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+
+
+@jax.jit
+def _jitted_update(params, grads, recorder):
+    norm = jnp.sqrt(jnp.sum(jnp.square(grads)))
+    recorder.on_round(0, {"grad_norm_mean": norm})   # BAD: tracer -> sink
+    return params - 0.01 * grads
+
+
+@jax.jit
+def _jitted_make(x):
+    rec = obs.make("memory")                         # BAD: obs API in trace
+    rec.emit({"event": "round", "x": x})             # BAD: recorder method
+    return x * 2
+
+
+def _scan_driver(xs, rec):
+    def body(carry, x):
+        rec.emit({"event": "round", "x": x})         # BAD: scan body emit
+        return carry + x, None
+
+    out, _ = jax.lax.scan(body, jnp.zeros(()), xs)
+    return out

@@ -20,7 +20,7 @@ from repro.lint import engine
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 CORPUS = ROOT / "tests" / "lint_corpus"
 RULE_IDS = ("TL001", "TL002", "TL003", "TL004", "TL005", "TL006", "TL007",
-            "TL008")
+            "TL008", "TL009")
 
 
 def lint_file(path, only=None):
@@ -31,8 +31,8 @@ def lint_file(path, only=None):
 
 
 class TestRegistry:
-    def test_at_least_eight_rules(self):
-        assert len(lint.names()) >= 8
+    def test_at_least_nine_rules(self):
+        assert len(lint.names()) >= 9
 
     def test_ids_and_lookup(self):
         for rid in RULE_IDS:
@@ -165,7 +165,7 @@ class TestRepoClean:
         project, active, suppressed = engine.lint(["src"], root=ROOT)
         payload = json.loads(engine.render_json(active, suppressed,
                                                 len(project.modules)))
-        assert len(payload["rules"]) >= 8
+        assert len(payload["rules"]) >= 9
         assert payload["findings"] == []
         assert {"id", "name", "summary", "contract", "fixable"} <= set(
             payload["rules"][0])
